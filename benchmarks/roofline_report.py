@@ -1,0 +1,116 @@
+"""Render dryrun_results.jsonl into the EXPERIMENTS.md roofline tables.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [results.jsonl]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from collections import Counter
+
+
+def scan_trips(arch: str) -> int:
+    """XLA cost_analysis counts a lax.scan (while-loop) body ONCE
+    (verified empirically: flops(L=2) ~= flops(L=8) for scanned stacks).
+    The dominant cost of every LM here lives inside the layer scan, so we
+    correct all three roofline terms by the scanned-layer trip count.
+    FCN3's processor blocks are a Python loop (unrolled HLO): trips = 1.
+    This slightly over-corrects the non-scanned prologue (embeddings,
+    lm_head, loss) -- typically ~1 layer's worth -- making the corrected
+    compute/memory terms mild upper bounds.
+    """
+    if arch == "fcn3":
+        return 1
+    from repro.configs import archs as archlib
+    cfg = archlib.get_arch(arch)
+    trips = cfg.n_layers
+    if cfg.family == "audio":
+        trips += cfg.n_encoder_layers
+    return trips
+
+
+def corrected(r: dict) -> dict:
+    t = scan_trips(r["arch"])
+    out = dict(r)
+    for k in ("flops_per_device", "hbm_bytes_per_device",
+              "collective_bytes_per_device"):
+        out[k] = r[k] * t
+    out["t_compute_s"] = r["t_compute_s"] * t
+    out["t_memory_s"] = r["t_memory_s"] * t
+    out["t_collective_s"] = r["t_collective_s"] * t
+    out["useful_flop_ratio"] = (r["useful_flop_ratio"] / t if t else 0.0)
+    terms = {"compute": out["t_compute_s"], "memory": out["t_memory_s"],
+             "collective": out["t_collective_s"]}
+    out["bottleneck"] = max(terms, key=terms.get)
+    step = max(terms.values())
+    out["mfu_bound"] = (r["model_flops"] / (step * 197e12 * r["chips"])
+                        if step else 0.0)
+    out["scan_trips"] = t
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def fmt_b(x: float) -> str:
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x / div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.jsonl"
+    rows = [corrected(json.loads(l)) for l in open(path)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+    print("### Single-pod (16x16 = 256 chips) baselines\n")
+    print("(terms are scan-trip-corrected; see ``scan_trips`` docstring)\n")
+    print("| arch | shape | t_comp | t_mem | t_coll | bottleneck | "
+          "useful-FLOP | MFU bound | peak mem/dev | compile |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["mesh"] != "16x16":
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {fmt_s(r['t_compute_s'])} | "
+              f"{fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} | "
+              f"**{r['bottleneck']}** | {r['useful_flop_ratio']:.3f} | "
+              f"{r['mfu_bound'] * 100:.2f}% | "
+              f"{fmt_b(r['peak_memory_per_device'])} | {r['compile_s']}s |")
+
+    print("\n### Multi-pod (2x16x16 = 512 chips) — compile proof + deltas\n")
+    print("| arch | shape | t_comp | t_mem | t_coll | bottleneck | "
+          "coll bytes/dev |")
+    print("|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["mesh"] != "2x16x16":
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {fmt_s(r['t_compute_s'])} | "
+              f"{fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} | "
+              f"{r['bottleneck']} | "
+              f"{fmt_b(r['collective_bytes_per_device'])} |")
+
+    single = [r for r in rows if r["mesh"] == "16x16"]
+    c = Counter(r["bottleneck"] for r in single)
+    print(f"\nBottleneck histogram (single-pod, {len(single)} cases): "
+          f"{dict(c)}")
+    worst = sorted(single, key=lambda r: r["mfu_bound"])[:5]
+    print("\nLowest MFU-bound (hillclimb candidates):")
+    for r in worst:
+        print(f"  {r['arch']}/{r['shape']}: mfu_bound="
+              f"{r['mfu_bound'] * 100:.3f}% bottleneck={r['bottleneck']}")
+    coll = sorted(single, key=lambda r: -r["t_collective_s"])[:5]
+    print("\nMost collective-bound:")
+    for r in coll:
+        print(f"  {r['arch']}/{r['shape']}: t_coll="
+              f"{fmt_s(r['t_collective_s'])} ({r['bottleneck']})")
+
+
+if __name__ == "__main__":
+    main()

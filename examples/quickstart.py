@@ -1,0 +1,80 @@
+"""Quickstart: train a miniature FourCastNet 3 end-to-end on CPU.
+
+Demonstrates the public API surface:
+  * config -> model -> buffers -> calibrated init        (paper C)
+  * spherical diffusion noise conditioning               (paper B.7)
+  * ensemble training with the nodal+spectral CRPS loss  (paper E.1)
+  * an autoregressive ensemble forecast with in-situ scores
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import fcn3 as fcn3cfg
+from repro.core.fcn3 import FCN3
+from repro.data import era5_synthetic as dlib
+from repro.evaluation import metrics
+from repro.train import trainer as trlib
+
+
+def main() -> None:
+    # 1. Model: a reduced FCN3 (same architecture family as the paper's
+    #    710M-parameter production model, Table 2).
+    cfg = fcn3cfg.fcn3_smoke()
+    model = FCN3(cfg)
+    buffers = model.make_buffers()
+
+    # 2. Data: the deterministic spectrally shaped ERA5 surrogate.
+    ds = dlib.SyntheticERA5(cfg)
+    loader = iter(dlib.Loader(ds, global_batch=1, rollout=1))
+    batch = next(loader)
+
+    # 3. Calibrated init (paper C.6: variance-preserving, no LayerNorm).
+    cond0 = jnp.concatenate(
+        [batch["aux"][:, 0],
+         model.sample_noise(jax.random.PRNGKey(1), (1,))], axis=1)
+    params = model.init_calibrated(jax.random.PRNGKey(0), batch["state"],
+                                   cond0, buffers)
+    print(f"FCN3 ({model.param_count(params):,} params), "
+          f"grid {cfg.nlat}x{cfg.nlon} -> latent "
+          f"{cfg.latent_nlat}x{cfg.latent_nlon}")
+
+    # 4. A few CRPS ensemble training steps (pre-training stage 1 recipe).
+    tcfg = trlib.TrainConfig(ensemble_size=2, rollout_steps=1, lr=1e-3)
+    tr = trlib.EnsembleTrainer(model, tcfg,
+                               fcn3cfg.channel_weights(cfg.n_levels))
+    opt_state = tr.optimizer.init(params)
+    step = jax.jit(tr.make_train_step(buffers))
+    for i in range(5):
+        batch = next(loader)
+        params, opt_state, aux = step(params, opt_state, batch,
+                                      jax.random.PRNGKey(i))
+        print(f"step {i}: loss={float(aux['loss']):.4f} "
+              f"(nodal={float(aux['nodal_0']):.4f}, "
+              f"spectral={float(aux['spectral_0']):.4f})")
+
+    # 5. 4-member, 4-step ensemble forecast with in-situ scoring.
+    aw = jnp.asarray(ds.grid.area_weights_2d(), jnp.float32)
+    state = jnp.broadcast_to(ds.state(999), (4,) + ds.state(999).shape)
+    nbufs = model.noise.buffers()
+    z_hat = model.noise.init_state(jax.random.PRNGKey(2), (4,), nbufs)
+    for lead in range(4):
+        z = model.noise.to_grid(z_hat, nbufs)
+        aux_f = jnp.broadcast_to(jnp.asarray(ds.aux_fields(6.0 * lead)),
+                                 (4, cfg.n_aux, cfg.nlat, cfg.nlon))
+        cond = jnp.concatenate([aux_f, z], axis=1)
+        state = jax.vmap(lambda s, c: model.apply(params, buffers, s, c)
+                         )(state, cond)
+        truth = ds.state(999, lead + 1)
+        print(f"lead {(lead + 1) * 6}h: CRPS="
+              f"{float(metrics.crps(state, truth, aw).mean()):.4f} "
+              f"SSR={float(metrics.spread_skill_ratio(state, truth, aw).mean()):.3f}")
+        z_hat = model.noise.step(jax.random.fold_in(jax.random.PRNGKey(2),
+                                                    lead), z_hat, nbufs)
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Case study: ensemble spread around an intense synthetic cyclone.
+
+Mirrors the paper's storm-Dennis case study (Fig. 4): initialize from a
+state containing a strong vortex, run an ensemble forecast, and inspect
+(a) per-member wind-speed maxima (different members = different scenarios),
+(b) the angular power spectral density of the forecast vs truth -- the
+paper's headline result is that FCN3 keeps realistic spectra at long leads.
+
+Run:  PYTHONPATH=src python examples/storm_case_study.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import fcn3 as fcn3cfg
+from repro.core.fcn3 import FCN3
+from repro.data import era5_synthetic as dlib
+from repro.evaluation import metrics
+
+
+def add_vortex(state: jnp.ndarray, grid, lat0=0.9, lon0=2.0,
+               radius=0.25, amp=4.0) -> jnp.ndarray:
+    """Superimpose a cyclonic anomaly on the u/v wind channels."""
+    th = jnp.asarray(grid.colat)[:, None]
+    ph = jnp.asarray(grid.lons)[None, :]
+    d2 = (th - lat0) ** 2 + (jnp.cos(th) * (ph - lon0)) ** 2
+    core = amp * jnp.exp(-d2 / (2 * radius ** 2))
+    # azimuthal winds around the core
+    du = -core * (th - lat0) / radius
+    dv = core * jnp.cos(th) * (ph - lon0) / radius
+    nl = 2  # smoke config has 2 levels
+    state = state.at[2 * nl:3 * nl].add(du[None])   # u channels
+    state = state.at[3 * nl:4 * nl].add(dv[None])   # v channels
+    return state
+
+
+def main() -> None:
+    cfg = fcn3cfg.fcn3_smoke()
+    model = FCN3(cfg)
+    ds = dlib.SyntheticERA5(cfg)
+    buffers = model.make_buffers()
+
+    state0 = add_vortex(ds.state(7), ds.grid)
+    cond0 = jnp.concatenate(
+        [jnp.asarray(ds.aux_fields(0.0))[None],
+         model.sample_noise(jax.random.PRNGKey(1), (1,))], axis=1)
+    params = model.init_calibrated(jax.random.PRNGKey(0), state0[None],
+                                   cond0, buffers)
+
+    members = 4
+    nbufs = model.noise.buffers()
+    z_hat = model.noise.init_state(jax.random.PRNGKey(3), (members,), nbufs)
+    ens = jnp.broadcast_to(state0, (members,) + state0.shape)
+
+    nl = cfg.n_levels
+    uidx, vidx = 2 * nl, 3 * nl  # lowest-level u/v channels
+    wpct = model.in_sht.buffers()["wpct"]
+    truth_psd = np.asarray(metrics.angular_psd(state0[uidx], wpct))
+
+    print("lead   member wind maxima (m/s, normalized units)     PSD ratio")
+    for lead in range(6):
+        z = model.noise.to_grid(z_hat, nbufs)
+        aux = jnp.broadcast_to(jnp.asarray(ds.aux_fields(6.0 * lead)),
+                               (members, cfg.n_aux, cfg.nlat, cfg.nlon))
+        cond = jnp.concatenate([aux, z], axis=1)
+        ens = jax.vmap(lambda s, c: model.apply(params, buffers, s, c)
+                       )(ens, cond)
+        wind = jnp.sqrt(ens[:, uidx] ** 2 + ens[:, vidx] ** 2)
+        maxima = [f"{float(wind[m].max()):5.2f}" for m in range(members)]
+        psd = np.asarray(metrics.angular_psd(ens[0, uidx], wpct))
+        lo = slice(1, cfg.latent_nlat // 2)
+        ratio = float(np.median(psd[lo] / np.maximum(truth_psd[lo], 1e-12)))
+        print(f"{(lead + 1) * 6:3d}h   {maxima}   {ratio:8.3f}")
+        z_hat = model.noise.step(jax.random.fold_in(jax.random.PRNGKey(3),
+                                                    lead), z_hat, nbufs)
+    print("\nDifferent members give different storm scenarios; the PSD "
+          "ratio staying O(1)\nindicates no spectral blow-up or blurring "
+          "across the rollout (paper Fig. 4/5).")
+
+
+if __name__ == "__main__":
+    main()

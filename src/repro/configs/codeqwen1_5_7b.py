@@ -1,0 +1,13 @@
+"""Config for ``codeqwen1.5-7b`` (see repro.configs.archs for the full table)."""
+
+from repro.configs import archs
+
+
+def config():
+    """Full-scale assigned configuration."""
+    return archs.get_arch("codeqwen1.5-7b")
+
+
+def smoke():
+    """Reduced same-family variant for CPU smoke tests."""
+    return archs.smoke_config("codeqwen1.5-7b")

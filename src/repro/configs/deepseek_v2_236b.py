@@ -1,0 +1,13 @@
+"""Config for ``deepseek-v2-236b`` (see repro.configs.archs for the full table)."""
+
+from repro.configs import archs
+
+
+def config():
+    """Full-scale assigned configuration."""
+    return archs.get_arch("deepseek-v2-236b")
+
+
+def smoke():
+    """Reduced same-family variant for CPU smoke tests."""
+    return archs.smoke_config("deepseek-v2-236b")

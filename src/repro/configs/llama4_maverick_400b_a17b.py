@@ -1,0 +1,13 @@
+"""Config for ``llama4-maverick-400b-a17b`` (see repro.configs.archs for the full table)."""
+
+from repro.configs import archs
+
+
+def config():
+    """Full-scale assigned configuration."""
+    return archs.get_arch("llama4-maverick-400b-a17b")
+
+
+def smoke():
+    """Reduced same-family variant for CPU smoke tests."""
+    return archs.smoke_config("llama4-maverick-400b-a17b")

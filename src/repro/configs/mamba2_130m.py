@@ -1,0 +1,13 @@
+"""Config for ``mamba2-130m`` (see repro.configs.archs for the full table)."""
+
+from repro.configs import archs
+
+
+def config():
+    """Full-scale assigned configuration."""
+    return archs.get_arch("mamba2-130m")
+
+
+def smoke():
+    """Reduced same-family variant for CPU smoke tests."""
+    return archs.smoke_config("mamba2-130m")

@@ -1,0 +1,13 @@
+"""Config for ``mistral-nemo-12b`` (see repro.configs.archs for the full table)."""
+
+from repro.configs import archs
+
+
+def config():
+    """Full-scale assigned configuration."""
+    return archs.get_arch("mistral-nemo-12b")
+
+
+def smoke():
+    """Reduced same-family variant for CPU smoke tests."""
+    return archs.smoke_config("mistral-nemo-12b")

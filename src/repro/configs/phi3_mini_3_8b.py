@@ -1,0 +1,13 @@
+"""Config for ``phi3-mini-3.8b`` (see repro.configs.archs for the full table)."""
+
+from repro.configs import archs
+
+
+def config():
+    """Full-scale assigned configuration."""
+    return archs.get_arch("phi3-mini-3.8b")
+
+
+def smoke():
+    """Reduced same-family variant for CPU smoke tests."""
+    return archs.smoke_config("phi3-mini-3.8b")

@@ -1,0 +1,88 @@
+"""Assigned input shapes and ShapeDtypeStruct builders for the dry-run.
+
+Four shapes (from the assignment brief):
+
+  train_4k     seq_len=4096    global_batch=256   -> train_step
+  prefill_32k  seq_len=32768   global_batch=32    -> prefill (full forward)
+  decode_32k   seq_len=32768   global_batch=128   -> serve_step (1 token,
+                                                     KV cache of seq_len)
+  long_500k    seq_len=524288  global_batch=1     -> serve_step; requires a
+                sub-quadratic path: native for SSM/hybrid, sliding-window
+                (window=8192) for attention archs (see DESIGN.md §5).
+
+``input_specs`` mirrors the shannon/kernels pattern: weak-type-correct
+ShapeDtypeStructs, shardable, no device allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ArchConfig, LM
+
+SLIDING_WINDOW_LONG = 8192
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                    # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def adapt_arch_for_shape(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """Per-shape architecture adjustments.
+
+    * ``long_500k`` on attention architectures switches to sliding-window
+      attention (the sub-quadratic variant we implement); SSM archs are
+      natively O(1)-state and need no change.
+    * SSD chunk size stays a divisor of the sequence.
+    """
+    if shape.name == "long_500k" and cfg.n_heads:
+        cfg = dataclasses.replace(cfg, sliding_window=SLIDING_WINDOW_LONG)
+    return cfg
+
+
+def _f(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape,
+                dtype=jnp.float32) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of one step."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.mode in ("train", "prefill"):
+        s_text = s - (cfg.n_patches if cfg.family == "vlm" else 0)
+        specs = {
+            "tokens": _f((b, s_text), jnp.int32),
+            "labels": _f((b, s_text), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            specs["patches"] = _f((b, cfg.n_patches, cfg.d_model), dtype)
+        if cfg.family == "audio":
+            specs["enc_frames"] = _f((b, cfg.encoder_seq, cfg.d_model), dtype)
+        return specs
+
+    # decode: one token against a cache of length seq_len
+    model = LM(cfg, dtype=dtype)
+    cache_specs = jax.eval_shape(lambda: model.init_cache(b, s))
+    specs = {
+        "tokens": _f((b, 1), jnp.int32),
+        "cache": cache_specs,
+        "pos": _f((), jnp.int32),
+    }
+    if cfg.family == "audio":
+        specs["enc_states"] = _f((b, cfg.encoder_seq, cfg.d_model), dtype)
+    return specs

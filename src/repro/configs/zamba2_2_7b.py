@@ -1,0 +1,13 @@
+"""Config for ``zamba2-2.7b`` (see repro.configs.archs for the full table)."""
+
+from repro.configs import archs
+
+
+def config():
+    """Full-scale assigned configuration."""
+    return archs.get_arch("zamba2-2.7b")
+
+
+def smoke():
+    """Reduced same-family variant for CPU smoke tests."""
+    return archs.smoke_config("zamba2-2.7b")

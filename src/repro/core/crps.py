@@ -1,0 +1,126 @@
+"""Continuously ranked probability score and the FCN3 objective (D.4, E.1).
+
+Three numerically equivalent estimators of the ensemble CRPS are provided:
+
+* ``crps_pairwise``   -- the energy form, eq. (46): biased spread estimate.
+* ``crps_fair``       -- the fair (unbiased-spread) form, eq. (47).
+* ``crps_sorted``     -- the sorted/CDF form, eq. (44) (O(E log E)).
+
+Plus the composite FCN3 objective, eq. (48): quadrature-weighted nodal CRPS,
+eq. (50), and multiplicity-weighted spectral CRPS, eq. (51).
+
+All estimators operate over a named ensemble axis and are pointwise in every
+other dimension; ``repro.kernels.crps`` provides the Pallas TPU kernel for
+the pairwise forms and ``repro.distributed.dist_crps`` the ensemble-parallel
+variant (paper Alg. 3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sphere import sht as shtlib
+
+
+def _abs_err_term(ens: jax.Array, obs: jax.Array, axis: int) -> jax.Array:
+    return jnp.mean(jnp.abs(ens - jnp.expand_dims(obs, axis)), axis=axis)
+
+
+def _pairwise_spread(ens: jax.Array, axis: int) -> jax.Array:
+    """sum_{e,i} |u_e - u_i| / E^2 along ``axis`` (E^2 energy term)."""
+    a = jnp.moveaxis(ens, axis, 0)
+    diff = jnp.abs(a[:, None, ...] - a[None, :, ...])
+    return jnp.mean(diff, axis=(0, 1))
+
+
+def crps_pairwise(ens: jax.Array, obs: jax.Array, axis: int = 0) -> jax.Array:
+    """Biased ensemble CRPS, eq. (46)."""
+    return _abs_err_term(ens, obs, axis) - 0.5 * _pairwise_spread(ens, axis)
+
+
+def crps_fair(ens: jax.Array, obs: jax.Array, axis: int = 0) -> jax.Array:
+    """Fair (unbiased-spread) CRPS, eq. (47)."""
+    e = ens.shape[axis]
+    if e < 2:
+        return _abs_err_term(ens, obs, axis)
+    corr = e / (e - 1.0)
+    return (_abs_err_term(ens, obs, axis)
+            - 0.5 * corr * _pairwise_spread(ens, axis))
+
+
+def crps_sorted(ens: jax.Array, obs: jax.Array, axis: int = 0) -> jax.Array:
+    """Sorted-rank CRPS, eq. (44) -- equals ``crps_pairwise``.
+
+    Uses the identity sum_{e<i}|u_e-u_i| = sum_e (2e+1-E) u_(e) on the sorted
+    ensemble, avoiding the E^2 pairwise tensor.
+    """
+    e = ens.shape[axis]
+    s = jnp.sort(jnp.moveaxis(ens, axis, -1), axis=-1)
+    coeff = (2.0 * jnp.arange(e) + 1.0 - e) / (e * e)
+    spread2 = jnp.einsum("...e,e->...", s, coeff.astype(s.dtype))
+    err = jnp.mean(jnp.abs(s - obs[..., None]), axis=-1)
+    return err - spread2
+
+
+def crps_ensemble(ens: jax.Array, obs: jax.Array, axis: int = 0,
+                  fair: bool = False) -> jax.Array:
+    return crps_fair(ens, obs, axis) if fair else crps_pairwise(ens, obs, axis)
+
+
+# ---------------------------------------------------------------------------
+# FCN3 composite objective (E.1)
+# ---------------------------------------------------------------------------
+
+def nodal_crps_loss(ens: jax.Array, obs: jax.Array, area_weights: jax.Array,
+                    fair: bool = False) -> jax.Array:
+    """Spatially averaged pointwise CRPS, eq. (50).
+
+    ens: (E, ..., C, H, W); obs: (..., C, H, W);
+    area_weights: (H, W) normalized quadrature weights (sum to 1).
+    Returns (..., C) per-channel scores.
+    """
+    pt = crps_ensemble(ens, obs, axis=0, fair=fair)  # (..., C, H, W)
+    return jnp.einsum("...chw,hw->...c", pt, area_weights.astype(pt.dtype))
+
+
+def spectral_crps_loss(ens: jax.Array, obs: jax.Array, wpct: jax.Array,
+                       fair: bool = False) -> jax.Array:
+    """Spectral-domain CRPS, eq. (51), multiplicity-weighted.
+
+    CRPS is applied to the real and imaginary parts of every spherical
+    harmonic coefficient; order m > 0 coefficients are weighted 2x (their
+    +/-m multiplicity), and the result is normalized by the number of real
+    degrees of freedom so magnitudes are comparable with the nodal term.
+
+    ens: (E, ..., C, H, W); obs: (..., C, H, W). Returns (..., C).
+    """
+    ce = shtlib.sht_forward(ens, wpct)   # (E, ..., C, L, M)
+    co = shtlib.sht_forward(obs, wpct)
+    sr = crps_ensemble(jnp.real(ce), jnp.real(co), axis=0, fair=fair)
+    si = crps_ensemble(jnp.imag(ce), jnp.imag(co), axis=0, fair=fair)
+    l, m = sr.shape[-2], sr.shape[-1]
+    mult = jnp.concatenate([jnp.ones((1,)), 2.0 * jnp.ones((m - 1,))])
+    mask = jnp.asarray(shtlib.mode_mask(l, m), sr.dtype)
+    w = mask * mult[None, :]
+    dof = jnp.sum(w)
+    return (jnp.einsum("...clm,lm->...c", sr + si, w.astype(sr.dtype))) / dof
+
+
+def fcn3_objective(ens: jax.Array, obs: jax.Array, area_weights: jax.Array,
+                   wpct: jax.Array, channel_weights: jax.Array,
+                   lambda_spectral: float = 1.0, fair: bool = False,
+                   ) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Composite FCN3 loss, eq. (48), for one lead time.
+
+    ens: (E, B, C, H, W); obs: (B, C, H, W);
+    channel_weights: (C,) combined w_c * w_{dt,c}.
+    Returns (scalar loss, diagnostics dict).
+    """
+    nodal = nodal_crps_loss(ens, obs, area_weights, fair)        # (B, C)
+    spec = spectral_crps_loss(ens, obs, wpct, fair)              # (B, C)
+    cw = channel_weights / jnp.sum(channel_weights)
+    l_nodal = jnp.mean(jnp.einsum("bc,c->b", nodal, cw.astype(nodal.dtype)))
+    l_spec = jnp.mean(jnp.einsum("bc,c->b", spec, cw.astype(spec.dtype)))
+    loss = l_nodal + lambda_spectral * l_spec
+    return loss, {"nodal": l_nodal, "spectral": l_spec}

@@ -1,0 +1,114 @@
+"""Spherical diffusion processes (paper B.7, Palmer et al. 2009).
+
+A first-order auto-regressive Gaussian process in spherical-harmonic space:
+
+    z_n = phi * z_{n-1} + sum_{l,m} sigma_l eta_l^m Y_l^m,   eq. (27)
+
+with phi = exp(-lambda), sigma_l = F0 exp(-k_T/2 l(l+1)) and F0 chosen so the
+pointwise variance of the stationary process is sigma^2, eq. (28).
+
+FCN3 conditions on 8 such processes with length scales k_T from Table 1.
+Noise centering (paper E.3): odd ensemble members reuse the even members'
+noise multiplied by -1 (antithetic pairs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sphere import sht as shtlib
+
+# Table 1 length scales.
+FCN3_KT_SCALES = (3.08e-5, 1.23e-4, 4.93e-4, 1.97e-3,
+                  7.89e-3, 3.16e-2, 1.26e-1, 5.05e-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class SphericalDiffusion:
+    """A bank of spherical AR(1) diffusion processes sharing one SHT."""
+
+    sht: shtlib.SHT
+    k_t: tuple[float, ...] = FCN3_KT_SCALES
+    lam: float = 1.0
+    sigma: float = 1.0
+
+    @property
+    def n_proc(self) -> int:
+        return len(self.k_t)
+
+    def _sigma_l(self) -> np.ndarray:
+        """(n_proc, L) spectral standard deviations, eq. (28b)-(28c)."""
+        lmax = self.sht.lmax
+        l = np.arange(lmax, dtype=np.float64)
+        phi = np.exp(-self.lam)
+        out = np.zeros((self.n_proc, lmax))
+        for i, kt in enumerate(self.k_t):
+            e = np.exp(-kt * l * (l + 1.0))
+            denom = ((2.0 * l + 1.0) * e)[1:].sum()  # sum over l > 0
+            f0 = self.sigma * np.sqrt(2.0 * np.pi * (1.0 - phi * phi)
+                                      / max(denom, 1e-30))
+            out[i] = f0 * np.sqrt(e)
+        out[:, 0] = 0.0  # l = 0: no mean offset, matches sum_{l>0} in (28c)
+        return out
+
+    def buffers(self) -> dict[str, jax.Array]:
+        b = dict(self.sht.buffers())
+        b["sigma_l"] = jnp.asarray(self._sigma_l(), jnp.float32)
+        return b
+
+    def _sample_coeffs(self, key: jax.Array, batch_shape: tuple[int, ...],
+                       sigma_l: jax.Array) -> jax.Array:
+        """White orthonormal-basis coefficients scaled by sigma_l.
+
+        Real-field convention: m = 0 coefficients are real N(0,1); m > 0 are
+        complex with Re, Im ~ N(0, 1/2) (so that the m<0 mirror restores unit
+        total variance per (l, m) pair).
+        """
+        lmax, mmax = self.sht.lmax, self.sht.mmax
+        shape = batch_shape + (self.n_proc, lmax, mmax)
+        kr, ki = jax.random.split(key)
+        re = jax.random.normal(kr, shape, jnp.float32)
+        im = jax.random.normal(ki, shape, jnp.float32)
+        m = jnp.arange(mmax)
+        scale_m = jnp.where(m == 0, 1.0, np.sqrt(0.5))
+        im_mask = jnp.where(m == 0, 0.0, 1.0)
+        mask = jnp.asarray(shtlib.mode_mask(lmax, mmax), jnp.float32)
+        eta = jax.lax.complex(re * scale_m, im * scale_m * im_mask) * mask
+        return eta * sigma_l[:, :, None]
+
+    def init_state(self, key: jax.Array, batch_shape: tuple[int, ...] = (),
+                   buffers: dict | None = None) -> jax.Array:
+        """Stationary sample of coefficients z_hat: (*batch, n_proc, L, M)."""
+        b = buffers if buffers is not None else self.buffers()
+        phi = np.exp(-self.lam)
+        stat = 1.0 / np.sqrt(max(1.0 - phi * phi, 1e-12))
+        return self._sample_coeffs(key, batch_shape, b["sigma_l"]) * stat
+
+    def step(self, key: jax.Array, z_hat: jax.Array,
+             buffers: dict | None = None) -> jax.Array:
+        """One AR(1) update in coefficient space, eq. (27)."""
+        b = buffers if buffers is not None else self.buffers()
+        phi = np.exp(-self.lam)
+        eta = self._sample_coeffs(key, z_hat.shape[:-3], b["sigma_l"])
+        return phi * z_hat + eta
+
+    def to_grid(self, z_hat: jax.Array, buffers: dict | None = None) -> jax.Array:
+        """Coefficients -> (*batch, n_proc, H, W) real fields."""
+        b = buffers if buffers is not None else self.buffers()
+        return shtlib.sht_inverse(z_hat, b["pct"], self.sht.grid.nlon)
+
+
+def center_noise(z: jax.Array, axis: int = 0) -> jax.Array:
+    """Antithetic noise centering (paper E.3): odd members = -even members."""
+    n = z.shape[axis]
+    idx = jnp.arange(n)
+    src = (idx // 2) * 2
+    sign = jnp.where(idx % 2 == 0, 1.0, -1.0)
+    zt = jnp.take(z, src, axis=axis)
+    shape = [1] * z.ndim
+    shape[axis] = n
+    return zt * sign.reshape(shape).astype(z.dtype)

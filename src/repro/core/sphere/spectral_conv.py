@@ -1,0 +1,61 @@
+"""Global spherical convolutions via the convolution theorem (paper B.4).
+
+The convolution theorem on the sphere, eq. (19), states that an axisymmetric
+filter acts diagonally in spherical-harmonic space:
+``(u (x) k)_l^m = u_l^m * k_l^0``.  Following SFNO (Bonev et al. 2023), the
+filter is *parameterized* directly in the spectral domain.  Two variants:
+
+* ``depthwise`` — a real per-(channel, l) gain, the literal convolution
+  theorem (strictly rotation-equivariant under SO(3)/SO(2)).
+* ``full`` — complex per-l channel-mixing weights (the SFNO parameterization);
+  trades strict equivariance for capacity, which FCN3 uses in its two global
+  processor blocks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sphere import sht as shtlib
+
+
+def init_spectral_filter(key: jax.Array, c_out: int, c_in: int, lmax: int,
+                         mode: str = "full", dtype=jnp.float32) -> dict:
+    """He-style init scaled so output variance matches input (paper C.6)."""
+    if mode == "depthwise":
+        if c_out != c_in:
+            raise ValueError("depthwise spectral filter requires c_out == c_in")
+        w = jnp.ones((c_in, lmax), dtype)
+        return {"w": w}
+    scale = np.sqrt(1.0 / max(c_in, 1))
+    kr, ki = jax.random.split(key)
+    return {
+        "w_re": scale * jax.random.normal(kr, (c_out, c_in, lmax), dtype),
+        "w_im": scale * jax.random.normal(ki, (c_out, c_in, lmax), dtype),
+    }
+
+
+def apply_spectral_conv(params: dict, x: jax.Array, sht_buffers: dict,
+                        nlon: int, lmax_keep: int | None = None) -> jax.Array:
+    """x: (..., C, H, W) -> (..., C_out, H, W) through the spectral domain.
+
+    Args:
+      params: from ``init_spectral_filter``.
+      x: input signal, channels-second-to-last-but-two layout (..., C, H, W).
+      sht_buffers: {"wpct": (H,L,M), "pct": (H,L,M)} Legendre tables.
+      nlon: output longitude count (== W).
+      lmax_keep: optional hard spectral truncation (anti-aliasing).
+    """
+    c = shtlib.sht_forward(x, sht_buffers["wpct"])  # (..., C, L, M)
+    if lmax_keep is not None and lmax_keep < c.shape[-2]:
+        keep = c[..., :lmax_keep, :]
+        c = jnp.pad(keep, [(0, 0)] * (c.ndim - 2)
+                    + [(0, c.shape[-2] - lmax_keep), (0, 0)])
+    if "w" in params:  # depthwise, real gain
+        y = c * params["w"][..., :, None]
+    else:
+        w = jax.lax.complex(params["w_re"], params["w_im"])  # (Co, Ci, L)
+        y = jnp.einsum("oil,...ilm->...olm", w, c)
+    return shtlib.sht_inverse(y, sht_buffers["pct"], nlon)

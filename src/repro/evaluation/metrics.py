@@ -1,0 +1,107 @@
+"""Evaluation metrics (paper Appendix D) and spectral diagnostics (F.7).
+
+All spatial reductions use the spherical quadrature weights of the grid,
+eq. (30): metrics are computed per channel and averaged over the sphere.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import crps as crpslib
+from repro.core.sphere import sht as shtlib
+
+
+def _spatial_mean(x: jax.Array, area_weights: jax.Array) -> jax.Array:
+    """x: (..., H, W) -> (...) using normalized area weights (sum to 1)."""
+    return jnp.einsum("...hw,hw->...", x, area_weights.astype(x.dtype))
+
+
+def rmse(pred: jax.Array, target: jax.Array, area_weights: jax.Array) -> jax.Array:
+    """Paper eq. (31). pred/target: (..., H, W)."""
+    return jnp.sqrt(_spatial_mean((pred - target) ** 2, area_weights))
+
+
+def mae(pred: jax.Array, target: jax.Array, area_weights: jax.Array) -> jax.Array:
+    """Paper eq. (32)."""
+    return _spatial_mean(jnp.abs(pred - target), area_weights)
+
+
+def acc(pred: jax.Array, target: jax.Array, climatology: jax.Array,
+        area_weights: jax.Array, eps: float = 1e-9) -> jax.Array:
+    """Anomaly correlation coefficient, eq. (33)."""
+    pa = pred - climatology
+    ta = target - climatology
+    num = _spatial_mean(pa * ta, area_weights)
+    den = jnp.sqrt(_spatial_mean(pa ** 2, area_weights)
+                   * _spatial_mean(ta ** 2, area_weights))
+    return num / (den + eps)
+
+
+def ensemble_mean(ens: jax.Array, axis: int = 0) -> jax.Array:
+    return jnp.mean(ens, axis=axis)
+
+
+def ensemble_skill(ens: jax.Array, target: jax.Array,
+                   area_weights: jax.Array, axis: int = 0) -> jax.Array:
+    """Ensemble-mean RMSE, eq. (35)."""
+    return rmse(ensemble_mean(ens, axis), target, area_weights)
+
+
+def ensemble_spread(ens: jax.Array, area_weights: jax.Array,
+                    axis: int = 0) -> jax.Array:
+    """Eq. (38): sqrt of the spatially averaged ensemble variance."""
+    var = jnp.var(ens, axis=axis, ddof=1)
+    return jnp.sqrt(_spatial_mean(var, area_weights))
+
+
+def spread_skill_ratio(ens: jax.Array, target: jax.Array,
+                       area_weights: jax.Array, axis: int = 0) -> jax.Array:
+    """Eq. (39), with the sqrt((E+1)/E) finite-ensemble correction."""
+    e = ens.shape[axis]
+    corr = jnp.sqrt((e + 1.0) / e)
+    return (corr * ensemble_spread(ens, area_weights, axis)
+            / ensemble_skill(ens, target, area_weights, axis))
+
+
+def crps(ens: jax.Array, target: jax.Array, area_weights: jax.Array,
+         axis: int = 0, fair: bool = True) -> jax.Array:
+    """Spatially averaged (fair, per WB2) ensemble CRPS."""
+    pt = crpslib.crps_ensemble(ens, target, axis=axis, fair=fair)
+    return _spatial_mean(pt, area_weights)
+
+
+def rank_histogram(ens: jax.Array, target: jax.Array,
+                   area_weights: jax.Array, axis: int = 0) -> jax.Array:
+    """Frequencies of the observation's rank within the ensemble (F.3).
+
+    Returns (E+1,) area-weighted rank frequencies (sum to 1). A calibrated
+    ensemble gives a flat histogram at 1/(E+1) (Hamill 2001).
+    """
+    e = ens.shape[axis]
+    rank = jnp.sum((ens < jnp.expand_dims(target, axis)).astype(jnp.int32),
+                   axis=axis)  # (..., H, W) in [0, E]
+    onehot = jax.nn.one_hot(rank, e + 1, dtype=jnp.float32)  # (..., H, W, E+1)
+    w = area_weights.astype(jnp.float32)
+    hist = jnp.einsum("...hwr,hw->...r", onehot, w)
+    # average any remaining leading dims
+    return hist.reshape((-1, e + 1)).mean(axis=0)
+
+
+def angular_psd(x: jax.Array, wpct: jax.Array) -> jax.Array:
+    """Angular power spectral density, eq. (53). x: (..., H, W) -> (..., L)."""
+    return shtlib.spectrum(shtlib.sht_forward(x, wpct))
+
+
+def zonal_psd(x: jax.Array, lat_index: int, colat: float) -> jax.Array:
+    """Zonal PSD at one latitude ring, eq. (54). x: (..., H, W) -> (..., W//2+1)."""
+    ring = x[..., lat_index, :]
+    w = ring.shape[-1]
+    f = jnp.fft.rfft(ring, axis=-1) * (2.0 * jnp.pi / w)
+    return 2.0 * jnp.pi * jnp.sin(colat) * jnp.abs(f) ** 2
+
+
+def bias(ens: jax.Array, target: jax.Array, axis: int = 0) -> jax.Array:
+    """Pointwise expected error, eq. (52), averaged over the ensemble axis."""
+    return jnp.mean(ens, axis=axis) - target

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused CRPS kernel (== repro.core.crps forms)."""
+
+import jax
+
+from repro.core import crps as crpslib
+
+
+def crps_fused_ref(ens: jax.Array, obs: jax.Array,
+                   fair: bool = False) -> jax.Array:
+    """ens: (E, N); obs: (N,) -> (N,)."""
+    return crpslib.crps_ensemble(ens, obs, axis=0, fair=fair)

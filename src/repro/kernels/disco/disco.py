@@ -1,0 +1,110 @@
+"""Pallas TPU kernel for the banded DISCO contraction (paper G.2.3, eq. 55).
+
+The paper implements the DISCO contraction as a custom CUDA sparse-dense
+kernel.  On TPU there is no efficient gather/sparse unit, so we *densify the
+band*: away from the poles the filter support spans S latitude rings and a
+narrow window of D longitudinal offsets, giving a dense banded tensor
+``psi_band[K, H_out, S, D]``.  The contraction then becomes, per output
+latitude row, a small dense GEMM over the (S*D) window -- an MXU-friendly
+reformulation of the paper's scatter/gather CUDA loop (this is the
+hardware-adaptation documented in DESIGN.md; near-pole rows where the
+support wraps the full circle use the exact FFT path instead).
+
+    out[b, k, h, w] = sum_{s, d} psi_band[k, h, s, d] *
+                      x_gathered[b, h, s, w*stride + d]
+
+where ``x_gathered[b, h, s, :] = x[b, lat_idx[h, s], :]`` has been
+wrap-padded by D along longitude.
+
+Grid: (B, H) tiles; each kernel instance holds the full longitude ring plus
+halo in VMEM (W + D <= ~2k floats per (s, row) slab) and performs a
+(K x S*D) @ (S*D x W) matmul per row block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+B_BLK = 8
+H_BLK = 8
+
+
+def _disco_kernel(x_ref, psi_ref, o_ref, *, d: int, w_out: int, stride: int):
+    """One (b, h) tile.
+
+    x_ref:   (B_BLK, H_BLK, S, W_pad) wrap-padded gathered input rows
+    psi_ref: (K, H_BLK, S, D) banded filter values
+    o_ref:   (B_BLK, K, H_BLK, W_OUT)
+    """
+    x = x_ref[...]
+    psi = psi_ref[...]
+    b_blk, h_blk, s, w_pad = x.shape
+    k = psi.shape[0]
+
+    # Build the window tensor by D static shifted slices:
+    # win[b, h, s, d, w] = x[b, h, s, w*stride + d]
+    cols = []
+    for dd in range(d):
+        sl = jax.lax.slice_in_dim(x, dd, dd + (w_out - 1) * stride + 1, axis=3)
+        if stride > 1:
+            sl = sl[..., ::stride]
+        cols.append(sl)
+    win = jnp.stack(cols, axis=3)  # (B, H, S, D, W_out)
+
+    # Per-latitude-row GEMM: (h: K x (S*D)) @ (h: (S*D) x (B*W)).
+    winf = win.transpose(1, 2, 3, 0, 4).reshape(h_blk, s * d, b_blk * w_out)
+    psif = psi.transpose(1, 0, 2, 3).reshape(h_blk, k, s * d)
+    acc = jax.lax.dot_general(
+        psif, winf,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )  # (H, K, B*W)
+    acc = acc.reshape(h_blk, k, b_blk, w_out).transpose(2, 1, 0, 3)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "interpret"))
+def disco_band_contract(x_gathered: jax.Array, psi_band: jax.Array,
+                        stride: int = 1, interpret: bool = True) -> jax.Array:
+    """Banded DISCO contraction.
+
+    x_gathered: (B, H_out, S, W_in) -- input rows pre-gathered per output
+      row (``x[b, lat_idx[h, s], :]``), *not* yet wrap-padded.
+    psi_band: (K, H_out, S, D) banded filter values.
+    stride: longitudinal output stride (W_out = W_in // stride).
+
+    Returns (B, K, H_out, W_out) float32.
+    """
+    b, h, s, w_in = x_gathered.shape
+    k, h2, s2, d = psi_band.shape
+    assert (h, s) == (h2, s2), (x_gathered.shape, psi_band.shape)
+    w_out = w_in // stride
+
+    # wrap-pad the longitude axis so windows never wrap inside the kernel
+    xp = jnp.concatenate([x_gathered, x_gathered[..., :d]], axis=-1)
+    w_pad = w_in + d
+
+    pb, ph = -b % B_BLK, -h % H_BLK
+    xp = jnp.pad(xp.astype(jnp.float32), ((0, pb), (0, ph), (0, 0), (0, 0)))
+    pp = jnp.pad(psi_band.astype(jnp.float32),
+                 ((0, 0), (0, ph), (0, 0), (0, 0)))
+    gb, gh = (b + pb) // B_BLK, (h + ph) // H_BLK
+
+    out = pl.pallas_call(
+        functools.partial(_disco_kernel, d=d, w_out=w_out, stride=stride),
+        grid=(gb, gh),
+        in_specs=[
+            pl.BlockSpec((B_BLK, H_BLK, s, w_pad), lambda ib, ih: (ib, ih, 0, 0)),
+            pl.BlockSpec((k, H_BLK, s, d), lambda ib, ih: (0, ih, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((B_BLK, k, H_BLK, w_out),
+                               lambda ib, ih: (ib, 0, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((b + pb, k, h + ph, w_out),
+                                       jnp.float32),
+        interpret=interpret,
+    )(xp, pp)
+    return out[:b, :, :h, :]

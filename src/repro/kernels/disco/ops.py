@@ -1,0 +1,75 @@
+"""Jitted public wrappers for the Pallas DISCO band kernel.
+
+``disco_conv_banded`` mirrors ``repro.core.sphere.disco.disco_conv`` (the
+exact FFT path) for plans whose longitudinal support fits a narrow band --
+i.e. all latitude rows away from the poles.  ``banded_psi_from_plan``
+extracts the (K, H, S, D) band (and checks it is exact) from a DiscoPlan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sphere.disco import DiscoPlan
+from repro.kernels.disco.disco import disco_band_contract
+
+
+def banded_psi_from_plan(plan: DiscoPlan, d_max: int | None = None
+                         ) -> tuple[np.ndarray, int, bool]:
+    """Extract the banded filter tensor from a plan.
+
+    The full psi stores every longitudinal offset (zero beyond the geodesic
+    cutoff).  The band keeps offsets dw in (-D/2, D/2] re-indexed to
+    [0, D) via the wrap ``dw mod W``; the first (D+1)//2 taps map to
+    positive offsets, the tail to negative ones.
+
+    Returns (psi_band with shape (K, H, S, D), D, exact) where ``exact``
+    is True iff no nonzero psi entry lies outside the band.
+    """
+    psi = plan.psi  # (K, H, S, W)
+    k, h, s, w = psi.shape
+    nz = np.abs(psi).max(axis=(0, 2))  # (H, W)
+    # support mask per output row over offsets; offsets are 0..W-1 circular.
+    half = w // 2
+    shifted = np.concatenate([nz[:, half:], nz[:, :half]], axis=1)  # center 0
+    cols = np.where(shifted.max(axis=0) > 0)[0]
+    if cols.size == 0:
+        lo, hi = half, half
+    else:
+        lo, hi = cols.min(), cols.max()
+    d = int(hi - lo + 1)
+    if d_max is not None:
+        d = min(d, d_max)
+    # band offsets relative to 0: [lo-half, hi-half]
+    off0 = lo - half
+    idx = (np.arange(d) + off0) % w
+    band = psi[:, :, :, idx]
+    exact = bool(np.isclose(np.abs(band).sum(), np.abs(psi).sum()))
+    return band.astype(np.float32), int(off0), exact
+
+
+def disco_conv_banded(x: jax.Array, psi_band: jax.Array, lat_idx: jax.Array,
+                      off0: int, stride: int = 1,
+                      interpret: bool = True) -> jax.Array:
+    """Banded DISCO conv matching ``disco_conv`` (FFT path) semantics.
+
+    x: (..., H_in, W_in); psi_band: (K, H_out, S, D); lat_idx: (H_out, S);
+    off0: longitudinal offset of the first band tap (may be negative).
+    Returns (..., K, H_out, W_out).
+    """
+    batch = x.shape[:-2]
+    w_in = x.shape[-1]
+    xb = x.reshape((-1,) + x.shape[-2:])
+    # roll so the first band tap sits at offset 0
+    xb = jnp.roll(xb, -off0, axis=-1) if off0 else xb
+    xg = jnp.take(xb, lat_idx, axis=-2)  # (B, H_out, S, W_in)
+    out = disco_band_contract(xg, psi_band, stride=stride,
+                              interpret=interpret)
+    if off0:
+        # the roll shifted the *input* by -off0; output index w corresponds
+        # to input window starting at w*stride + off0, matching the FFT path.
+        pass
+    k, h_out = psi_band.shape[0], psi_band.shape[1]
+    return out.reshape(batch + (k, h_out, w_in // stride))

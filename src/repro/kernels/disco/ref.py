@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the banded DISCO contraction."""
+
+import jax
+import jax.numpy as jnp
+
+
+def disco_band_contract_ref(x_gathered: jax.Array, psi_band: jax.Array,
+                            stride: int = 1) -> jax.Array:
+    """out[b,k,h,w] = sum_{s,d} psi[k,h,s,d] * x[b,h,s,(w*stride+d) % W]."""
+    b, h, s, w_in = x_gathered.shape
+    k, _, _, d = psi_band.shape
+    w_out = w_in // stride
+    xp = jnp.concatenate([x_gathered, x_gathered[..., :d]], axis=-1)
+    win = jnp.stack(
+        [xp[..., dd:dd + (w_out - 1) * stride + 1:1][..., ::stride]
+         for dd in range(d)], axis=-2)  # (B, H, S, D, W_out)
+    return jnp.einsum("khsd,bhsdw->bkhw",
+                      psi_band.astype(jnp.float32),
+                      win.astype(jnp.float32))

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel for the SHT Legendre contraction (paper B.3 / Alg. 1).
+
+The Legendre stage of the SHT is, per Fourier order m, a dense GEMM between
+the (H x L) Legendre table slab and the (B x H) Fourier coefficients:
+
+    out[b, n, m] = sum_k  x[b, k, m] * table[k, n, m]
+
+(forward SHT: k = latitude H, n = degree L, table = w_h * Pbar;
+ inverse SHT: k = degree L,  n = latitude H, table = Pbar transposed).
+
+This is the compute hot spot of every spectral (global) convolution in FCN3
+and the TPU analogue of the cuFFT+GEMM pipeline in torch-harmonics.  The
+kernel tiles (B, N, M) over the grid with an accumulating K loop as the
+innermost ("arbitrary") grid dimension; (B_blk, K_blk, N_blk) = (128, 128,
+128) keeps every matmul MXU-shaped, and the m-minor blocking (M_blk small)
+keeps the batched-GEMM operands resident in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes: MXU-aligned 128 on the contraction/output dims; the Fourier
+# order m is a batch dimension of the GEMM and is tiled narrow.
+B_BLK = 128
+K_BLK = 128
+N_BLK = 128
+M_BLK = 8
+
+
+def _legendre_kernel(x_ref, t_ref, o_ref):
+    """One (b, n, m) tile, accumulating over the k grid dimension.
+
+    x_ref: (B_BLK, K_BLK, M_BLK)  input slab
+    t_ref: (K_BLK, N_BLK, M_BLK)  Legendre table slab
+    o_ref: (B_BLK, N_BLK, M_BLK)  output tile (revisited across k steps)
+    """
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    t = t_ref[...]
+    # batched GEMM over the m axis: (M, B, K) x (M, K, N) -> (M, B, N)
+    acc = jax.lax.dot_general(
+        x.transpose(2, 0, 1), t.transpose(2, 0, 1),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] += acc.transpose(1, 2, 0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def legendre_contract(x: jax.Array, table: jax.Array,
+                      interpret: bool = True) -> jax.Array:
+    """out[b, n, m] = sum_k x[b, k, m] * table[k, n, m].
+
+    x: (B, K, M) float32; table: (K, N, M) float32 -> (B, N, M) float32.
+    Shapes are zero-padded up to block multiples; zero padding is exact for
+    this bilinear contraction.
+    """
+    b, k, m = x.shape
+    k2, n, m2 = table.shape
+    assert k == k2 and m == m2, (x.shape, table.shape)
+
+    pb, pk, pn, pm = (-b % B_BLK), (-k % K_BLK), (-n % N_BLK), (-m % M_BLK)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, pb), (0, pk), (0, pm)))
+    tp = jnp.pad(table.astype(jnp.float32), ((0, pk), (0, pn), (0, pm)))
+    gb, gk, gn, gm = ((b + pb) // B_BLK, (k + pk) // K_BLK,
+                      (n + pn) // N_BLK, (m + pm) // M_BLK)
+
+    out = pl.pallas_call(
+        _legendre_kernel,
+        grid=(gb, gn, gm, gk),
+        in_specs=[
+            pl.BlockSpec((B_BLK, K_BLK, M_BLK),
+                         lambda ib, in_, im, ik: (ib, ik, im)),
+            pl.BlockSpec((K_BLK, N_BLK, M_BLK),
+                         lambda ib, in_, im, ik: (ik, in_, im)),
+        ],
+        out_specs=pl.BlockSpec((B_BLK, N_BLK, M_BLK),
+                               lambda ib, in_, im, ik: (ib, in_, im)),
+        out_shape=jax.ShapeDtypeStruct((b + pb, n + pn, m + pm), jnp.float32),
+        interpret=interpret,
+    )(xp, tp)
+    return out[:b, :n, :m]

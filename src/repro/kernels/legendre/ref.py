@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the Legendre contraction kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def legendre_contract_ref(x: jax.Array, table: jax.Array) -> jax.Array:
+    """out[b, n, m] = sum_k x[b, k, m] * table[k, n, m]."""
+    return jnp.einsum("bkm,knm->bnm", x.astype(jnp.float32),
+                      table.astype(jnp.float32))

@@ -1,0 +1,62 @@
+"""Jitted wrapper: full chunked SSD scan with the Pallas intra-chunk kernel.
+
+Drop-in replacement for ``repro.models.ssm.ssd_chunked``: the quadratic
+intra-chunk work runs in the fused Pallas kernel; the linear inter-chunk
+recurrence and the incoming-state contribution remain XLA (they are
+bandwidth-trivial).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.ssd import ssd_intra_chunk
+
+
+def ssd_chunked_pallas(x: jax.Array, da: jax.Array, b_mat: jax.Array,
+                       c_mat: jax.Array, chunk: int,
+                       initial_state: jax.Array | None = None,
+                       interpret: bool = True
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Same contract as repro.models.ssm.ssd_chunked."""
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    assert s % chunk == 0
+    nc = s // chunk
+    rep = h // g
+
+    def to_chunks(t, tail):
+        return t.reshape((bsz * nc, chunk) + tail)
+
+    xc = to_chunks(x, (h, p))
+    dac = to_chunks(da, (h,))
+    bc = to_chunks(b_mat, (g, n))
+    cc = to_chunks(c_mat, (g, n))
+    da_cs = jnp.cumsum(dac.astype(jnp.float32), axis=1)
+
+    y_diag, states = ssd_intra_chunk(xc, da_cs, bc, cc, n_groups=g,
+                                     interpret=interpret)
+    y_diag = y_diag.reshape(bsz, nc, chunk, h, p)
+    states = states.reshape(bsz, nc, h, p, n)
+    da_cs = da_cs.reshape(bsz, nc, chunk, h)
+
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])                 # (B,nc,H)
+    init = (jnp.zeros((bsz, h, p, n), jnp.float32)
+            if initial_state is None else initial_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dk = inp
+        return carry * dk[:, :, None, None] + st, carry
+
+    final, prev = jax.lax.scan(
+        step, init, (states.transpose(1, 0, 2, 3, 4),
+                     chunk_decay.transpose(1, 0, 2)))
+    prev = prev.transpose(1, 0, 2, 3, 4)                      # (B,nc,H,P,N)
+
+    cex = jnp.repeat(cc.astype(jnp.float32), rep, axis=2) if rep > 1 else cc
+    cex = cex.reshape(bsz, nc, chunk, h, n)
+    state_decay = jnp.exp(da_cs)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", cex, prev, state_decay)
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_intra_chunk_ref(x: jax.Array, da_cs: jax.Array, b_mat: jax.Array,
+                        c_mat: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Shapes as in repro.kernels.ssd.ssd.ssd_intra_chunk."""
+    bc, l, h, p = x.shape
+    g = b_mat.shape[2]
+    rep = h // g
+    x = x.astype(jnp.float32)
+    da_cs = da_cs.astype(jnp.float32)
+    bex = jnp.repeat(b_mat.astype(jnp.float32), rep, axis=2) \
+        if rep > 1 else b_mat.astype(jnp.float32)
+    cex = jnp.repeat(c_mat.astype(jnp.float32), rep, axis=2) \
+        if rep > 1 else c_mat.astype(jnp.float32)
+
+    diff = da_cs[:, :, None, :] - da_cs[:, None, :, :]       # (BC,L,L,H)
+    tri = jnp.tril(jnp.ones((l, l), bool))[None, :, :, None]
+    decay = jnp.where(tri, jnp.exp(diff), 0.0)
+    cb = jnp.einsum("blhn,bshn->blsh", cex, bex)
+    att = cb * decay
+    y = jnp.einsum("blsh,bshp->blhp", att, x)
+
+    decay_states = jnp.exp(da_cs[:, -1:, :] - da_cs)          # (BC,L,H)
+    states = jnp.einsum("blhn,blh,blhp->bhpn", bex, decay_states, x)
+    return y, states

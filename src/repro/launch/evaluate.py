@@ -1,0 +1,173 @@
+"""WB2-style evaluation protocol (paper F.1) with in-situ scoring.
+
+Scores an FCN3 ensemble against the (synthetic-ERA5) ground truth over many
+initial conditions and lead times, per channel -- the structure of the
+paper's Figures 3/12-18: fair CRPS, ensemble-mean RMSE, ACC, spread-skill
+ratio, rank histograms and angular PSD ratios.  Everything is computed
+online (paper G.4): no forecast fields ever touch the disk; only the score
+tables are emitted (CSV + optional JSON).
+
+  PYTHONPATH=src python -m repro.launch.evaluate --config smoke \
+      --members 4 --lead-steps 4 --initial-conditions 4
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import fcn3 as fcn3cfg
+from repro.core.fcn3 import FCN3
+from repro.core.sphere import noise as noiselib
+from repro.data import era5_synthetic as dlib
+from repro.evaluation import metrics
+from repro.train import checkpoint as ckptlib
+
+CONFIGS = {"smoke": fcn3cfg.fcn3_smoke, "small": fcn3cfg.fcn3_small,
+           "full": fcn3cfg.fcn3_full}
+
+# WB2 headline channels present in our channel table (paper F.2)
+HEADLINE = ("z500", "t850", "t2m", "u10m", "msl", "q700")
+
+
+class OnlineScores:
+    """Streaming accumulator: mean scores over initial conditions."""
+
+    def __init__(self, n_members: int):
+        self.n = 0
+        self.sums: dict[str, np.ndarray] = {}
+        self.rank_hist = np.zeros(n_members + 1)
+
+    def update(self, scores: dict[str, np.ndarray],
+               rank_hist: np.ndarray) -> None:
+        for k, v in scores.items():
+            self.sums[k] = self.sums.get(k, 0.0) + np.asarray(v)
+        self.rank_hist += np.asarray(rank_hist)
+        self.n += 1
+
+    def means(self) -> dict[str, np.ndarray]:
+        out = {k: v / max(self.n, 1) for k, v in self.sums.items()}
+        out["rank_hist"] = self.rank_hist / max(self.rank_hist.sum(), 1)
+        return out
+
+
+def make_score_fn(model: FCN3, aw: jax.Array, clim: jax.Array,
+                  wpct: jax.Array):
+    @jax.jit
+    def score(ens: jax.Array, truth: jax.Array) -> dict:
+        """ens: (E, C, H, W); truth: (C, H, W) -> per-channel scores."""
+        return {
+            "crps": metrics.crps(ens, truth, aw, fair=True),
+            "rmse_ens_mean": metrics.ensemble_skill(ens, truth, aw),
+            "acc": metrics.acc(jnp.mean(ens, 0), truth, clim, aw),
+            "ssr": metrics.spread_skill_ratio(ens, truth, aw),
+            "psd_ratio": (
+                jnp.median(metrics.angular_psd(ens[0], wpct)[..., 1:]
+                           / jnp.maximum(
+                               metrics.angular_psd(truth, wpct)[..., 1:],
+                               1e-12), axis=-1)),
+        }
+
+    @jax.jit
+    def ranks(ens: jax.Array, truth: jax.Array) -> jax.Array:
+        return metrics.rank_histogram(ens, truth, aw)
+
+    return score, ranks
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="smoke", choices=sorted(CONFIGS))
+    ap.add_argument("--members", type=int, default=4)
+    ap.add_argument("--lead-steps", type=int, default=4)
+    ap.add_argument("--initial-conditions", type=int, default=4)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--out-json", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = CONFIGS[args.config]()
+    model = FCN3(cfg)
+    ds = dlib.SyntheticERA5(cfg)
+    buffers = model.make_buffers()
+    names = fcn3cfg.channel_names(cfg.n_levels)
+    aw = jnp.asarray(ds.grid.area_weights_2d(), jnp.float32)
+    clim = dlib.climatology(ds)
+    wpct = model.in_sht.buffers()["wpct"]
+
+    if args.ckpt:
+        template = {"params": jax.eval_shape(model.init,
+                                             jax.random.PRNGKey(0))}
+        restored, _ = ckptlib.restore_checkpoint(args.ckpt, template)
+        params = restored["params"]
+    else:
+        s0 = ds.state(0)[None]
+        cond0 = jnp.concatenate(
+            [jnp.asarray(ds.aux_fields(0.0))[None],
+             model.sample_noise(jax.random.PRNGKey(1), (1,))], axis=1)
+        params = model.init_calibrated(jax.random.PRNGKey(args.seed), s0,
+                                       cond0, buffers)
+
+    score_fn, rank_fn = make_score_fn(model, aw, clim, wpct)
+    nbufs = model.noise.buffers()
+
+    @jax.jit
+    def step(params, ens, z_hat, aux):
+        z = noiselib.center_noise(model.noise.to_grid(z_hat, nbufs), axis=0)
+        cond = jnp.concatenate(
+            [jnp.broadcast_to(aux, (args.members,) + aux.shape), z], axis=1)
+        return jax.vmap(lambda s, c: model.apply(params, buffers, s, c)
+                        )(ens, cond)
+
+    per_lead = [OnlineScores(args.members) for _ in range(args.lead_steps)]
+    t0 = time.time()
+    for ic in range(args.initial_conditions):
+        sample = 1000 + 37 * ic
+        ens = jnp.broadcast_to(ds.state(sample),
+                               (args.members,) + ds.state(sample).shape)
+        z_hat = model.noise.init_state(
+            jax.random.fold_in(jax.random.PRNGKey(args.seed), ic),
+            (args.members,), nbufs)
+        for lead in range(args.lead_steps):
+            aux = jnp.asarray(ds.aux_fields(6.0 * lead))
+            ens = step(params, ens, z_hat, aux)
+            truth = ds.state(sample, lead + 1)
+            per_lead[lead].update(
+                jax.tree.map(np.asarray, score_fn(ens, truth)),
+                np.asarray(rank_fn(ens, truth)))
+            z_hat = model.noise.step(
+                jax.random.fold_in(jax.random.PRNGKey(7), ic * 100 + lead),
+                z_hat, nbufs)
+        print(f"[evaluate] ic {ic + 1}/{args.initial_conditions} "
+              f"({time.time() - t0:.1f}s)")
+
+    # ---- report ----------------------------------------------------------
+    head_idx = [names.index(n) for n in HEADLINE if n in names]
+    head = [names[i] for i in head_idx]
+    print("\nlead_h,metric," + ",".join(head))
+    results = {}
+    for lead, acc in enumerate(per_lead):
+        m = acc.means()
+        results[f"lead_{6 * (lead + 1)}h"] = {
+            k: np.asarray(v).tolist() for k, v in m.items()}
+        for metric in ("crps", "rmse_ens_mean", "acc", "ssr", "psd_ratio"):
+            vals = m[metric][head_idx] if len(m[metric].shape) else m[metric]
+            print(f"{6 * (lead + 1)},{metric},"
+                  + ",".join(f"{v:.4f}" for v in np.atleast_1d(vals)))
+    print("\nrank histogram (last lead):",
+          np.round(per_lead[-1].means()["rank_hist"], 3).tolist())
+    if args.out_json:
+        with open(args.out_json, "w") as f:
+            json.dump({"channels": names, "headline": head,
+                       "results": results}, f, indent=1)
+        print(f"[evaluate] wrote {args.out_json}")
+    print("[evaluate] done (in-situ scoring; no forecast fields stored)")
+
+
+if __name__ == "__main__":
+    main()

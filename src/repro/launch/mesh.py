@@ -1,0 +1,29 @@
+"""Production mesh construction (assignment-mandated shapes).
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state.  Axis order encodes the ICI
+topology mapping: the fastest-varying ("model") axis lands on the
+closest-together chips, matching the paper's §G.1 rule of keeping
+all-to-all-heavy communicators on the lowest-latency links.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_toy_mesh(n_data: int = 4, n_model: int = 2):
+    """Small mesh for CPU smoke tests (requires fake devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """All pure data-parallel axes of a production mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,96 @@
+"""FCN3 training launcher (paper Appendix E curriculum).
+
+Runs real gradient steps (single host; scales to a real mesh by passing
+--mesh-data/--mesh-model on multi-device runtimes).  On the CPU container
+the reduced configs train a miniature FCN3 end-to-end:
+
+  PYTHONPATH=src python -m repro.launch.train --config smoke --steps 20
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import fcn3 as fcn3cfg
+from repro.core.fcn3 import FCN3
+from repro.data import era5_synthetic as dlib
+from repro.train import checkpoint as ckptlib
+from repro.train import trainer as trlib
+
+CONFIGS = {"smoke": fcn3cfg.fcn3_smoke, "small": fcn3cfg.fcn3_small,
+           "full": fcn3cfg.fcn3_full}
+
+
+def stage_to_tcfg(stage: fcn3cfg.FCN3TrainingStage, ensemble: int | None,
+                  rollout: int | None) -> trlib.TrainConfig:
+    return trlib.TrainConfig(
+        ensemble_size=ensemble or stage.ensemble_size,
+        rollout_steps=rollout or stage.rollout_steps,
+        fair_crps=stage.fair_crps,
+        noise_centering=stage.name == "finetune",
+        lr=stage.lr, lr_halve_every=stage.lr_halve_every,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="smoke", choices=sorted(CONFIGS))
+    ap.add_argument("--stage", default="pretrain_stage1",
+                    choices=[s.name for s in fcn3cfg.FCN3_CURRICULUM])
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--ensemble", type=int, default=2)
+    ap.add_argument("--rollout", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = CONFIGS[args.config]()
+    stage = next(s for s in fcn3cfg.FCN3_CURRICULUM if s.name == args.stage)
+    tcfg = stage_to_tcfg(stage, args.ensemble, args.rollout)
+    print(f"[train] config={args.config} stage={stage.name} "
+          f"E={tcfg.ensemble_size} rollout={tcfg.rollout_steps} "
+          f"fair={tcfg.fair_crps} lr={tcfg.lr}")
+
+    model = FCN3(cfg)
+    ds = dlib.SyntheticERA5(cfg)
+    loader = dlib.Loader(ds, global_batch=args.batch,
+                         rollout=tcfg.rollout_steps, seed=args.seed)
+    cw = fcn3cfg.channel_weights(cfg.n_levels)
+    tr = trlib.EnsembleTrainer(model, tcfg, cw)
+
+    buffers = dict(model.make_buffers(), **tr.make_loss_buffers())
+    it = iter(loader)
+    batch0 = next(it)
+    cond0 = jnp.concatenate(
+        [batch0["aux"][:, 0],
+         model.sample_noise(jax.random.PRNGKey(1), (args.batch,))], axis=1)
+    params = model.init_calibrated(jax.random.PRNGKey(args.seed),
+                                   batch0["state"], cond0, buffers)
+    opt_state = tr.optimizer.init(params)
+    print(f"[train] {model.param_count(params):,} parameters")
+
+    step_fn = jax.jit(tr.make_train_step(buffers), donate_argnums=(0, 1))
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = next(it)
+        params, opt_state, aux = step_fn(params, opt_state, batch,
+                                         jax.random.PRNGKey(1000 + i))
+        print(f"step {i:4d} loss={float(aux['loss']):.5f} "
+              f"nodal={float(aux['nodal_0']):.5f} "
+              f"spectral={float(aux['spectral_0']):.5f} "
+              f"|g|={float(aux['grad_norm']):.3f} "
+              f"({time.time() - t0:.1f}s)")
+    if args.ckpt_dir:
+        path = ckptlib.save_checkpoint(args.ckpt_dir, args.steps, params,
+                                       opt_state)
+        print(f"[train] checkpoint written to {path}")
+
+
+if __name__ == "__main__":
+    main()

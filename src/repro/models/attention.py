@@ -1,0 +1,268 @@
+"""Attention variants for the architecture zoo.
+
+* GQA (grouped-query attention) with optional sliding window -- phi-3,
+  mistral-nemo, yi, codeqwen, zamba2 shared block, llava backbone, whisper.
+* MLA (multi-head latent attention) with low-rank KV compression and an
+  absorbed decode path -- deepseek-v2 [arXiv:2405.04434].
+
+Each variant exposes ``init``, ``apply_train`` (full-sequence causal) and
+``apply_decode`` (single query token against a cache).  Caches are
+preallocated to the maximum sequence length so decode steps have static
+shapes; sliding-window attention uses a ring buffer of size ``window``.
+Keys are rotated (RoPE) *before* caching so ring-buffer eviction needs no
+re-rotation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common as cm
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 1e4
+    sliding_window: int = 0      # 0 = full attention
+    causal: bool = True
+    # MLA
+    mla: bool = False
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_rope_dim: int = 64
+    qk_nope_dim: int = 128
+    v_head_dim: int = 128
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key: jax.Array, cfg: AttnConfig, dtype=jnp.float32) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    return {
+        "wq": cm.init_linear(kq, d, cfg.n_heads * hd, dtype=dtype),
+        "wk": cm.init_linear(kk, d, cfg.n_kv_heads * hd, dtype=dtype),
+        "wv": cm.init_linear(kv, d, cfg.n_kv_heads * hd, dtype=dtype),
+        "wo": cm.init_linear(ko, cfg.n_heads * hd, d, dtype=dtype),
+    }
+
+
+def _split_heads(x: jax.Array, n: int) -> jax.Array:
+    return x.reshape(x.shape[:-1] + (n, -1))
+
+
+def _gqa_scores_mask(s_q: int, s_k: int, q_pos: jax.Array, k_pos: jax.Array,
+                     causal: bool, window: int) -> jax.Array:
+    """(S_q, S_k) additive mask from absolute positions."""
+    dq = q_pos[:, None]
+    dk = k_pos[None, :]
+    ok = jnp.ones((s_q, s_k), bool)
+    if causal:
+        ok &= dk <= dq
+    if window:
+        ok &= dk > dq - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def apply_gqa_train(params: dict, cfg: AttnConfig, x: jax.Array,
+                    positions: jax.Array | None = None,
+                    kv_states: jax.Array | None = None) -> jax.Array:
+    """Full-sequence attention.
+
+    x: (B, S, D). ``kv_states`` (B, S_kv, D) switches to cross-attention
+    (non-causal, keys/values from the encoder states).
+    """
+    b, s, _ = x.shape
+    pos = positions if positions is not None else jnp.arange(s)
+    src = kv_states if kv_states is not None else x
+    s_k = src.shape[1]
+    kpos = jnp.arange(s_k) if kv_states is not None else pos
+
+    q = _split_heads(cm.linear(params["wq"], x), cfg.n_heads)
+    k = _split_heads(cm.linear(params["wk"], src), cfg.n_kv_heads)
+    v = _split_heads(cm.linear(params["wv"], src), cfg.n_kv_heads)
+    if kv_states is None:  # self-attention: rotary embeddings
+        q = cm.apply_rope(q, pos, cfg.rope_theta)
+        k = cm.apply_rope(k, kpos, cfg.rope_theta)
+
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, s, cfg.n_kv_heads, g, cfg.head_dim)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) * float(1.0 / np.sqrt(cfg.head_dim))
+    causal = cfg.causal and kv_states is None
+    mask = _gqa_scores_mask(s, s_k, pos, kpos, causal, cfg.sliding_window)
+    attn = jax.nn.softmax(scores.astype(jnp.float32) + mask, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", attn.astype(v.dtype), v)
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return cm.linear(params["wo"], out)
+
+
+def init_gqa_cache(cfg: AttnConfig, batch: int, max_len: int,
+                   dtype=jnp.float32) -> dict:
+    size = cfg.sliding_window or max_len
+    shape = (batch, size, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def apply_gqa_decode(params: dict, cfg: AttnConfig, x: jax.Array,
+                     cache: dict, pos: jax.Array,
+                     kv_states: jax.Array | None = None
+                     ) -> tuple[jax.Array, dict]:
+    """One-token decode. x: (B, 1, D); pos: scalar absolute position."""
+    b = x.shape[0]
+    q = _split_heads(cm.linear(params["wq"], x), cfg.n_heads)
+
+    if kv_states is not None:
+        # cross-attention: static encoder states, no cache update, no rope
+        k = _split_heads(cm.linear(params["wk"], kv_states), cfg.n_kv_heads)
+        v = _split_heads(cm.linear(params["wv"], kv_states), cfg.n_kv_heads)
+        valid = jnp.ones((kv_states.shape[1],), bool)
+        new_cache = cache
+    else:
+        q = cm.apply_rope(q, pos[None], cfg.rope_theta)
+        k_new = _split_heads(cm.linear(params["wk"], x), cfg.n_kv_heads)
+        k_new = cm.apply_rope(k_new, pos[None], cfg.rope_theta)
+        v_new = _split_heads(cm.linear(params["wv"], x), cfg.n_kv_heads)
+        size = cache["k"].shape[1]
+        slot = pos % size if cfg.sliding_window else pos
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                         (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                         (0, slot, 0, 0))
+        new_cache = {"k": k, "v": v}
+        idx = jnp.arange(size)
+        if cfg.sliding_window:
+            valid = (idx <= pos % size) | (pos >= size)
+        else:
+            valid = idx <= pos
+
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, 1, cfg.n_kv_heads, g, cfg.head_dim)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) * float(1.0 / np.sqrt(cfg.head_dim))
+    scores = jnp.where(valid[None, None, None, None, :],
+                       scores.astype(jnp.float32), NEG_INF)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", attn.astype(v.dtype), v)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    return cm.linear(params["wo"], out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v2)
+# ---------------------------------------------------------------------------
+
+def init_mla(key: jax.Array, cfg: AttnConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    h, r = cfg.n_heads, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    qr = cfg.q_lora_rank or d
+    p = {
+        "w_dkv": cm.init_linear(ks[0], d, r + dr, dtype=dtype),  # + shared k_rope
+        "w_uk": cm.init_linear(ks[1], r, h * dn, dtype=dtype),
+        "w_uv": cm.init_linear(ks[2], r, h * dv, dtype=dtype),
+        "w_uq": cm.init_linear(ks[4], qr, h * (dn + dr), dtype=dtype),
+        "wo": cm.init_linear(ks[5], h * dv, d, dtype=dtype),
+    }
+    if cfg.q_lora_rank:
+        p["w_dq"] = cm.init_linear(ks[3], d, cfg.q_lora_rank, dtype=dtype)
+    return p
+
+
+def _mla_qkv(params: dict, cfg: AttnConfig, x: jax.Array, pos: jax.Array):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = cm.linear(params["w_dq"], x) if "w_dq" in params else x
+    q = cm.linear(params["w_uq"], cq).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = cm.apply_rope(q_rope, pos, cfg.rope_theta)
+    ckv = cm.linear(params["w_dkv"], x)  # (B, S, r + dr)
+    c_kv, k_rope = ckv[..., :cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank:]
+    k_rope = cm.apply_rope(k_rope[..., None, :], pos, cfg.rope_theta)[..., 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def apply_mla_train(params: dict, cfg: AttnConfig, x: jax.Array,
+                    positions: jax.Array | None = None) -> jax.Array:
+    """Full-sequence causal MLA. x: (B, S, D)."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dv = cfg.qk_nope_dim, cfg.v_head_dim
+    pos = positions if positions is not None else jnp.arange(s)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, cfg, x, pos)
+    k_nope = cm.linear(params["w_uk"], c_kv).reshape(b, s, h, dn)
+    v = cm.linear(params["w_uv"], c_kv).reshape(b, s, h, dv)
+    scale = float(1.0 / np.sqrt(dn + cfg.qk_rope_dim))
+    scores = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope)
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope)) * scale
+    mask = _gqa_scores_mask(s, s, pos, pos, True, cfg.sliding_window)
+    attn = jax.nn.softmax(scores.astype(jnp.float32) + mask, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd",
+                     attn.astype(v.dtype), v).reshape(b, s, h * dv)
+    return cm.linear(params["wo"], out)
+
+
+def init_mla_cache(cfg: AttnConfig, batch: int, max_len: int,
+                   dtype=jnp.float32) -> dict:
+    """MLA caches the *latent* c_kv + shared rotated key -- this is the
+    memory saving that defines MLA (r + d_rope per token, not 2*H*D)."""
+    size = cfg.sliding_window or max_len
+    return {
+        "c_kv": jnp.zeros((batch, size, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, size, cfg.qk_rope_dim), dtype),
+    }
+
+
+def apply_mla_decode(params: dict, cfg: AttnConfig, x: jax.Array,
+                     cache: dict, pos: jax.Array) -> tuple[jax.Array, dict]:
+    """Absorbed-matrices decode: scores/values computed in the latent space.
+
+    x: (B, 1, D). q_eff = q_nope @ W_uk (per head) so attention runs against
+    the cached c_kv directly; the value up-projection W_uv is applied after
+    the probability-weighted sum of latents.
+    """
+    b = x.shape[0]
+    h, r = cfg.n_heads, cfg.kv_lora_rank
+    dn, dv = cfg.qk_nope_dim, cfg.v_head_dim
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(params, cfg, x, pos[None])
+
+    size = cache["c_kv"].shape[1]
+    slot = pos % size if cfg.sliding_window else pos
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, slot, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
+        (0, slot, 0))
+    new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+
+    w_uk = params["w_uk"].reshape(r, h, dn)
+    q_eff = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)  # absorb W_uk
+    scale = float(1.0 / np.sqrt(dn + cfg.qk_rope_dim))
+    scores = (jnp.einsum("bqhr,bkr->bhqk", q_eff, c_kv)
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope)) * scale
+    idx = jnp.arange(size)
+    if cfg.sliding_window:
+        valid = (idx <= pos % size) | (pos >= size)
+    else:
+        valid = idx <= pos
+    scores = jnp.where(valid[None, None, None, :],
+                       scores.astype(jnp.float32), NEG_INF)
+    attn = jax.nn.softmax(scores, axis=-1)
+    lat = jnp.einsum("bhqk,bkr->bqhr",
+                     attn.astype(c_kv.dtype), c_kv)  # latent-space values
+    w_uv = params["w_uv"].reshape(r, h, dv)
+    out = jnp.einsum("bqhr,rhd->bqhd", lat, w_uv).reshape(b, 1, h * dv)
+    return cm.linear(params["wo"], out), new_cache

@@ -1,0 +1,100 @@
+"""Shared transformer building blocks for the assigned-architecture zoo.
+
+Pure-JAX functional modules (init -> params pytree, apply -> arrays), kept
+deliberately close to the reference implementations cited in each config
+file.  All dense layers use jnp.einsum so GSPMD can shard them along the
+mesh axes chosen in repro.distributed.sharding.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_linear(key: jax.Array, d_in: int, d_out: int, scale: float | None = None,
+                dtype=jnp.float32) -> jax.Array:
+    s = float(scale if scale is not None else 1.0 / np.sqrt(d_in))
+    return jax.random.normal(key, (d_in, d_out), dtype) * s
+
+
+def linear(w: jax.Array, x: jax.Array) -> jax.Array:
+    return jnp.einsum("...i,io->...o", x, w)
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(g: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * g
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary position embedding.
+
+    x: (..., S, H, D); positions: broadcastable to (..., S).
+    """
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def init_swiglu(key: jax.Array, d: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_linear(k1, d, d_ff, dtype=dtype),
+        "w_up": init_linear(k2, d, d_ff, dtype=dtype),
+        "w_down": init_linear(k3, d_ff, d, dtype=dtype),
+    }
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    return linear(p["w_down"],
+                  jax.nn.silu(linear(p["w_gate"], x)) * linear(p["w_up"], x))
+
+
+def init_gelu_mlp(key: jax.Array, d: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": init_linear(k1, d, d_ff, dtype=dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": init_linear(k2, d_ff, d, dtype=dtype),
+        "b_down": jnp.zeros((d,), dtype),
+    }
+
+
+def gelu_mlp(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(linear(p["w_up"], x) + p["b_up"])
+    return linear(p["w_down"], h) + p["b_down"]
+
+
+def init_embedding(key: jax.Array, vocab: int, d: int,
+                   dtype=jnp.float32) -> jax.Array:
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+def embed(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       ignore_index: int = -100) -> jax.Array:
+    """Mean next-token CE. logits: (B, S, V); labels: (B, S)."""
+    valid = (labels != ignore_index)
+    labels = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * valid) / jnp.maximum(jnp.sum(valid), 1)

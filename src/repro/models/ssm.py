@@ -1,0 +1,219 @@
+"""Mamba-2 (SSD, state-space duality) blocks [arXiv:2405.21060].
+
+Training uses the chunked SSD algorithm (quadratic within chunks, linear
+recurrence across chunks via jax.lax.scan); decoding uses the O(1) recurrent
+state update.  The chunk recurrence over the sequence axis is exactly the
+structure that the paper's domain-decomposition technique shards: chunk
+states are carried across sequence shards the same way FCN3 carries
+latitude halos (see repro.distributed.dist_ssm notes in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common as cm
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64           # P
+    expand: int = 2
+    n_groups: int = 1
+    d_conv: int = 4
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def init_mamba2(key: jax.Array, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_in = cfg.d_inner
+    proj_out = 2 * d_in + 2 * cfg.n_groups * cfg.d_state + cfg.n_heads
+    return {
+        "in_proj": cm.init_linear(k1, cfg.d_model, proj_out, dtype=dtype),
+        "conv_w": jax.random.normal(k2, (cfg.d_conv, cfg.conv_dim), dtype)
+        * float(1.0 / np.sqrt(cfg.d_conv)),
+        "conv_b": jnp.zeros((cfg.conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, cfg.n_heads).astype(dtype)),
+        "d_skip": jnp.ones((cfg.n_heads,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(k3, (cfg.n_heads,), dtype,
+                                       np.log(1e-3), np.log(1e-1))))),
+        "norm": cm.init_rmsnorm(d_in, dtype),
+        "out_proj": cm.init_linear(k4, d_in, cfg.d_model, dtype=dtype),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. xbc: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _segsum_decay(da_cs: jax.Array) -> jax.Array:
+    """Lower-triangular decay L[l, s] = exp(cumsum_l - cumsum_s), s <= l.
+
+    da_cs: (..., L, H) inclusive cumsum of dA within a chunk.
+    Returns (..., L, L, H).
+    """
+    diff = da_cs[..., :, None, :] - da_cs[..., None, :, :]
+    ll = da_cs.shape[-2]
+    tri = jnp.tril(jnp.ones((ll, ll), bool))
+    return jnp.where(tri[..., None], jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x: jax.Array, da: jax.Array, b_mat: jax.Array,
+                c_mat: jax.Array, chunk: int,
+                initial_state: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x:     (B, S, H, P)  inputs already scaled by dt
+    da:    (B, S, H)     A * dt  (negative)
+    b_mat: (B, S, G, N)  input projections
+    c_mat: (B, S, G, N)  output projections
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    def chunked(t, tail):
+        return t.reshape((bsz, nc, chunk) + tail)
+
+    xc = chunked(x, (h, p))
+    dac = chunked(da, (h,))
+    bc = chunked(b_mat, (g, n))
+    cc = chunked(c_mat, (g, n))
+
+    da_cs = jnp.cumsum(dac, axis=2)                      # (B,nc,L,H)
+    # --- intra-chunk (quadratic, the "attention-like" dual form)
+    decay = _segsum_decay(da_cs)                         # (B,nc,L,L,H)
+    cb = jnp.einsum("bclgn,bcsgn->bclsg", cc, bc)        # (B,nc,L,L,G)
+    cb = jnp.repeat(cb, rep, axis=-1)                    # groups -> heads
+    att = cb * decay
+    y_diag = jnp.einsum("bclsh,bcshp->bclhp", att, xc)
+
+    # --- chunk states
+    decay_states = jnp.exp(da_cs[:, :, -1:, :] - da_cs)  # (B,nc,L,H)
+    bex = jnp.repeat(bc, rep, axis=-2) if rep > 1 else bc  # (B,nc,L,H,N)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", bex, decay_states, xc)
+
+    # --- inter-chunk recurrence (linear scan over chunks)
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])            # (B,nc,H)
+    init = (jnp.zeros((bsz, h, p, n), x.dtype)
+            if initial_state is None else initial_state)
+
+    def step(carry, inp):
+        st, dk = inp
+        new = carry * dk[:, :, None, None] + st
+        return new, carry  # emit the state *entering* the chunk
+
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (B,nc,H,P,N)
+
+    # --- contribution of the incoming state to each position
+    state_decay = jnp.exp(da_cs)                         # (B,nc,L,H)
+    cex = jnp.repeat(cc, rep, axis=-2) if rep > 1 else cc
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", cex, prev_states,
+                       state_decay)
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final
+
+
+def apply_mamba2_train(params: dict, cfg: SSMConfig, u: jax.Array
+                       ) -> jax.Array:
+    """u: (B, S, D) -> (B, S, D)."""
+    bsz, s, _ = u.shape
+    h, p, n, g = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+    zxbcdt = cm.linear(params["in_proj"], u)
+    d_in = cfg.d_inner
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + cfg.conv_dim]
+    dt = zxbcdt[..., d_in + cfg.conv_dim:]
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    x = xbc[..., :d_in].reshape(bsz, s, h, p)
+    b_mat = xbc[..., d_in:d_in + g * n].reshape(bsz, s, g, n)
+    c_mat = xbc[..., d_in + g * n:].reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt + params["dt_bias"])         # (B,S,H)
+    a = -jnp.exp(params["a_log"])                        # (H,)
+    pad = -s % cfg.chunk
+    if pad:
+        x, dt = (jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+                 for t in (x, dt))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, _ = ssd_chunked(x * dt[..., None], dt * a, b_mat, c_mat, cfg.chunk)
+    y = y[:, :s]
+    y = y + params["d_skip"][:, None] * x[:, :s]
+    y = y.reshape(bsz, s, d_in)
+    y = cm.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return cm.linear(params["out_proj"], y)
+
+
+def init_mamba2_cache(cfg: SSMConfig, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                         dtype),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), dtype),
+    }
+
+
+def apply_mamba2_decode(params: dict, cfg: SSMConfig, u: jax.Array,
+                        cache: dict) -> tuple[jax.Array, dict]:
+    """One-token recurrent step. u: (B, 1, D)."""
+    bsz = u.shape[0]
+    h, p, n, g = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.n_groups
+    d_in = cfg.d_inner
+    zxbcdt = cm.linear(params["in_proj"], u[:, 0])
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + cfg.conv_dim]
+    dt = zxbcdt[..., d_in + cfg.conv_dim:]
+
+    # conv ring buffer
+    window = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
+    conv_out = (jnp.einsum("bkc,kc->bc", window, params["conv_w"])
+                + params["conv_b"])
+    xbc = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+
+    x = xbc[..., :d_in].reshape(bsz, h, p)
+    b_mat = xbc[..., d_in:d_in + g * n].reshape(bsz, g, n)
+    c_mat = xbc[..., d_in + g * n:].reshape(bsz, g, n)
+    rep = h // g
+    bex = jnp.repeat(b_mat, rep, axis=1) if rep > 1 else b_mat  # (B,H,N)
+    cex = jnp.repeat(c_mat, rep, axis=1) if rep > 1 else c_mat
+    dt = jax.nn.softplus(dt + params["dt_bias"])          # (B,H)
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt * a)                                  # (B,H)
+    state = (cache["ssm"] * da[..., None, None]
+             + jnp.einsum("bh,bhp,bhn->bhpn", dt, x, bex))
+    y = jnp.einsum("bhpn,bhn->bhp", state, cex)
+    y = y + params["d_skip"][:, None] * x
+    y = y.reshape(bsz, d_in)
+    y = cm.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = cm.linear(params["out_proj"], y)[:, None, :]
+    return out, {"ssm": state, "conv": new_conv}

@@ -1,0 +1,545 @@
+"""Generic LM assembly for the 10 assigned architectures.
+
+One ``ArchConfig`` describes any of the six families (dense / moe / ssm /
+hybrid / vlm / audio); ``LM`` assembles the corresponding stack:
+
+* layers are scanned with ``jax.lax.scan`` over stacked parameter pytrees
+  (essential: keeps HLO size and compile time flat in depth for the
+  production-scale dry runs);
+* ``apply_train`` runs the full-sequence path (training / prefill);
+* ``decode_step`` runs one token against preallocated caches (KV cache,
+  MLA latent cache, SSM recurrent state, sliding-window ring buffers);
+* VLM / audio frontends are stubs supplying correctly-shaped embeddings
+  (the sanctioned carve-out -- the backbone is what's assigned).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import moe as moelib
+from repro.models import ssm as ssmlib
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    vocab_size: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    rope_theta: float = 1e4
+    sliding_window: int = 0
+    norm_eps: float = 1e-5
+    mlp_kind: str = "swiglu"     # swiglu | gelu
+    # --- MoE
+    moe: moelib.MoEConfig | None = None
+    n_dense_layers: int = 0      # leading layers with a dense FFN
+    moe_every: int = 1           # 2 = alternate dense/MoE (llama4-style)
+    # --- MLA (deepseek)
+    mla: bool = False
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # --- SSM / hybrid
+    ssm: ssmlib.SSMConfig | None = None
+    attn_every: int = 0          # hybrid: shared attn block per N ssm layers
+    # --- enc-dec (audio)
+    n_encoder_layers: int = 0
+    encoder_seq: int = 1500      # whisper: 30 s of audio at 50 Hz
+    # --- vlm stub
+    n_patches: int = 0
+    source: str = ""
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 (Megatron-style) so the
+        embedding/lm_head shard over the model axis; unpadded vocab sizes
+        (e.g. whisper's 51865) otherwise force fully-replicated logits and
+        a ~200 GB/device CE loss at production scale."""
+        return -(-self.vocab_size // 256) * 256
+
+    def attn_config(self, causal: bool = True,
+                    sliding_window: int | None = None) -> attn.AttnConfig:
+        hd = self.head_dim or (self.d_model // max(self.n_heads, 1))
+        return attn.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=hd,
+            rope_theta=self.rope_theta, causal=causal,
+            sliding_window=(self.sliding_window if sliding_window is None
+                            else sliding_window),
+            mla=self.mla, kv_lora_rank=self.kv_lora_rank,
+            q_lora_rank=self.q_lora_rank, qk_rope_dim=self.qk_rope_dim,
+            qk_nope_dim=self.qk_nope_dim, v_head_dim=self.v_head_dim,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Single decoder layer (attention + FFN/MoE, pre-norm residual)
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, acfg, dtype):
+    return (attn.init_mla(key, acfg, dtype) if acfg.mla
+            else attn.init_gqa(key, acfg, dtype))
+
+
+def _init_ffn(key, cfg: ArchConfig, use_moe: bool, dtype):
+    if use_moe:
+        return moelib.init_moe(key, cfg.moe, dtype)
+    if cfg.mlp_kind == "gelu":
+        return cm.init_gelu_mlp(key, cfg.d_model, cfg.d_ff, dtype)
+    return cm.init_swiglu(key, cfg.d_model, cfg.d_ff, dtype)
+
+
+def init_decoder_layer(key: jax.Array, cfg: ArchConfig, use_moe: bool,
+                       cross: bool = False, dtype=jnp.float32) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    acfg = cfg.attn_config()
+    p = {
+        "ln_attn": cm.init_rmsnorm(cfg.d_model, dtype),
+        "attn": _init_attn(k1, acfg, dtype),
+        "ln_ffn": cm.init_rmsnorm(cfg.d_model, dtype),
+        "ffn": _init_ffn(k2, cfg, use_moe, dtype),
+    }
+    if cross:
+        p["ln_cross"] = cm.init_rmsnorm(cfg.d_model, dtype)
+        p["cross"] = attn.init_gqa(k3, cfg.attn_config(causal=False), dtype)
+    return p
+
+
+def _apply_ffn(p, cfg: ArchConfig, use_moe: bool, x):
+    if use_moe:
+        return moelib.apply_moe(p, cfg.moe, x)
+    y = (cm.gelu_mlp(p, x) if cfg.mlp_kind == "gelu" else cm.swiglu(p, x))
+    return y, {"lb_loss": jnp.zeros((), jnp.float32),
+               "router_entropy": jnp.zeros((), jnp.float32)}
+
+
+def apply_decoder_layer_train(p: dict, cfg: ArchConfig, use_moe: bool,
+                              x: jax.Array, enc: jax.Array | None = None
+                              ) -> tuple[jax.Array, dict]:
+    acfg = cfg.attn_config()
+    h = cm.rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+    if acfg.mla:
+        x = x + attn.apply_mla_train(p["attn"], acfg, h)
+    else:
+        x = x + attn.apply_gqa_train(p["attn"], acfg, h)
+    if enc is not None and "cross" in p:
+        h = cm.rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        x = x + attn.apply_gqa_train(p["cross"], cfg.attn_config(False), h,
+                                     kv_states=enc)
+    h = cm.rmsnorm(p["ln_ffn"], x, cfg.norm_eps)
+    y, aux = _apply_ffn(p["ffn"], cfg, use_moe, h)
+    return x + y, aux
+
+
+def apply_decoder_layer_decode(p: dict, cfg: ArchConfig, use_moe: bool,
+                               x: jax.Array, cache: dict, pos: jax.Array,
+                               enc: jax.Array | None = None
+                               ) -> tuple[jax.Array, dict]:
+    acfg = cfg.attn_config()
+    h = cm.rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+    if acfg.mla:
+        o, cache_sa = attn.apply_mla_decode(p["attn"], acfg, h,
+                                            cache["self"], pos)
+    else:
+        o, cache_sa = attn.apply_gqa_decode(p["attn"], acfg, h,
+                                            cache["self"], pos)
+    x = x + o
+    if enc is not None and "cross" in p:
+        h = cm.rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        o, _ = attn.apply_gqa_decode(p["cross"], cfg.attn_config(False), h,
+                                     {}, pos, kv_states=enc)
+        x = x + o
+    h = cm.rmsnorm(p["ln_ffn"], x, cfg.norm_eps)
+    y, _ = _apply_ffn(p["ffn"], cfg, use_moe, h)
+    return x + y, {"self": cache_sa}
+
+
+def init_layer_cache(cfg: ArchConfig, batch: int, max_len: int,
+                     dtype=jnp.float32) -> dict:
+    acfg = cfg.attn_config()
+    if acfg.mla:
+        return {"self": attn.init_mla_cache(acfg, batch, max_len, dtype)}
+    return {"self": attn.init_gqa_cache(acfg, batch, max_len, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# SSM / hybrid layers
+# ---------------------------------------------------------------------------
+
+def init_ssm_layer(key: jax.Array, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    return {
+        "ln": cm.init_rmsnorm(cfg.d_model, dtype),
+        "mixer": ssmlib.init_mamba2(key, cfg.ssm, dtype),
+    }
+
+
+def apply_ssm_layer_train(p: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    h = cm.rmsnorm(p["ln"], x, cfg.norm_eps)
+    return x + ssmlib.apply_mamba2_train(p["mixer"], cfg.ssm, h)
+
+
+def apply_ssm_layer_decode(p: dict, cfg: ArchConfig, x: jax.Array,
+                           cache: dict) -> tuple[jax.Array, dict]:
+    h = cm.rmsnorm(p["ln"], x, cfg.norm_eps)
+    o, cache = ssmlib.apply_mamba2_decode(p["mixer"], cfg.ssm, h, cache)
+    return x + o, cache
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+def _stack_init(init_fn, key, n):
+    keys = jax.random.split(key, max(n, 1))
+    return jax.vmap(init_fn)(keys) if n > 0 else None
+
+
+class LM:
+    """Decoder-only (or enc-dec) language model per ``ArchConfig``."""
+
+    def __init__(self, cfg: ArchConfig, dtype=jnp.float32,
+                 remat: bool = True):
+        self.cfg = cfg
+        self.dtype = dtype
+        # activation recomputation over the layer scan: required to fit
+        # full-sequence training at production scale (GraphCast-style
+        # gradient checkpointing; the paper instead buys memory via spatial
+        # parallelism -- we support both, see EXPERIMENTS.md SPerf).
+        self.remat = remat
+        if cfg.family == "hybrid":
+            assert cfg.attn_every and cfg.n_layers % cfg.attn_every == 0
+            self.n_units = cfg.n_layers // cfg.attn_every
+        else:
+            self.n_units = 0
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key: jax.Array) -> dict:
+        cfg, dt = self.cfg, self.dtype
+        kemb, klay, khead, kx, kenc = jax.random.split(key, 5)
+        params: dict = {
+            "embed": cm.init_embedding(kemb, cfg.padded_vocab, cfg.d_model,
+                                       dt),
+            "ln_out": cm.init_rmsnorm(cfg.d_model, dt),
+            "lm_head": cm.init_linear(khead, cfg.d_model, cfg.padded_vocab,
+                                      dtype=dt),
+        }
+        fam = cfg.family
+        if fam in ("dense", "vlm"):
+            params["layers"] = _stack_init(
+                lambda k: init_decoder_layer(k, cfg, False, dtype=dt),
+                klay, cfg.n_layers)
+        elif fam == "moe":
+            nd = cfg.n_dense_layers
+            if nd:
+                params["dense_layers"] = _stack_init(
+                    lambda k: init_decoder_layer(k, cfg, False, dtype=dt),
+                    kx, nd)
+            n_rest = cfg.n_layers - nd
+            if cfg.moe_every > 1:
+                # llama4-style interleave: each unit = (moe_every - 1) dense
+                # layers followed by one MoE layer.
+                assert n_rest % cfg.moe_every == 0
+                units = n_rest // cfg.moe_every
+                ku, kv = jax.random.split(klay)
+                params["unit_dense"] = _stack_init(
+                    lambda k: _stack_init(
+                        lambda kk: init_decoder_layer(kk, cfg, False,
+                                                      dtype=dt),
+                        k, cfg.moe_every - 1),
+                    ku, units)
+                params["layers"] = _stack_init(
+                    lambda k: init_decoder_layer(k, cfg, True, dtype=dt),
+                    kv, units)
+            else:
+                params["layers"] = _stack_init(
+                    lambda k: init_decoder_layer(k, cfg, True, dtype=dt),
+                    klay, n_rest)
+        elif fam == "ssm":
+            params["layers"] = _stack_init(
+                lambda k: init_ssm_layer(k, cfg, dtype=dt), klay,
+                cfg.n_layers)
+        elif fam == "hybrid":
+            params["layers"] = _stack_init(
+                lambda k: init_ssm_layer(k, cfg, dtype=dt), klay,
+                cfg.n_layers)
+            # Zamba2: one *shared* attention block reused across units.
+            params["shared_attn"] = init_decoder_layer(kx, cfg, False,
+                                                       dtype=dt)
+        elif fam == "audio":
+            params["layers"] = _stack_init(
+                lambda k: init_decoder_layer(k, cfg, False, cross=True,
+                                             dtype=dt),
+                klay, cfg.n_layers)
+            params["enc_layers"] = _stack_init(
+                lambda k: init_decoder_layer(k, cfg, False, dtype=dt),
+                kenc, cfg.n_encoder_layers)
+        else:
+            raise ValueError(fam)
+        return params
+
+    # -- embedding helpers ----------------------------------------------
+    def _embed_inputs(self, params: dict, tokens: jax.Array,
+                      patches: jax.Array | None = None) -> jax.Array:
+        x = cm.embed(params["embed"], tokens)
+        if self.cfg.family == "vlm" and patches is not None:
+            # anyres patch embeddings (projector output stub) are prepended
+            x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        return x
+
+    def _encode_audio(self, params: dict, frames: jax.Array) -> jax.Array:
+        """Whisper encoder over precomputed conv-frontend frames (stub)."""
+        ncfg = self.cfg
+        x = frames
+
+        def body2(x, p):
+            acfg = ncfg.attn_config(causal=False, sliding_window=0)
+            h = cm.rmsnorm(p["ln_attn"], x, ncfg.norm_eps)
+            x = x + attn.apply_gqa_train(p["attn"], acfg, h)
+            h = cm.rmsnorm(p["ln_ffn"], x, ncfg.norm_eps)
+            y, _ = _apply_ffn(p["ffn"], ncfg, False, h)
+            return x + y, None
+
+        x, _ = jax.lax.scan(lambda c, p: body2(c, p), x,
+                            params["enc_layers"])
+        return x
+
+    # -- full-sequence forward (training / prefill) ----------------------
+    def apply_train(self, params: dict, tokens: jax.Array,
+                    patches: jax.Array | None = None,
+                    enc_frames: jax.Array | None = None
+                    ) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        x = self._embed_inputs(params, tokens, patches)
+        aux0 = {"lb_loss": jnp.zeros((), jnp.float32),
+                "router_entropy": jnp.zeros((), jnp.float32)}
+        fam = cfg.family
+        ckpt = jax.checkpoint if self.remat else (lambda f: f)
+
+        if fam in ("dense", "vlm"):
+            def body(c, p):
+                y, aux = apply_decoder_layer_train(p, cfg, False, c)
+                return y, aux
+            x, auxs = jax.lax.scan(ckpt(body), x, params["layers"])
+            aux = jax.tree.map(lambda a: jnp.mean(a), auxs)
+        elif fam == "moe":
+            if "dense_layers" in params:
+                def bodyd(c, p):
+                    y, _ = apply_decoder_layer_train(p, cfg, False, c)
+                    return y, None
+                x, _ = jax.lax.scan(ckpt(bodyd), x, params["dense_layers"])
+
+            if cfg.moe_every > 1:
+                def unit(c, ps):
+                    pd, pm = ps
+
+                    def inner(ci, p):
+                        y, _ = apply_decoder_layer_train(p, cfg, False, ci)
+                        return y, None
+                    c, _ = jax.lax.scan(inner, c, pd)
+                    y, aux = apply_decoder_layer_train(pm, cfg, True, c)
+                    return y, aux
+                x, auxs = jax.lax.scan(ckpt(unit), x,
+                                       (params["unit_dense"],
+                                        params["layers"]))
+            else:
+                def bodym(c, p):
+                    y, aux = apply_decoder_layer_train(p, cfg, True, c)
+                    return y, aux
+                x, auxs = jax.lax.scan(ckpt(bodym), x, params["layers"])
+            aux = jax.tree.map(lambda a: jnp.mean(a), auxs)
+        elif fam == "ssm":
+            def body(c, p):
+                return apply_ssm_layer_train(p, cfg, c), None
+            x, _ = jax.lax.scan(ckpt(body), x, params["layers"])
+            aux = aux0
+        elif fam == "hybrid":
+            ae = cfg.attn_every
+            stacked = params["layers"]
+            # regroup: (n_units, attn_every, ...)
+            grouped = jax.tree.map(
+                lambda a: a.reshape((self.n_units, ae) + a.shape[1:]),
+                stacked)
+
+            def unit(c, unit_params):
+                def inner(ci, p):
+                    return apply_ssm_layer_train(p, cfg, ci), None
+                c, _ = jax.lax.scan(inner, c, unit_params)
+                c, _ = apply_decoder_layer_train(params["shared_attn"], cfg,
+                                                 False, c)
+                return c, None
+            x, _ = jax.lax.scan(ckpt(unit), x, grouped)
+            aux = aux0
+        elif fam == "audio":
+            enc = self._encode_audio(params, enc_frames)
+
+            def body(c, p):
+                y, aux = apply_decoder_layer_train(p, cfg, False, c, enc=enc)
+                return y, aux
+            x, _ = jax.lax.scan(ckpt(body), x, params["layers"])
+            aux = aux0
+        else:
+            raise ValueError(fam)
+
+        x = cm.rmsnorm(params["ln_out"], x, cfg.norm_eps)
+        logits = cm.linear(params["lm_head"], x)
+        return logits, aux
+
+    def loss(self, params: dict, batch: dict) -> tuple[jax.Array, dict]:
+        logits, aux = self.apply_train(
+            params, batch["tokens"], patches=batch.get("patches"),
+            enc_frames=batch.get("enc_frames"))
+        # next-token prediction on the text tokens only
+        s = batch["tokens"].shape[1]
+        logits_txt = logits[:, -s:]
+        ce = cm.cross_entropy_loss(logits_txt[:, :-1], batch["labels"][:, 1:])
+        loss = ce + 0.01 * aux["lb_loss"]
+        return loss, {"ce": ce, **aux}
+
+    # -- caches & decode ---------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg, dt = self.cfg, self.dtype
+        fam = cfg.family
+        if fam in ("dense", "vlm", "moe", "audio"):
+            per = lambda: init_layer_cache(cfg, batch, max_len, dt)
+
+            def stack(n):
+                return jax.tree.map(lambda *xs: jnp.stack(xs),
+                                    *[per() for _ in range(n)])
+
+            n_rest = cfg.n_layers - cfg.n_dense_layers
+            if fam == "moe" and cfg.moe_every > 1:
+                units = n_rest // cfg.moe_every
+                cache = {
+                    "layers": stack(units),
+                    "unit_dense": jax.tree.map(
+                        lambda *xs: jnp.stack(xs),
+                        *[stack(cfg.moe_every - 1) for _ in range(units)]),
+                }
+            else:
+                cache = {"layers": stack(n_rest if fam == "moe"
+                                         else cfg.n_layers)}
+            if fam == "moe" and cfg.n_dense_layers:
+                cache["dense_layers"] = stack(cfg.n_dense_layers)
+            return cache
+        if fam == "ssm":
+            per = lambda: ssmlib.init_mamba2_cache(cfg.ssm, batch, dt)
+            return {"layers": jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[per() for _ in range(cfg.n_layers)])}
+        if fam == "hybrid":
+            ssm_c = [ssmlib.init_mamba2_cache(cfg.ssm, batch, dt)
+                     for _ in range(cfg.n_layers)]
+            attn_c = [init_layer_cache(cfg, batch, max_len, dt)
+                      for _ in range(self.n_units)]
+            return {
+                "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *ssm_c),
+                "shared_attn": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                            *attn_c),
+            }
+        raise ValueError(fam)
+
+    def decode_step(self, params: dict, tokens: jax.Array, cache: dict,
+                    pos: jax.Array, enc_states: jax.Array | None = None
+                    ) -> tuple[jax.Array, dict]:
+        """tokens: (B, 1) -> logits (B, 1, V), updated cache."""
+        cfg = self.cfg
+        x = cm.embed(params["embed"], tokens)
+        fam = cfg.family
+
+        if fam in ("dense", "vlm", "moe", "audio"):
+            use_moe = fam == "moe"
+            if fam == "moe" and "dense_layers" in params:
+                def bodyd(c, pc):
+                    p, ca = pc
+                    y, ca2 = apply_decoder_layer_decode(p, cfg, False, c, ca,
+                                                        pos)
+                    return y, ca2
+                x, cd = jax.lax.scan(bodyd, x, (params["dense_layers"],
+                                                cache["dense_layers"]))
+            enc = enc_states if fam == "audio" else None
+
+            if fam == "moe" and cfg.moe_every > 1:
+                def unit(c, pc):
+                    pd, cdl, pm, cm_ = pc
+
+                    def inner(ci, pci):
+                        p, ca = pci
+                        return apply_decoder_layer_decode(p, cfg, False, ci,
+                                                          ca, pos)
+                    c, cdl2 = jax.lax.scan(inner, c, (pd, cdl))
+                    c, cm2 = apply_decoder_layer_decode(pm, cfg, True, c,
+                                                        cm_, pos)
+                    return c, (cdl2, cm2)
+                x, (cud, cl) = jax.lax.scan(
+                    unit, x, (params["unit_dense"], cache["unit_dense"],
+                              params["layers"], cache["layers"]))
+                new_cache = {"layers": cl, "unit_dense": cud}
+            else:
+                def body(c, pc):
+                    p, ca = pc
+                    y, ca2 = apply_decoder_layer_decode(p, cfg, use_moe, c,
+                                                        ca, pos, enc=enc)
+                    return y, ca2
+                x, cl = jax.lax.scan(body, x, (params["layers"],
+                                               cache["layers"]))
+                new_cache = {"layers": cl}
+            if fam == "moe" and "dense_layers" in params:
+                new_cache["dense_layers"] = cd
+        elif fam == "ssm":
+            def body(c, pc):
+                p, ca = pc
+                return apply_ssm_layer_decode(p, cfg, c, ca)
+            x, cl = jax.lax.scan(body, x, (params["layers"],
+                                           cache["layers"]))
+            new_cache = {"layers": cl}
+        elif fam == "hybrid":
+            ae = cfg.attn_every
+            grouped_p = jax.tree.map(
+                lambda a: a.reshape((self.n_units, ae) + a.shape[1:]),
+                params["layers"])
+            grouped_c = jax.tree.map(
+                lambda a: a.reshape((self.n_units, ae) + a.shape[1:]),
+                cache["layers"])
+
+            def unit(c, pc):
+                up, uc, ac = pc
+
+                def inner(ci, pci):
+                    p, ca = pci
+                    return apply_ssm_layer_decode(p, cfg, ci, ca)
+                c, uc2 = jax.lax.scan(inner, c, (up, uc))
+                c, ac2 = apply_decoder_layer_decode(params["shared_attn"],
+                                                    cfg, False, c, ac, pos)
+                return c, (uc2, ac2)
+            x, (uc2, ac2) = jax.lax.scan(
+                unit, x, (grouped_p, grouped_c, cache["shared_attn"]))
+            new_cache = {
+                "layers": jax.tree.map(
+                    lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), uc2),
+                "shared_attn": ac2,
+            }
+        else:
+            raise ValueError(fam)
+
+        x = cm.rmsnorm(params["ln_out"], x, cfg.norm_eps)
+        return cm.linear(params["lm_head"], x), new_cache
+
+    def param_count(self, params: dict) -> int:
+        return sum(int(np.prod(p.shape))
+                   for p in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,101 @@
+"""Adam optimizer (Kingma & Ba 2014; paper Table 3) over arbitrary pytrees.
+
+Implemented from scratch (no optax in the offline container).  Supports the
+paper's schedules: constant LR (pre-training stage 1) and halve-every-N
+(stage 2 / fine-tuning), plus global-norm gradient clipping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> Any:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    lr: float | Callable[[jax.Array], jax.Array] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float | None = None
+
+    def init(self, params: Any) -> dict:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+        }
+
+    def _lr(self, step: jax.Array) -> jax.Array:
+        if callable(self.lr):
+            return self.lr(step)
+        return jnp.asarray(self.lr, jnp.float32)
+
+    def update(self, params: Any, grads: Any, state: dict
+               ) -> tuple[Any, dict]:
+        if self.clip_norm is not None:
+            grads = clip_by_global_norm(grads, self.clip_norm)
+        step = state["step"] + 1
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, m, v):
+            mhat = m / c1
+            vhat = v / c2
+            new = (p.astype(jnp.float32)
+                   - lr * (mhat / (jnp.sqrt(vhat) + self.eps)
+                           + self.weight_decay * p.astype(jnp.float32)))
+            return new.astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, {"step": step, "mu": mu, "nu": nu}
+
+
+def constant_schedule(lr: float) -> Callable[[jax.Array], jax.Array]:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def halving_schedule(lr0: float, halve_every: int
+                     ) -> Callable[[jax.Array], jax.Array]:
+    """Paper Table 3: halve the LR every ``halve_every`` steps."""
+    def sched(step: jax.Array) -> jax.Array:
+        k = (step // halve_every).astype(jnp.float32)
+        return jnp.asarray(lr0, jnp.float32) * (0.5 ** k)
+    return sched
+
+
+def warmup_cosine_schedule(lr0: float, warmup: int, total: int,
+                           floor: float = 0.0
+                           ) -> Callable[[jax.Array], jax.Array]:
+    def sched(step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = lr0 * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (lr0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup, warm, cos)
+    return sched

@@ -1,0 +1,90 @@
+"""Sharding-aware checkpointing (paper G.3).
+
+Makani annotates every weight tensor with the communicator dimensions its
+gradient must be reduced over and the axes it is sharded along, so the
+degree of tensor parallelism can change across restore (e.g. going from a
+4-fold to a 16-fold spatial split between pre-training and fine-tuning).
+We reproduce that contract: a checkpoint is
+
+* ``arrays.npz``  -- every leaf, gathered to host, keyed by its tree path;
+* ``manifest.json`` -- per-leaf sharding annotation (PartitionSpec as a
+  list of axis names) + metadata (step, config digest).
+
+On restore, arrays are re-placed with ``jax.device_put`` against whatever
+mesh/sharding rules the *new* run supplies -- the stored annotations are
+advisory defaults, so parallelism degree may change freely.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any) -> dict[str, jax.Array]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(directory: str, step: int, params: Any,
+                    opt_state: Any | None = None,
+                    shardings: dict[str, list[str | None]] | None = None,
+                    extra: dict | None = None) -> str:
+    """Write ``{directory}/ckpt_{step:08d}/{arrays.npz, manifest.json}``."""
+    path = os.path.join(directory, f"ckpt_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    tree = {"params": params}
+    if opt_state is not None:
+        tree["opt_state"] = opt_state
+    flat = _flatten_with_paths(tree)
+    np.savez(os.path.join(path, "arrays.npz"),
+             **{k: np.asarray(v) for k, v in flat.items()})
+    manifest = {
+        "step": step,
+        "keys": sorted(flat),
+        "shardings": shardings or {},
+        "extra": extra or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
+
+
+def latest_checkpoint(directory: str) -> str | None:
+    if not os.path.isdir(directory):
+        return None
+    cands = sorted(d for d in os.listdir(directory) if d.startswith("ckpt_"))
+    return os.path.join(directory, cands[-1]) if cands else None
+
+
+def restore_checkpoint(path: str, template: Any,
+                       placer: Callable[[str, np.ndarray], jax.Array]
+                       | None = None) -> tuple[Any, dict]:
+    """Restore into the structure of ``template``.
+
+    ``placer(key, array)`` lets the caller device_put each leaf with its own
+    (possibly different-degree) sharding; default is plain host arrays.
+    """
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat_t:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = data[key]
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(placer(key, arr) if placer else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest

@@ -1,0 +1,189 @@
+"""Tests for CRPS estimators (D.4/E.1) and evaluation metrics (D.1-D.3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import crps as crpslib
+from repro.core.sphere import grids, sht
+from repro.evaluation import metrics
+
+
+def brute_force_crps(ens: np.ndarray, obs: float, n_grid: int = 20001) -> float:
+    """Direct numerical evaluation of the CDF integral, eq. (42)."""
+    lo = min(ens.min(), obs) - 1.0
+    hi = max(ens.max(), obs) + 1.0
+    u = np.linspace(lo, hi, n_grid)
+    f = (ens[:, None] <= u[None, :]).mean(axis=0)
+    ind = (obs <= u).astype(float)
+    return float(np.trapezoid((f - ind) ** 2, u))
+
+
+class TestCRPSEstimators:
+    @settings(max_examples=25, deadline=None)
+    @given(e=st.integers(2, 9), seed=st.integers(0, 10_000))
+    def test_pairwise_matches_cdf_integral(self, e, seed):
+        rng = np.random.default_rng(seed)
+        ens = rng.normal(size=(e,))
+        obs = rng.normal()
+        got = float(crpslib.crps_pairwise(jnp.asarray(ens), jnp.asarray(obs)))
+        ref = brute_force_crps(ens, obs)
+        np.testing.assert_allclose(got, ref, atol=2e-3)
+
+    @settings(max_examples=25, deadline=None)
+    @given(e=st.integers(2, 16), seed=st.integers(0, 10_000))
+    def test_sorted_equals_pairwise(self, e, seed):
+        rng = np.random.default_rng(seed)
+        ens = jnp.asarray(rng.normal(size=(e, 3, 4)))
+        obs = jnp.asarray(rng.normal(size=(3, 4)))
+        a = crpslib.crps_pairwise(ens, obs)
+        b = crpslib.crps_sorted(ens, obs)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+    def test_single_member_reduces_to_mae(self):
+        # Paper eq. (43).
+        ens = jnp.asarray([1.5])
+        obs = jnp.asarray(0.25)
+        got = float(crpslib.crps_pairwise(ens, obs))
+        np.testing.assert_allclose(got, 1.25)
+
+    def test_fair_crps_unbiased_in_ensemble_size(self):
+        # For iid members, E[fair CRPS] is independent of E; the biased
+        # version shrinks with E. Check against a huge-ensemble reference.
+        rng = np.random.default_rng(0)
+        obs = jnp.asarray(rng.normal(size=(4096,)))
+        ref_ens = jnp.asarray(rng.normal(size=(512, 4096)))
+        ref = float(crpslib.crps_fair(ref_ens, obs).mean())
+        small = jnp.asarray(rng.normal(size=(3, 4096)))
+        fair = float(crpslib.crps_fair(small, obs).mean())
+        biased = float(crpslib.crps_pairwise(small, obs).mean())
+        assert abs(fair - ref) < 0.02
+        assert biased > fair + 0.05  # biased under-credits spread
+
+    def test_fair_crps_ambiguity_property(self):
+        # Paper E.1: if u_1 == obs, fair CRPS is 0 irrespective of u_2 --
+        # the pathology motivating the biased-CRPS pre-training stage.
+        obs = jnp.asarray(0.7)
+        ens = jnp.asarray([0.7, 123.0])
+        assert abs(float(crpslib.crps_fair(ens, obs))) < 1e-5
+        assert float(crpslib.crps_pairwise(ens, obs)) > 1.0
+
+    def test_proper_scoring_minimized_by_true_distribution(self):
+        # Ensembles drawn from the target distribution score better (in
+        # expectation) than shifted/over-dispersed ones.
+        rng = np.random.default_rng(1)
+        obs = jnp.asarray(rng.normal(size=(8192,)))
+        good = jnp.asarray(rng.normal(size=(8, 8192)))
+        shifted = good + 1.0
+        wide = good * 3.0
+        s_good = float(crpslib.crps_fair(good, obs).mean())
+        assert s_good < float(crpslib.crps_fair(shifted, obs).mean())
+        assert s_good < float(crpslib.crps_fair(wide, obs).mean())
+
+
+class TestFCN3Objective:
+    def setup_method(self):
+        self.g = grids.make_grid(16, 32, "gauss")
+        self.t = sht.SHT.create(self.g)
+        self.aw = jnp.asarray(self.g.area_weights_2d())
+        self.wpct = self.t.buffers()["wpct"]
+
+    def test_objective_shapes_and_positivity(self):
+        key = jax.random.PRNGKey(0)
+        ens = jax.random.normal(key, (4, 2, 3, 16, 32))
+        obs = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 16, 32))
+        cw = jnp.ones((3,))
+        loss, aux = crpslib.fcn3_objective(ens, obs, self.aw, self.wpct, cw)
+        assert loss.shape == ()
+        assert float(loss) > 0
+        assert float(aux["nodal"]) > 0 and float(aux["spectral"]) > 0
+
+    def test_perfect_ensemble_scores_near_zero(self):
+        obs = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 16, 32))
+        ens = jnp.broadcast_to(obs, (4,) + obs.shape)
+        loss, _ = crpslib.fcn3_objective(ens, obs, self.aw, self.wpct,
+                                         jnp.ones((2,)))
+        assert float(loss) < 1e-6
+
+    def test_spectral_term_detects_scrambled_members(self):
+        # The CRPS-shuffling pathology (paper S2): spatially shuffling
+        # ensemble members point-wise preserves the nodal CRPS but destroys
+        # spatial correlations -> the spectral term must increase.
+        key = jax.random.PRNGKey(3)
+        base = jax.random.normal(key, (8, 1, 1, 16, 32))
+        # smooth the members so they have spatial correlation
+        smooth = self.t.inverse(
+            self.t.forward(base)
+            * jnp.exp(-0.6 * jnp.arange(self.t.lmax))[:, None])
+        obs = smooth[0]
+        ens = smooth[1:]
+        # shuffle: at each spatial point, permute members independently
+        flat = np.asarray(ens).reshape(7, -1)
+        rng = np.random.default_rng(0)
+        shuf = flat.copy()
+        for j in range(flat.shape[1]):
+            shuf[:, j] = rng.permutation(flat[:, j])
+        ens_shuf = jnp.asarray(shuf.reshape(ens.shape))
+        nodal_a = float(crpslib.nodal_crps_loss(ens, obs, self.aw).mean())
+        nodal_b = float(crpslib.nodal_crps_loss(ens_shuf, obs, self.aw).mean())
+        spec_a = float(crpslib.spectral_crps_loss(ens, obs, self.wpct).mean())
+        spec_b = float(crpslib.spectral_crps_loss(ens_shuf, obs, self.wpct).mean())
+        np.testing.assert_allclose(nodal_a, nodal_b, rtol=1e-4)  # blind
+        assert spec_b > 1.5 * spec_a  # spectral term catches it
+
+
+class TestMetrics:
+    def setup_method(self):
+        self.g = grids.make_grid(24, 48, "gauss")
+        self.aw = jnp.asarray(self.g.area_weights_2d())
+
+    def test_rmse_zero_for_identical(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (24, 48))
+        assert float(metrics.rmse(x, x, self.aw)) == 0.0
+
+    def test_rmse_constant_offset(self):
+        x = jnp.zeros((24, 48))
+        np.testing.assert_allclose(float(metrics.rmse(x + 2.0, x, self.aw)),
+                                   2.0, rtol=1e-6)
+
+    def test_acc_bounds_and_sign(self):
+        key = jax.random.PRNGKey(1)
+        t = jax.random.normal(key, (24, 48))
+        clim = jnp.zeros_like(t)
+        np.testing.assert_allclose(float(metrics.acc(t, t, clim, self.aw)),
+                                   1.0, atol=1e-5)
+        np.testing.assert_allclose(float(metrics.acc(-t, t, clim, self.aw)),
+                                   -1.0, atol=1e-5)
+
+    def test_spread_skill_calibrated_ensemble(self):
+        # obs interchangeable with members => SSR ~= 1.
+        key = jax.random.PRNGKey(2)
+        ens = jax.random.normal(key, (16, 64, 24, 48))
+        obs = jax.random.normal(jax.random.PRNGKey(3), (64, 24, 48))
+        ssr = float(metrics.spread_skill_ratio(ens, obs, self.aw).mean())
+        assert 0.9 < ssr < 1.1, ssr
+
+    def test_rank_histogram_flat_for_calibrated(self):
+        key = jax.random.PRNGKey(4)
+        ens = jax.random.normal(key, (9, 128, 24, 48))
+        obs = jax.random.normal(jax.random.PRNGKey(5), (128, 24, 48))
+        h = np.asarray(metrics.rank_histogram(ens, obs, self.aw))
+        np.testing.assert_allclose(h.sum(), 1.0, rtol=1e-5)
+        np.testing.assert_allclose(h, 1.0 / 10, atol=0.02)
+
+    def test_rank_histogram_detects_underdispersion(self):
+        key = jax.random.PRNGKey(6)
+        ens = 0.2 * jax.random.normal(key, (9, 64, 24, 48))
+        obs = jax.random.normal(jax.random.PRNGKey(7), (64, 24, 48))
+        h = np.asarray(metrics.rank_histogram(ens, obs, self.aw))
+        assert h[0] + h[-1] > 0.5  # U-shape: obs falls outside the ensemble
+
+    def test_angular_psd_parseval(self):
+        t = sht.SHT.create(self.g)
+        x = jax.random.normal(jax.random.PRNGKey(8), (24, 48))
+        xb = t.inverse(t.forward(x))
+        psd = np.asarray(metrics.angular_psd(xb, t.buffers()["wpct"]))
+        integ = grids.quad_integrate(self.g, np.asarray(xb) ** 2)
+        np.testing.assert_allclose(psd.sum(), integ, rtol=1e-4)

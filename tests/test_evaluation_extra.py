@@ -1,0 +1,66 @@
+"""Extra evaluation coverage: zonal PSD (paper eq. 54 / Fig. 24), bias
+fields (eq. 52), and the online scoring accumulator used by
+repro.launch.evaluate (paper G.4 in-situ scoring)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sphere import grids, sht
+from repro.evaluation import metrics
+from repro.launch.evaluate import OnlineScores
+
+
+class TestZonalPSD:
+    def test_single_mode_peak(self):
+        # a pure e^{i m phi} wave on one ring concentrates power at m.
+        g = grids.make_grid(16, 64, "gauss")
+        m0 = 5
+        x = jnp.cos(m0 * jnp.asarray(g.lons))[None, :] * jnp.ones((16, 1))
+        psd = np.asarray(metrics.zonal_psd(x, lat_index=8,
+                                           colat=g.colat[8]))
+        assert psd.argmax() == m0
+        others = np.delete(psd, m0)
+        assert psd[m0] > 100 * others.max()
+
+    def test_parseval_like_scaling(self):
+        # doubling the amplitude quadruples the zonal PSD.
+        g = grids.make_grid(8, 32, "gauss")
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 32))
+        p1 = np.asarray(metrics.zonal_psd(x, 4, g.colat[4]))
+        p2 = np.asarray(metrics.zonal_psd(2.0 * x, 4, g.colat[4]))
+        np.testing.assert_allclose(p2, 4.0 * p1, rtol=1e-5)
+
+
+class TestBias:
+    def test_unbiased_ensemble_small_bias(self):
+        key = jax.random.PRNGKey(0)
+        truth = jax.random.normal(key, (8, 16))
+        ens = truth[None] + 0.1 * jax.random.normal(jax.random.PRNGKey(1),
+                                                    (256, 8, 16))
+        b = np.asarray(metrics.bias(ens, truth))
+        assert np.abs(b).mean() < 0.02
+
+    def test_shifted_ensemble_detected(self):
+        truth = jnp.zeros((4, 8))
+        ens = jnp.ones((16, 4, 8)) * 0.5
+        np.testing.assert_allclose(np.asarray(metrics.bias(ens, truth)), 0.5)
+
+
+class TestOnlineScores:
+    def test_streaming_means(self):
+        acc = OnlineScores(n_members=4)
+        acc.update({"crps": np.asarray([1.0, 2.0])},
+                   np.asarray([1, 0, 0, 0, 0.0]))
+        acc.update({"crps": np.asarray([3.0, 4.0])},
+                   np.asarray([0, 1, 0, 0, 0.0]))
+        m = acc.means()
+        np.testing.assert_allclose(m["crps"], [2.0, 3.0])
+        np.testing.assert_allclose(m["rank_hist"],
+                                   [0.5, 0.5, 0, 0, 0])
+        np.testing.assert_allclose(m["rank_hist"].sum(), 1.0)
+
+    def test_empty_accumulator_safe(self):
+        acc = OnlineScores(n_members=2)
+        m = acc.means()
+        assert m["rank_hist"].shape == (3,)

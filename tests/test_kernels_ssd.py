@@ -1,0 +1,116 @@
+"""Validation of the Mamba-2 SSD Pallas kernel against oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ssd.ssd import ssd_intra_chunk
+from repro.kernels.ssd.ref import ssd_intra_chunk_ref
+from repro.kernels.ssd.ops import ssd_chunked_pallas
+from repro.models import ssm
+
+
+def _rand(rng, shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+class TestSSDIntraKernel:
+    @pytest.mark.parametrize("shape", [
+        # (BC, L, H, P, G, N)
+        (2, 16, 4, 8, 1, 16),
+        (3, 32, 6, 16, 2, 8),
+        (1, 8, 2, 4, 2, 4),
+        (4, 128, 8, 64, 1, 128),   # production tile sizes
+    ])
+    def test_matches_oracle(self, shape):
+        bc, l, h, p, g, n = shape
+        rng = np.random.default_rng(hash(shape) % 2**31)
+        x = _rand(rng, (bc, l, h, p))
+        da = -jnp.abs(_rand(rng, (bc, l, h))) * 0.1
+        da_cs = jnp.cumsum(da, axis=1)
+        b = _rand(rng, (bc, l, g, n))
+        c = _rand(rng, (bc, l, g, n))
+        y, st = ssd_intra_chunk(x, da_cs, b, c, n_groups=g)
+        yr, str_ = ssd_intra_chunk_ref(x, da_cs, b, c)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(st), np.asarray(str_),
+                                   atol=1e-4, rtol=1e-4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(bc=st.integers(1, 3), lp=st.integers(2, 5), h=st.integers(1, 4),
+           seed=st.integers(0, 2**31 - 1))
+    def test_property_sweep(self, bc, lp, h, seed):
+        l = 2 ** lp
+        rng = np.random.default_rng(seed)
+        p, n = 8, 8
+        x = _rand(rng, (bc, l, h, p))
+        da_cs = jnp.cumsum(-jnp.abs(_rand(rng, (bc, l, h))) * 0.2, axis=1)
+        b = _rand(rng, (bc, l, h, n))
+        c = _rand(rng, (bc, l, h, n))
+        y, st_ = ssd_intra_chunk(x, da_cs, b, c, n_groups=h)
+        yr, sr = ssd_intra_chunk_ref(x, da_cs, b, c)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-3)
+        np.testing.assert_allclose(np.asarray(st_), np.asarray(sr),
+                                   atol=1e-3)
+
+
+class TestSSDChunkedPallas:
+    def test_matches_xla_ssd_chunked(self):
+        rng = np.random.default_rng(0)
+        bsz, s, h, p, g, n, chunk = 2, 64, 4, 16, 2, 8, 16
+        x = _rand(rng, (bsz, s, h, p))
+        dt = jnp.abs(_rand(rng, (bsz, s, h))) * 0.1
+        da = -dt
+        b = _rand(rng, (bsz, s, g, n))
+        c = _rand(rng, (bsz, s, g, n))
+        y_ref, f_ref = ssm.ssd_chunked(x, da, b, c, chunk)
+        y_pal, f_pal = ssd_chunked_pallas(x, da, b, c, chunk)
+        np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(f_pal), np.asarray(f_ref),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_matches_recurrent_decode(self):
+        # End-to-end: Pallas chunked scan == token-by-token recurrence.
+        cfg = ssm.SSMConfig(d_model=32, d_state=8, head_dim=8, expand=2,
+                            n_groups=1, chunk=8)
+        key = jax.random.PRNGKey(0)
+        params = ssm.init_mamba2(key, cfg)
+        u = jax.random.normal(key, (1, 24, 32))
+
+        # monkeypatch-free: rebuild the train path with the Pallas scan
+        import repro.models.common as cm
+        bsz, s = u.shape[:2]
+        h_, p_, n_, g_ = (cfg.n_heads, cfg.head_dim, cfg.d_state,
+                          cfg.n_groups)
+        zxbcdt = cm.linear(params["in_proj"], u)
+        d_in = cfg.d_inner
+        z = zxbcdt[..., :d_in]
+        xbc = jax.nn.silu(ssm._causal_conv(
+            zxbcdt[..., d_in:d_in + cfg.conv_dim], params["conv_w"],
+            params["conv_b"]))
+        dtv = jax.nn.softplus(
+            zxbcdt[..., d_in + cfg.conv_dim:] + params["dt_bias"])
+        xv = xbc[..., :d_in].reshape(bsz, s, h_, p_)
+        bm = xbc[..., d_in:d_in + g_ * n_].reshape(bsz, s, g_, n_)
+        cmat = xbc[..., d_in + g_ * n_:].reshape(bsz, s, g_, n_)
+        a = -jnp.exp(params["a_log"])
+        y, _ = ssd_chunked_pallas(xv * dtv[..., None], dtv * a, bm, cmat,
+                                  cfg.chunk)
+        y = y + params["d_skip"][:, None] * xv
+        y = cm.rmsnorm(params["norm"], y.reshape(bsz, s, d_in)
+                       * jax.nn.silu(z))
+        out_pallas = cm.linear(params["out_proj"], y)
+
+        cache = ssm.init_mamba2_cache(cfg, 1)
+        outs = []
+        for t in range(24):
+            o, cache = ssm.apply_mamba2_decode(params, cfg, u[:, t:t + 1],
+                                               cache)
+            outs.append(o)
+        out_rec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(out_pallas),
+                                   np.asarray(out_rec), atol=2e-5)

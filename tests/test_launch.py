@@ -1,0 +1,117 @@
+"""Tests for input-shape specs, roofline parsing and mesh construction."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import archs, shapes
+from repro.launch import roofline as roof
+
+
+class TestInputSpecs:
+    def test_train_specs_all_archs(self):
+        sh = shapes.INPUT_SHAPES["train_4k"]
+        for name in archs.ARCHS:
+            cfg = shapes.adapt_arch_for_shape(archs.get_arch(name), sh)
+            specs = shapes.input_specs(cfg, sh)
+            assert specs["tokens"].dtype == jnp.int32
+            total = specs["tokens"].shape[1] + (
+                cfg.n_patches if cfg.family == "vlm" else 0)
+            assert total == sh.seq_len
+            assert specs["tokens"].shape[0] == sh.global_batch
+
+    def test_decode_specs_have_caches(self):
+        sh = shapes.INPUT_SHAPES["decode_32k"]
+        for name in ["yi-6b", "deepseek-v2-236b", "mamba2-130m",
+                     "zamba2-2.7b"]:
+            cfg = shapes.adapt_arch_for_shape(archs.get_arch(name), sh)
+            specs = shapes.input_specs(cfg, sh)
+            assert specs["tokens"].shape == (sh.global_batch, 1)
+            leaves = jax.tree_util.tree_leaves(specs["cache"])
+            assert leaves, name
+            # caches are ShapeDtypeStructs, not arrays (no allocation)
+            assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+
+    def test_mla_cache_is_latent_not_per_head(self):
+        # MLA's point: cache r + d_rope per token, not 2*H*D.
+        sh = shapes.INPUT_SHAPES["decode_32k"]
+        cfg = archs.get_arch("deepseek-v2-236b")
+        specs = shapes.input_specs(cfg, sh)
+        c = specs["cache"]["layers"]["self"]
+        assert c["c_kv"].shape[-1] == 512
+        assert c["k_rope"].shape[-1] == 64
+        latent_bytes = np.prod(c["c_kv"].shape) + np.prod(c["k_rope"].shape)
+        naive = (cfg.n_layers - 1) * sh.global_batch * sh.seq_len \
+            * 2 * cfg.n_heads * 128
+        assert latent_bytes < naive / 40  # >40x cache compression
+
+    def test_long_500k_switches_to_sliding_window(self):
+        sh = shapes.INPUT_SHAPES["long_500k"]
+        dense = shapes.adapt_arch_for_shape(archs.get_arch("yi-6b"), sh)
+        assert dense.sliding_window == shapes.SLIDING_WINDOW_LONG
+        # cache allocates only the window, not 500k
+        specs = shapes.input_specs(dense, sh)
+        assert specs["cache"]["layers"]["self"]["k"].shape[-3] \
+            == shapes.SLIDING_WINDOW_LONG
+        ssm = shapes.adapt_arch_for_shape(archs.get_arch("mamba2-130m"), sh)
+        assert ssm.sliding_window == 0  # natively sub-quadratic
+        sp = shapes.input_specs(ssm, sh)
+        assert sp["cache"]["layers"]["ssm"].shape[-1] == 128  # O(1) state
+
+    def test_all_40_combos_enumerate(self):
+        combos = [(a, s) for a in archs.ARCHS for s in shapes.INPUT_SHAPES]
+        assert len(combos) == 40
+
+
+class TestRooflineParsing:
+    HLO = """
+  %ag = f32[8,128]{1,0} all-gather(f32[1,128] %x), replica_groups={}
+  %ar.1 = bf16[64]{0} all-reduce(bf16[64] %y), to_apply=%add
+  %rs = f32[2,4]{1,0} reduce-scatter(f32[16,4] %z), dimensions={0}
+  %a2a-start = (f32[128]{0}, f32[128]{0}) all-to-all-start(f32[128] %w)
+  %cp = u32[10]{0} collective-permute(u32[10] %v), source_target_pairs={}
+  %notacoll = f32[9999]{0} add(f32[9999] %a, f32[9999] %b)
+"""
+
+    def test_collective_bytes(self):
+        out = roof.collective_bytes(self.HLO)
+        assert out["all-gather"] == 8 * 128 * 4
+        assert out["all-reduce"] == 64 * 2
+        assert out["reduce-scatter"] == 2 * 4 * 4
+        assert out["all-to-all"] == 2 * 128 * 4  # tuple output
+        assert out["collective-permute"] == 10 * 4
+
+    def test_shape_bytes_tuple_and_scalar(self):
+        assert roof._shape_bytes("f32[2,3]") == 24
+        assert roof._shape_bytes("(bf16[4], s32[2,2])") == 8 + 16
+        assert roof._shape_bytes("pred[8]") == 8
+
+    def test_roofline_terms_and_bottleneck(self):
+        rl = roof.Roofline(
+            name="x", chips=256, flops_per_device=197e12,
+            hbm_bytes_per_device=819e9 * 2,
+            collective_bytes_per_device=50e9 * 0.5,
+            coll_breakdown={}, peak_memory_per_device=0.0,
+            model_flops=197e12 * 256 * 0.25)
+        np.testing.assert_allclose(rl.t_compute, 1.0)
+        np.testing.assert_allclose(rl.t_memory, 2.0)
+        np.testing.assert_allclose(rl.t_collective, 0.5)
+        assert rl.bottleneck == "memory"
+        np.testing.assert_allclose(rl.step_time_bound, 2.0)
+        np.testing.assert_allclose(rl.mfu_bound, 0.125)
+
+    def test_model_flops_conventions(self):
+        assert roof.model_flops_train(1e9, 1e6) == 6e15
+        assert roof.model_flops_decode(1e9, 128) == 2.56e11
+
+
+class TestMesh:
+    def test_mesh_shapes(self):
+        # only checks the static description; building needs 512 devices
+        # (exercised by repro.launch.dryrun / smoketest subprocesses).
+        from repro.launch import mesh as meshlib
+        import inspect
+        src = inspect.getsource(meshlib.make_production_mesh)
+        assert "(2, 16, 16)" in src and "(16, 16)" in src
+        assert '"pod", "data", "model"' in src

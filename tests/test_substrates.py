@@ -1,0 +1,198 @@
+"""Tests for optimizer, data pipeline, checkpointing and the trainer."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import fcn3 as fcn3cfg
+from repro.core.fcn3 import FCN3
+from repro.data import era5_synthetic as dlib
+from repro.optim import adam as adamlib
+from repro.train import checkpoint as ckpt
+from repro.train import trainer as trlib
+
+
+class TestAdam:
+    def test_quadratic_convergence(self):
+        opt = adamlib.Adam(lr=0.1)
+        params = {"w": jnp.asarray([5.0, -3.0])}
+        state = opt.init(params)
+        for _ in range(200):
+            grads = jax.tree.map(lambda p: 2 * p, params)  # d/dp p^2
+            params, state = opt.update(params, grads, state)
+        assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+    def test_halving_schedule(self):
+        s = adamlib.halving_schedule(1.0, 10)
+        assert float(s(jnp.asarray(5))) == 1.0
+        assert float(s(jnp.asarray(10))) == 0.5
+        assert float(s(jnp.asarray(25))) == 0.25
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+        c = adamlib.clip_by_global_norm(g, 1.0)
+        np.testing.assert_allclose(float(adamlib.global_norm(c)), 1.0,
+                                   rtol=1e-5)
+
+    def test_matches_reference_adam_one_step(self):
+        # hand-computed first Adam step: delta = lr * g/|g| (bias-corrected)
+        opt = adamlib.Adam(lr=0.5, eps=0.0)
+        p = {"w": jnp.asarray([1.0])}
+        s = opt.init(p)
+        p2, _ = opt.update(p, {"w": jnp.asarray([0.3])}, s)
+        np.testing.assert_allclose(np.asarray(p2["w"]), [0.5], atol=1e-4)
+
+
+class TestSyntheticData:
+    def setup_method(self):
+        self.cfg = fcn3cfg.fcn3_smoke()
+        self.ds = dlib.SyntheticERA5(self.cfg)
+
+    def test_deterministic(self):
+        a = self.ds.state(7)
+        b = self.ds.state(7)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+        c = self.ds.state(8)
+        assert float(jnp.abs(a - c).max()) > 1e-3
+
+    def test_shapes_and_water_positive(self):
+        x = self.ds.state(0)
+        assert x.shape == (self.cfg.n_state, self.cfg.nlat, self.cfg.nlon)
+        w = self.cfg.water_channel_indices()
+        assert float(x[w].min()) >= 0.0
+
+    def test_temporal_persistence(self):
+        # AR(1): consecutive steps correlate strongly, distant ones less.
+        x0 = np.asarray(self.ds.state(3, 0)).ravel()
+        x1 = np.asarray(self.ds.state(3, 1)).ravel()
+        x9 = np.asarray(self.ds.state(3, 9)).ravel()
+        c1 = np.corrcoef(x0, x1)[0, 1]
+        c9 = np.corrcoef(x0, x9)[0, 1]
+        assert c1 > 0.85 and c9 < c1 - 0.15
+
+    def test_red_spectrum(self):
+        # synoptic peak + power-law decay: high-l power << low-l power.
+        from repro.core.sphere import sht as shtlib
+        t = self.ds.sht
+        psd = np.asarray(shtlib.spectrum(t.forward(self.ds.state(1)[0])))
+        assert psd[2:6].mean() > 30 * psd[-4:].mean()
+
+    def test_zenith_angle_bounds_and_cycle(self):
+        cz0 = dlib.cos_zenith_angle(self.ds.grid.colat, self.ds.grid.lons,
+                                    0.0)
+        cz12 = dlib.cos_zenith_angle(self.ds.grid.colat, self.ds.grid.lons,
+                                     12.0)
+        assert cz0.min() >= 0.0 and cz0.max() <= 1.0
+        assert float(np.abs(cz0 - cz12).max()) > 0.3  # day/night shift
+
+    def test_sharded_loader_partitions_batch(self):
+        full = dlib.Loader(self.ds, global_batch=4, rank=0, world=1)
+        r0 = dlib.Loader(self.ds, global_batch=4, rank=0, world=2)
+        r1 = dlib.Loader(self.ds, global_batch=4, rank=1, world=2)
+        bf = next(iter(full))
+        b0 = next(iter(r0))
+        b1 = next(iter(r1))
+        np.testing.assert_allclose(np.asarray(bf["state"][:2]),
+                                   np.asarray(b0["state"]))
+        np.testing.assert_allclose(np.asarray(bf["state"][2:]),
+                                   np.asarray(b1["state"]))
+
+    def test_lat_sharded_loader(self):
+        l0 = dlib.Loader(self.ds, global_batch=2, lat_shard=(0, 2))
+        b = next(iter(l0))
+        assert b["state"].shape[-2] == self.cfg.nlat // 2
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_manifest(self, tmp_path):
+        params = {"layers": [{"w": jnp.arange(6.0).reshape(2, 3)}],
+                  "scale": jnp.asarray(2.0)}
+        opt = adamlib.Adam()
+        state = opt.init(params)
+        path = ckpt.save_checkpoint(
+            str(tmp_path), 42, params, state,
+            shardings={"params/layers/0/w": [None, "model"]})
+        assert ckpt.latest_checkpoint(str(tmp_path)) == path
+        template = jax.tree.map(jnp.zeros_like,
+                                {"params": params, "opt_state": state})
+        restored, manifest = ckpt.restore_checkpoint(path, template)
+        assert manifest["step"] == 42
+        np.testing.assert_allclose(
+            np.asarray(restored["params"]["layers"][0]["w"]),
+            np.arange(6.0).reshape(2, 3))
+        assert manifest["shardings"]["params/layers/0/w"] == [None, "model"]
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        params = {"w": jnp.zeros((2, 2))}
+        path = ckpt.save_checkpoint(str(tmp_path), 0, params)
+        bad = {"params": {"w": jnp.zeros((3, 3))}}
+        with pytest.raises(ValueError):
+            ckpt.restore_checkpoint(path, bad)
+
+
+class TestEnsembleTrainer:
+    def setup_method(self):
+        self.cfg = fcn3cfg.fcn3_smoke()
+        self.model = FCN3(self.cfg)
+        self.ds = dlib.SyntheticERA5(self.cfg)
+        self.cw = fcn3cfg.channel_weights(self.cfg.n_levels)
+
+    def _batch(self, rollout=1, batch=1):
+        loader = dlib.Loader(self.ds, global_batch=batch, rollout=rollout)
+        return next(iter(loader))
+
+    def test_loss_decreases_over_steps(self):
+        tcfg = trlib.TrainConfig(ensemble_size=2, rollout_steps=1, lr=2e-3)
+        tr = trlib.EnsembleTrainer(self.model, tcfg, self.cw)
+        buffers = self.model.make_buffers()
+        batch = self._batch()
+        params = self.model.init_calibrated(
+            jax.random.PRNGKey(0), batch["state"],
+            jnp.concatenate([batch["aux"][:, 0],
+                             self.model.sample_noise(jax.random.PRNGKey(1),
+                                                     (1,))], axis=1),
+            buffers)
+        opt_state = tr.optimizer.init(params)
+        step = jax.jit(tr.make_train_step(buffers))
+        losses = []
+        for i in range(8):
+            params, opt_state, aux = step(params, opt_state, batch,
+                                          jax.random.PRNGKey(i))
+            losses.append(float(aux["loss"]))
+            assert np.isfinite(losses[-1])
+        assert losses[-1] < losses[0], losses
+
+    def test_rollout_training_runs(self):
+        tcfg = trlib.TrainConfig(ensemble_size=2, rollout_steps=2,
+                                 fair_crps=True, noise_centering=True)
+        tr = trlib.EnsembleTrainer(self.model, tcfg, self.cw)
+        buffers = self.model.make_buffers()
+        batch = self._batch(rollout=2)
+        params = self.model.init(jax.random.PRNGKey(0))
+        opt_state = tr.optimizer.init(params)
+        step = jax.jit(tr.make_train_step(buffers))
+        params, opt_state, aux = step(params, opt_state, batch,
+                                      jax.random.PRNGKey(0))
+        assert np.isfinite(float(aux["loss"]))
+        assert "nodal_1" in aux  # both rollout steps contributed
+
+    def test_eval_step_metrics(self):
+        tcfg = trlib.TrainConfig(ensemble_size=2)
+        tr = trlib.EnsembleTrainer(self.model, tcfg, self.cw)
+        buffers = self.model.make_buffers()
+        params = self.model.init(jax.random.PRNGKey(0))
+        ev = jax.jit(tr.make_eval_step(buffers, n_members=3))
+        out = ev(params, self._batch(), jax.random.PRNGKey(1))
+        assert np.isfinite(float(out["crps"]))
+        assert np.isfinite(float(out["rmse_ens_mean"]))
+
+    def test_wdt_estimate(self):
+        samples = jnp.stack([jnp.stack([self.ds.state(i, k)
+                                        for k in range(2)])
+                             for i in range(2)])
+        w = trlib.estimate_wdt(samples)
+        assert w.shape == (self.cfg.n_state,)
+        assert (w > 0).all()
