@@ -14,6 +14,7 @@ EXPERIMENTS.md (dry-run roofline terms for the production mesh).
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -21,13 +22,32 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def _timeit(fn, n=5, warmup=2) -> float:
+def _timeit(fn, n=5, warmup=2, best=False) -> float:
+    """Mean microseconds per call; ``best=True`` returns the fastest of n
+    calls instead (a stable lower bound for noisy-host A/B comparisons)."""
     for _ in range(warmup):
         jax.block_until_ready(fn())
-    t0 = time.perf_counter()
+    ts = []
     for _ in range(n):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn())
-    return (time.perf_counter() - t0) / n * 1e6  # us
+        ts.append(time.perf_counter() - t0)
+    return (min(ts) if best else sum(ts) / n) * 1e6  # us
+
+
+def _ab_timeit(fns, n=10, warmup=2) -> list[float]:
+    """Best-of-n microseconds per call for competing candidates, measured
+    round-robin so slow host drift hits all candidates equally."""
+    for fn in fns:
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+    best = [float("inf")] * len(fns)
+    for _ in range(n):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return [b * 1e6 for b in best]
 
 
 def _row(name: str, us: float, derived) -> None:
@@ -94,19 +114,73 @@ def bench_spectral_fidelity() -> None:
     _row("fig5_spectral_fidelity", us, f"psd_ratio={ratio:.3f}")
 
 
-def bench_inference_speed() -> None:
-    """Section 5: single-member autoregressive step (paper: 64 s / 15 days
-    on H100 at 0.25 deg; here a reduced model on CPU as the proxy)."""
+def bench_inference_speed(members: int = 2, steps: int = 8) -> None:
+    """Section 5: ensemble autoregressive rollout, scan engine vs legacy
+    per-step-dispatch loop, A/B in the same process (paper: 60-day 0.25-deg
+    forecast in under 4 minutes on one GPU; here a reduced model on CPU).
+
+    Rows report per-step microseconds for ``members``-member ensembles:
+      * sec5_inference_speed         -- scan-compiled ForecastEngine
+      * sec5_inference_speed_scored  -- engine incl. in-scan CRPS/RMSE/SSR
+      * sec5_inference_speed_legacy  -- one jitted dispatch per lead time
+    """
+    from repro.core.sphere import noise as noiselib
+    from repro.inference import EngineConfig, ForecastEngine
     cfg, model, ds, buffers, params = _setup_model()
-    state = ds.state(0)[None]
-    cond = jnp.concatenate(
-        [jnp.asarray(ds.aux_fields(0.0))[None],
-         model.sample_noise(jax.random.PRNGKey(2), (1,))], axis=1)
-    fwd = jax.jit(lambda s: model.apply(params, buffers, s, cond))
-    us = _timeit(lambda: fwd(state), n=10)
+    state0 = ds.state(0)
+    key = jax.random.PRNGKey(7)
+    aux = jnp.stack([jnp.asarray(ds.aux_fields(6.0 * (k + 1)))
+                     for k in range(steps)])
+    truth = jnp.stack([ds.state(0, k + 1) for k in range(steps)])
     steps_15d = 60  # 15 days at 6-hourly
-    _row("sec5_inference_speed", us,
-         f"15day_forecast_s={us * steps_15d / 1e6:.2f}")
+
+    # -- legacy baseline: jitted step (state + noise transition) built
+    #    once, dispatched from Python per lead time, as in
+    #    `repro.launch.serve --legacy-loop`.
+    nbufs = model.noise.buffers()
+
+    @jax.jit
+    def step_fn(params, s, z_hat, aux_n, n):
+        z = model.noise.to_grid(z_hat, nbufs)
+        z = noiselib.center_noise(z, axis=0)
+        cond = jnp.concatenate(
+            [jnp.broadcast_to(aux_n, (members,) + aux_n.shape), z], axis=1)
+        s = jax.vmap(lambda se, ce: model.apply(params, buffers, se, ce)
+                     )(s, cond)
+        return s, model.noise.step(jax.random.fold_in(key, n), z_hat, nbufs)
+
+    def run_legacy():
+        z_hat = model.noise.init_state(key, (members,), nbufs)
+        s = jnp.broadcast_to(state0, (members,) + state0.shape)
+        for n in range(steps):
+            s, z_hat = step_fn(params, s, z_hat, aux[n], n)
+        return s
+
+    # static_buffers: the legacy step closes over the geometry too, so
+    # this is the like-for-like single-host comparison.
+    eng = ForecastEngine(model, EngineConfig(members=members,
+                                             lead_chunk=steps,
+                                             static_buffers=True))
+
+    def run_engine(truth_arr=None):
+        return eng.forecast(params, buffers, state0, aux, key,
+                            truth=truth_arr).final_state
+
+    # Interleaved best-of timing: host noise on shared CPU runners is
+    # ~10%, far above the dispatch-overhead difference being measured, and
+    # drifts over seconds -- so alternate the candidates round-robin and
+    # take each one's fastest round.
+    us_eng, us_leg, us_sco = (
+        u / steps for u in _ab_timeit(
+            [run_engine, run_legacy, lambda: run_engine(truth)], n=30))
+    _row("sec5_inference_speed", us_eng,
+         f"members={members};steps={steps};"
+         f"legacy_us={us_leg:.1f};speedup={us_leg / us_eng:.2f}x;"
+         f"15day_forecast_s={us_eng * steps_15d / 1e6:.2f}")
+    _row("sec5_inference_speed_scored", us_sco,
+         f"scoring_overhead={us_sco / us_eng:.2f}x")
+    _row("sec5_inference_speed_legacy", us_leg,
+         f"15day_forecast_s={us_leg * steps_15d / 1e6:.2f}")
 
 
 def bench_train_step() -> None:
@@ -165,7 +239,7 @@ def bench_dist_roofline() -> None:
         _row("secG_dryrun_rooflines", 0.0, "dryrun_results.jsonl missing")
         return
     t0 = time.perf_counter()
-    rows = [json.loads(l) for l in open(path)]
+    rows = [json.loads(line) for line in open(path)]
     us = (time.perf_counter() - t0) * 1e6
     single = [r for r in rows if r["mesh"] == "16x16"]
     from collections import Counter
@@ -174,14 +248,36 @@ def bench_dist_roofline() -> None:
          f"cases={len(single)} bottlenecks={dict(c)}".replace(",", ";"))
 
 
-def main() -> None:
+BENCHES = {
+    "fig3_probabilistic_skill": lambda a: bench_probabilistic_skill(),
+    "fig5_spectral_fidelity": lambda a: bench_spectral_fidelity(),
+    "sec5_inference_speed": lambda a: bench_inference_speed(a.members,
+                                                            a.steps),
+    "table3_train_step": lambda a: bench_train_step(),
+    "kernel_pallas": lambda a: bench_kernels(),
+    "secG_dryrun_rooflines": lambda a: bench_dist_roofline(),
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="run only benchmarks whose name contains this "
+                         "substring (e.g. sec5_inference_speed)")
+    ap.add_argument("--members", type=int, default=2,
+                    help="ensemble size for sec5_inference_speed")
+    ap.add_argument("--steps", type=int, default=8,
+                    help="lead steps for sec5_inference_speed (short "
+                         "rollouts under-amortize the engine's one-off "
+                         "per-forecast setup)")
+    args = ap.parse_args(argv)
+    selected = {n: fn for n, fn in BENCHES.items()
+                if args.only is None or args.only in n}
+    if not selected:
+        raise SystemExit(f"no benchmark matches --only {args.only!r}")
     print("name,us_per_call,derived")
-    bench_probabilistic_skill()
-    bench_spectral_fidelity()
-    bench_inference_speed()
-    bench_train_step()
-    bench_kernels()
-    bench_dist_roofline()
+    for fn in selected.values():
+        fn(args)
 
 
 if __name__ == "__main__":

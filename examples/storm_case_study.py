@@ -17,6 +17,7 @@ from repro.configs import fcn3 as fcn3cfg
 from repro.core.fcn3 import FCN3
 from repro.data import era5_synthetic as dlib
 from repro.evaluation import metrics
+from repro.inference import EngineConfig, ForecastEngine
 
 
 def add_vortex(state: jnp.ndarray, grid, lat0=0.9, lon0=2.0,
@@ -49,31 +50,33 @@ def main() -> None:
                                    cond0, buffers)
 
     members = 4
-    nbufs = model.noise.buffers()
-    z_hat = model.noise.init_state(jax.random.PRNGKey(3), (members,), nbufs)
-    ens = jnp.broadcast_to(state0, (members,) + state0.shape)
-
     nl = cfg.n_levels
     uidx, vidx = 2 * nl, 3 * nl  # lowest-level u/v channels
     wpct = model.in_sht.buffers()["wpct"]
     truth_psd = np.asarray(metrics.angular_psd(state0[uidx], wpct))
 
-    print("lead   member wind maxima (m/s, normalized units)     PSD ratio")
-    for lead in range(6):
-        z = model.noise.to_grid(z_hat, nbufs)
-        aux = jnp.broadcast_to(jnp.asarray(ds.aux_fields(6.0 * lead)),
-                               (members, cfg.n_aux, cfg.nlat, cfg.nlon))
-        cond = jnp.concatenate([aux, z], axis=1)
-        ens = jax.vmap(lambda s, c: model.apply(params, buffers, s, c)
-                       )(ens, cond)
+    # In-situ diagnostics, traced into the engine's scan: per-member wind
+    # maxima and the member-0 u-wind angular PSD, reduced on device every
+    # lead time -- raw member fields never leave the accelerator.
+    def storm_diag(ens: jax.Array) -> dict[str, jax.Array]:
         wind = jnp.sqrt(ens[:, uidx] ** 2 + ens[:, vidx] ** 2)
-        maxima = [f"{float(wind[m].max()):5.2f}" for m in range(members)]
-        psd = np.asarray(metrics.angular_psd(ens[0, uidx], wpct))
-        lo = slice(1, cfg.latent_nlat // 2)
+        return {"wind_max": wind.max(axis=(-2, -1)),
+                "psd_u0": metrics.angular_psd(ens[0, uidx], wpct)}
+
+    eng = ForecastEngine(model, EngineConfig(members=members, lead_chunk=6),
+                         diagnostics=storm_diag)
+    res = eng.forecast(params, buffers, state0,
+                       lambda n: ds.aux_fields(6.0 * n),
+                       jax.random.PRNGKey(3), steps=6)
+
+    print("lead   member wind maxima (m/s, normalized units)     PSD ratio")
+    lo = slice(1, cfg.latent_nlat // 2)
+    for i, lead in enumerate(res.lead_steps):
+        maxima = [f"{float(w):5.2f}"
+                  for w in np.asarray(res.diagnostics["wind_max"][i])]
+        psd = np.asarray(res.diagnostics["psd_u0"][i])
         ratio = float(np.median(psd[lo] / np.maximum(truth_psd[lo], 1e-12)))
-        print(f"{(lead + 1) * 6:3d}h   {maxima}   {ratio:8.3f}")
-        z_hat = model.noise.step(jax.random.fold_in(jax.random.PRNGKey(3),
-                                                    lead), z_hat, nbufs)
+        print(f"{(int(lead) + 1) * 6:3d}h   {maxima}   {ratio:8.3f}")
     print("\nDifferent members give different storm scenarios; the PSD "
           "ratio staying O(1)\nindicates no spectral blow-up or blurring "
           "across the rollout (paper Fig. 4/5).")

@@ -70,6 +70,11 @@ def rfft(x: jax.Array, axis: int = -1) -> jax.Array:
     """Real FFT along the last axis (axis must be -1)."""
     assert axis in (-1, x.ndim - 1)
     if _MODE == "fft":
+        # lax.fft accepts only f32/f64; under a bf16 compute policy the
+        # longitudinal transform is computed in fp32 (its result is
+        # complex64 either way).
+        if x.dtype not in (jnp.float32, jnp.float64):
+            x = x.astype(jnp.float32)
         return jnp.fft.rfft(x, axis=-1)
     re_m, im_m = _rdft_mats(x.shape[-1])
     xr = x.astype(jnp.float32)

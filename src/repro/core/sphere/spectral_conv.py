@@ -56,6 +56,9 @@ def apply_spectral_conv(params: dict, x: jax.Array, sht_buffers: dict,
     if "w" in params:  # depthwise, real gain
         y = c * params["w"][..., :, None]
     else:
-        w = jax.lax.complex(params["w_re"], params["w_im"])  # (Co, Ci, L)
+        # Complex spectral weights always combine in fp32: lax.complex has
+        # no bf16 variant, and the coefficients c are complex64 anyway.
+        w = jax.lax.complex(params["w_re"].astype(jnp.float32),
+                            params["w_im"].astype(jnp.float32))  # (Co,Ci,L)
         y = jnp.einsum("oil,...ilm->...olm", w, c)
     return shtlib.sht_inverse(y, sht_buffers["pct"], nlon)

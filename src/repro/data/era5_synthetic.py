@@ -23,7 +23,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import fcn3 as fcn3cfg
 from repro.core.fcn3 import FCN3Config
 from repro.core.sphere import grids as glib
 from repro.core.sphere import sht as shtlib
@@ -65,12 +64,17 @@ class SyntheticERA5:
 
     @functools.cached_property
     def _sigma_l(self) -> np.ndarray:
-        l = np.arange(self.sht.lmax, dtype=np.float64)
-        s = (1.0 + (l / self.peak_l) ** self.spectral_slope) ** -1.0
+        ell = np.arange(self.sht.lmax, dtype=np.float64)
+        s = (1.0 + (ell / self.peak_l) ** self.spectral_slope) ** -1.0
         s[0] = 0.0
+        # Band-limit below the grid's resolvable degree: equiangular
+        # quadrature is inexact for l ~ lmax, so power injected there
+        # aliases across the whole spectrum on the forward transform and
+        # floods the power-law tail of the surrogate.
+        s[ell > 0.85 * self.sht.lmax] = 0.0
         # normalize to unit pointwise variance:
         # Var = sum_l sigma_l^2 (2l+1) / (4 pi)
-        var = (s * (2 * l + 1) / (4 * np.pi)).sum()
+        var = (s * (2 * ell + 1) / (4 * np.pi)).sum()
         return np.sqrt(s / var).astype(np.float32)
 
     # -- static auxiliary fields -------------------------------------------

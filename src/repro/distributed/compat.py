@@ -1,0 +1,18 @@
+"""Small cross-version jax shims for the distributed collectives."""
+
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(name: str) -> int:
+    """Static size of a named mesh axis inside shard_map/pmap.
+
+    ``jax.lax.axis_size`` exists from jax 0.5; on 0.4.x the size is read
+    from the axis environment frame (still a static Python int, so it is
+    safe to use in shape arithmetic).
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    frame = jax.core.axis_frame(name)
+    return getattr(frame, "size", frame)

@@ -24,6 +24,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.compat import axis_size
+
 
 def _a2a(x, axis_name, split_axis, concat_axis):
     return jax.lax.all_to_all(x, axis_name, split_axis=split_axis,
@@ -39,7 +41,7 @@ def dist_sht_forward(x: jax.Array, wpct_local: jax.Array, mmax: int,
       table sliced to this rank's longitudinal mode block: (H, L, Mloc).
     Returns (..., C, Lloc, Mloc) local coefficient block.
     """
-    w_total = x.shape[-1] * jax.lax.axis_size(lon_axis)
+    w_total = x.shape[-1] * axis_size(lon_axis)
     # 1) gather longitudes, scatter channels (pencil 1)
     xt = _a2a(x, lon_axis, x.ndim - 3, x.ndim - 1)     # (.., Cw, Hloc, W)
     # 2) local FFT + mode truncation
@@ -65,7 +67,7 @@ def dist_sht_inverse(c: jax.Array, pct_local: jax.Array, nlon: int,
     Returns (..., C, Hloc, Wloc).
     """
     mmax_local = c.shape[-1]
-    n_lon_ranks = jax.lax.axis_size(lon_axis)
+    n_lon_ranks = axis_size(lon_axis)
     # 1) gather degrees, scatter channels
     ct = _a2a(c, lat_axis, c.ndim - 3, c.ndim - 2)     # (.., Ch, L, Mloc)
     # 2) local inverse Legendre

@@ -20,7 +20,10 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
-from jax import shard_map  # noqa: E402
+try:
+    from jax import shard_map  # noqa: E402  # jax >= 0.5
+except ImportError:
+    from jax.experimental.shard_map import shard_map  # noqa: E402
 
 from repro.core import crps as crpslib  # noqa: E402
 from repro.core.sphere import disco as dlib  # noqa: E402

@@ -14,8 +14,18 @@ from repro.core.sphere import sht as shtlib
 
 
 def _spatial_mean(x: jax.Array, area_weights: jax.Array) -> jax.Array:
-    """x: (..., H, W) -> (...) using normalized area weights (sum to 1)."""
-    return jnp.einsum("...hw,hw->...", x, area_weights.astype(x.dtype))
+    """x: (..., H, W) -> (...) weighted spatial mean.
+
+    Dividing by the weight sum (nominally 1) makes the mean exact for
+    constant fields under fp32 quadrature-weight rounding and tolerant of
+    unnormalized weights.
+    """
+    w = area_weights.astype(x.dtype)
+    # The denominator uses the same einsum contraction (not jnp.sum) so
+    # its accumulation order matches the numerator and the rounding error
+    # cancels -- a constant field's mean is then exact.
+    return (jnp.einsum("...hw,hw->...", x, w)
+            / jnp.einsum("...hw,hw->...", jnp.ones_like(w), w))
 
 
 def rmse(pred: jax.Array, target: jax.Array, area_weights: jax.Array) -> jax.Array:

@@ -1,0 +1,7 @@
+"""Compiled ensemble inference (paper Section 5 / Appendix G.4)."""
+
+from repro.inference.engine import (  # noqa: F401
+    EngineConfig,
+    ForecastEngine,
+    ForecastResult,
+)

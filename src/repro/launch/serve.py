@@ -1,10 +1,25 @@
-"""Ensemble-forecast inference driver (paper §5 / G.4, "online scoring").
+"""Ensemble-forecast serving on the compiled inference engine (paper §5/G.4).
 
-Generates an N-member FCN3 ensemble forecast autoregressively and computes
-skill scores (CRPS / ensemble-mean RMSE / spread-skill / rank histograms)
-*in situ*, never writing raw fields to disk -- the paper's distributed
-online-inference design that removes the storage bottleneck of ensemble
-archiving.
+Generates an N-member FCN3 ensemble forecast and scores it (CRPS /
+ensemble-mean RMSE / spread-skill) *in situ*, never writing raw fields to
+disk -- the paper's distributed online-inference design.
+
+The default path is ``repro.inference.ForecastEngine``: the full rollout
+(FCN3 step, AR(1) spherical-noise transition, antithetic centering,
+metric accumulation) runs inside chunked ``jax.lax.scan`` calls that are
+compiled once, with donated ensemble-state/noise carries.  Engine knobs
+exposed here:
+
+* ``--lead-chunk K``   scan length per compiled chunk (compile time /
+                       memory vs dispatch-count trade-off);
+* ``--precision bfloat16``  bf16 model compute with fp32 metric
+                       accumulation;
+* members shard over the ``member_axes`` mesh convention of
+  ``train.trainer`` when the engine is constructed with one (this CLI
+  runs the single-host default).
+
+``--legacy-loop`` keeps the original per-step-dispatch Python loop for
+A/B timing; both paths are bit-identical in fp32.
 
   PYTHONPATH=src python -m repro.launch.serve --config smoke \
       --members 4 --lead-steps 8
@@ -17,45 +32,60 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import fcn3 as fcn3cfg
 from repro.core.fcn3 import FCN3
 from repro.core.sphere import noise as noiselib
 from repro.data import era5_synthetic as dlib
 from repro.evaluation import metrics
+from repro.inference import EngineConfig, ForecastEngine
 from repro.train import checkpoint as ckptlib
 
 CONFIGS = {"smoke": fcn3cfg.fcn3_smoke, "small": fcn3cfg.fcn3_small,
            "full": fcn3cfg.fcn3_full}
 
 
-def forecast(model: FCN3, params, buffers, state0, aux_fn, key,
-             members: int, steps: int, centered: bool = True):
-    """Yields (step, ensemble_state) autoregressively.
+def legacy_forecast(model: FCN3, params, buffers, state0, aux_fn, key,
+                    members: int, steps: int, centered: bool = True):
+    """Per-step-dispatch rollout: yields (step, ensemble_state).
 
-    state0: (C, H, W); ensemble axis is created here. Noise evolves by the
-    spherical AR(1) diffusion between steps (hidden Markov model).
+    Kept as the A/B baseline for the scan engine.  One jitted step per
+    lead time (state + noise transition fused in a single dispatch);
+    aux fields are staged from host every step.
     """
     nbufs = model.noise.buffers()
     z_hat = model.noise.init_state(key, (members,), nbufs)
     s = jnp.broadcast_to(state0, (members,) + state0.shape)
 
     @jax.jit
-    def step_fn(params, s, z_hat, aux):
+    def step_fn(params, s, z_hat, aux, n):
         z = model.noise.to_grid(z_hat, nbufs)
         if centered:
             z = noiselib.center_noise(z, axis=0)
         cond = jnp.concatenate(
             [jnp.broadcast_to(aux, (members,) + aux.shape), z], axis=1)
-        return jax.vmap(lambda se, ce: model.apply(params, buffers, se, ce)
-                        )(s, cond)
+        s = jax.vmap(lambda se, ce: model.apply(params, buffers, se, ce)
+                     )(s, cond)
+        z_hat = model.noise.step(jax.random.fold_in(key, n), z_hat, nbufs)
+        return s, z_hat
 
     for n in range(steps):
         aux = jnp.asarray(aux_fn(n))
-        s = step_fn(params, s, z_hat, aux)
-        z_hat = model.noise.step(jax.random.fold_in(key, n), z_hat, nbufs)
+        s, z_hat = step_fn(params, s, z_hat, aux, n)
         yield n, s
+
+
+def _load_params(model: FCN3, ds, buffers, state0, ckpt: str | None):
+    if ckpt:
+        template = {"params": jax.eval_shape(model.init,
+                                             jax.random.PRNGKey(0))}
+        restored, _ = ckptlib.restore_checkpoint(ckpt, template)
+        return restored["params"]
+    cond0 = jnp.concatenate(
+        [jnp.asarray(ds.aux_fields(0.0))[None],
+         model.sample_noise(jax.random.PRNGKey(1), (1,))], axis=1)
+    return model.init_calibrated(jax.random.PRNGKey(0), state0[None],
+                                 cond0, buffers)
 
 
 def main() -> None:
@@ -63,6 +93,14 @@ def main() -> None:
     ap.add_argument("--config", default="smoke", choices=sorted(CONFIGS))
     ap.add_argument("--members", type=int, default=4)
     ap.add_argument("--lead-steps", type=int, default=8)
+    ap.add_argument("--lead-chunk", type=int, default=8,
+                    help="scan steps per compiled chunk (engine path)")
+    ap.add_argument("--precision", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="model compute dtype; metrics stay fp32")
+    ap.add_argument("--legacy-loop", action="store_true",
+                    help="per-step-dispatch baseline instead of the "
+                         "scan-compiled engine")
     ap.add_argument("--sample", type=int, default=123)
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
@@ -71,35 +109,46 @@ def main() -> None:
     model = FCN3(cfg)
     ds = dlib.SyntheticERA5(cfg)
     buffers = model.make_buffers()
-
     state0 = ds.state(args.sample, 0)
-    if args.ckpt:
-        template = {"params": jax.eval_shape(model.init,
-                                             jax.random.PRNGKey(0))}
-        restored, _ = ckptlib.restore_checkpoint(args.ckpt, template)
-        params = restored["params"]
-    else:
-        cond0 = jnp.concatenate(
-            [jnp.asarray(ds.aux_fields(0.0))[None],
-             model.sample_noise(jax.random.PRNGKey(1), (1,))], axis=1)
-        params = model.init_calibrated(jax.random.PRNGKey(0), state0[None],
-                                       cond0, buffers)
+    params = _load_params(model, ds, buffers, state0, args.ckpt)
 
+    key = jax.random.PRNGKey(7)
     aw = jnp.asarray(ds.grid.area_weights_2d(), jnp.float32)
     t0 = time.time()
+    mode = "legacy per-step loop" if args.legacy_loop else (
+        f"scan engine (chunk={args.lead_chunk}, {args.precision})")
     print(f"[serve] {args.members}-member ensemble, "
-          f"{args.lead_steps} x 6h lead")
-    for n, ens in forecast(model, params, buffers, state0,
-                           lambda k: ds.aux_fields(6.0 * (k + 1)),
-                           jax.random.PRNGKey(7), args.members,
-                           args.lead_steps):
-        truth = ds.state(args.sample, n + 1)
-        crps = float(metrics.crps(ens, truth, aw).mean())
-        skill = float(metrics.ensemble_skill(ens, truth, aw).mean())
-        ssr = float(metrics.spread_skill_ratio(ens, truth, aw).mean())
+          f"{args.lead_steps} x 6h lead -- {mode}")
+
+    def report(n, crps, skill, ssr):
         print(f"lead {6 * (n + 1):4d}h  CRPS={crps:.4f} "
               f"ensRMSE={skill:.4f} SSR={ssr:.3f} "
               f"({time.time() - t0:.1f}s)")
+
+    if args.legacy_loop:
+        for n, ens in legacy_forecast(model, params, buffers, state0,
+                                      lambda k: ds.aux_fields(6.0 * (k + 1)),
+                                      key, args.members, args.lead_steps):
+            truth = ds.state(args.sample, n + 1)
+            report(n, float(metrics.crps(ens, truth, aw).mean()),
+                   float(metrics.ensemble_skill(ens, truth, aw).mean()),
+                   float(metrics.spread_skill_ratio(ens, truth, aw).mean()))
+    else:
+        # Single-host CLI: bake the geometry into the executable except at
+        # full resolution, where the Legendre tables are GB-scale and must
+        # stay jit arguments (shardable, not HLO constants).
+        eng = ForecastEngine(model, EngineConfig(
+            members=args.members, lead_chunk=args.lead_chunk,
+            compute_dtype=args.precision,
+            static_buffers=args.config != "full"))
+        for block in eng.stream(params, buffers, state0,
+                                lambda n: ds.aux_fields(6.0 * (n + 1)), key,
+                                steps=args.lead_steps,
+                                truth=lambda n: ds.state(args.sample, n + 1)):
+            for i, n in enumerate(block.lead_steps):
+                report(int(n), float(block.scores["crps"][i].mean()),
+                       float(block.scores["ens_rmse"][i].mean()),
+                       float(block.scores["ssr"][i].mean()))
     print("[serve] done -- no fields written to disk (in-situ scoring)")
 
 

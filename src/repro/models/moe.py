@@ -109,7 +109,6 @@ def apply_moe_scatter(params: dict, cfg: MoEConfig, x: jax.Array
     under GSPMD with experts sharded over the model axis -- the E <-> C
     resharding between the two is the paper-style expert all-to-all.
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
 
     b, s, d = x.shape
@@ -129,7 +128,7 @@ def apply_moe_scatter(params: dict, cfg: MoEConfig, x: jax.Array
         cap_l = _capacity(xt_l.shape[0], cfg)
         return _local_dispatch(xt_l, gi_l, e, cap_l)
 
-    buf, flat_e, slot, keep = shard_map(
+    buf, flat_e, slot, keep = _shard_map(
         disp,
         in_specs=(P(dp, None), P(dp, None)),
         out_specs=(P(None, dp, None), P(dp), P(dp), P(dp)),
@@ -146,7 +145,7 @@ def apply_moe_scatter(params: dict, cfg: MoEConfig, x: jax.Array
     def comb(h_l, fe_l, sl_l, w_l):
         return _local_combine(h_l, fe_l, sl_l, w_l, k)
 
-    y = shard_map(
+    y = _shard_map(
         comb,
         in_specs=(P(None, dp, None), P(dp), P(dp), P(dp)),
         out_specs=P(dp, None),
@@ -163,8 +162,37 @@ def apply_moe_scatter(params: dict, cfg: MoEConfig, x: jax.Array
     return y.reshape(b, s, d), {"lb_loss": lb, "router_entropy": ent}
 
 
+def _ambient_mesh():
+    """Active mesh: jax>=0.6 abstract context mesh, else the 0.4.x
+    thread-resources physical mesh installed by ``with mesh:``."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        mesh = get()
+        if mesh is not None and mesh.shape:
+            return mesh
+    pxla = getattr(jax.interpreters, "pxla", None)
+    if pxla is not None and hasattr(pxla, "thread_resources"):
+        mesh = pxla.thread_resources.env.physical_mesh
+        if mesh.shape:
+            return mesh
+    return None
+
+
+def _shard_map(f, *, in_specs, out_specs):
+    """shard_map against the ambient mesh, on both jax 0.4.x and >=0.5."""
+    try:
+        from jax import shard_map
+        return shard_map(f, in_specs=in_specs, out_specs=out_specs)
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
+        # check_rep=False: 0.4.x replication checking has no rules for the
+        # scatter ops used by the local dispatch/combine bodies.
+        return sm(f, mesh=_ambient_mesh(), in_specs=in_specs,
+                  out_specs=out_specs, check_rep=False)
+
+
 def _dp_size(dp_axes) -> int:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = _ambient_mesh()
     if mesh is None or not mesh.shape:
         return 0
     n = 1

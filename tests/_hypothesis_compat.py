@@ -1,0 +1,91 @@
+"""Degrade-gracefully shim for ``hypothesis``.
+
+Test modules import ``given``/``settings``/``st`` from here instead of from
+``hypothesis`` directly.  When hypothesis is installed (the ``[test]``
+extra), the real library is re-exported unchanged.  When it is absent
+(minimal CI images, bare containers), property tests degrade to plain
+deterministic sweeps: each ``@given`` test runs ``max_examples`` times
+against pseudo-random draws from a fixed seed, so the suite still collects
+and exercises the same code paths -- just without shrinking or an
+adaptive search.
+
+Only the strategy surface this repo uses is emulated: ``st.integers``,
+``st.booleans``, ``st.sampled_from`` (keyword-argument style ``@given``).
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # fallback: deterministic parameter sweeps
+    import functools
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    st = _Strategies()
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, **_kw):
+        """Record max_examples on the (already @given-wrapped) test."""
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        """Run the test ``max_examples`` times on seeded deterministic
+        draws.  The seed folds in the test name so different tests get
+        different sweeps, stable across runs."""
+        import inspect
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples",
+                            _DEFAULT_EXAMPLES)
+                rng = random.Random(f"compat:{fn.__qualname__}")
+                for _ in range(n):
+                    drawn = {k: s.example(rng)
+                             for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # Hide the strategy parameters from pytest's fixture
+            # resolution: the wrapper supplies them itself.
+            sig = inspect.signature(fn)
+            params = [p for name, p in sig.parameters.items()
+                      if name not in strategies]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

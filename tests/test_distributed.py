@@ -35,6 +35,7 @@ def test_distributed_selftest_all_algorithms():
     assert "ALL DISTRIBUTED CHECKS PASSED" in stdout
 
 
+@pytest.mark.slow
 def test_small_mesh_dryrun():
     """The production dry-run logic on an 8-device toy mesh."""
     stdout = _run("repro.launch.smoketest")

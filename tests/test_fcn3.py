@@ -63,6 +63,7 @@ class TestFCN3Forward:
         o2 = model.apply(params, buffers, state, cond)
         np.testing.assert_allclose(np.asarray(o1), np.asarray(o2))
 
+    @pytest.mark.slow
     def test_vmap_over_ensemble(self, tiny):
         # Ensemble members share params/state and differ only in noise.
         cfg, model, params, buffers = tiny

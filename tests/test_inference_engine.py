@@ -1,0 +1,188 @@
+"""Tests for the scan-compiled ensemble inference engine (paper 5/G.4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import fcn3 as fcn3cfg
+from repro.core.fcn3 import FCN3
+from repro.data import era5_synthetic as dlib
+from repro.evaluation import metrics
+from repro.inference import EngineConfig, ForecastEngine
+from repro.launch import serve
+
+MEMBERS, STEPS, SAMPLE = 4, 3, 11
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = fcn3cfg.fcn3_smoke()
+    model = FCN3(cfg)
+    ds = dlib.SyntheticERA5(cfg)
+    buffers = model.make_buffers()
+    state0 = ds.state(SAMPLE, 0)
+    cond0 = jnp.concatenate(
+        [jnp.asarray(ds.aux_fields(0.0))[None],
+         model.sample_noise(jax.random.PRNGKey(1), (1,))], axis=1)
+    params = model.init_calibrated(jax.random.PRNGKey(0), state0[None],
+                                   cond0, buffers)
+    return cfg, model, ds, buffers, params, state0
+
+
+def _aux_fn(ds):
+    return lambda n: ds.aux_fields(6.0 * (n + 1))
+
+
+def _legacy_final(model, params, buffers, state0, ds):
+    ens = None
+    for _, s in serve.legacy_forecast(model, params, buffers, state0,
+                                      _aux_fn(ds), KEY, MEMBERS, STEPS):
+        ens = s
+    return np.asarray(ens)
+
+
+class TestScanMatchesLegacy:
+    @pytest.mark.parametrize("lead_chunk", [STEPS, 2])
+    def test_bit_for_bit_fp32(self, setup, lead_chunk):
+        # (a) one compiled scan == per-step-dispatch loop, bitwise, incl.
+        # an uneven final chunk (lead_chunk=2 over 3 steps).
+        cfg, model, ds, buffers, params, state0 = setup
+        legacy = _legacy_final(model, params, buffers, state0, ds)
+        eng = ForecastEngine(model, EngineConfig(members=MEMBERS,
+                                                 lead_chunk=lead_chunk))
+        res = eng.forecast(params, buffers, state0, _aux_fn(ds), KEY,
+                           steps=STEPS)
+        assert res.final_state.dtype == jnp.float32
+        np.testing.assert_array_equal(np.asarray(res.final_state), legacy)
+
+    def test_static_buffers_match_argument_buffers(self, setup):
+        # Baked-constant geometry is an executable-layout optimization
+        # only; it must not change a single bit.
+        cfg, model, ds, buffers, params, state0 = setup
+        outs = []
+        for static in (False, True):
+            eng = ForecastEngine(model, EngineConfig(
+                members=MEMBERS, lead_chunk=2, static_buffers=static))
+            outs.append(np.asarray(eng.forecast(
+                params, buffers, state0, _aux_fn(ds), KEY,
+                steps=STEPS).final_state))
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+    def test_in_scan_scores_match_host_metrics(self, setup):
+        cfg, model, ds, buffers, params, state0 = setup
+        eng = ForecastEngine(model, EngineConfig(members=MEMBERS,
+                                                 lead_chunk=STEPS))
+        res = eng.forecast(params, buffers, state0, _aux_fn(ds), KEY,
+                           steps=STEPS,
+                           truth=lambda n: ds.state(SAMPLE, n + 1))
+        aw = jnp.asarray(ds.grid.area_weights_2d(), jnp.float32)
+        truth = ds.state(SAMPLE, STEPS)
+        ens = res.final_state
+        np.testing.assert_allclose(
+            np.asarray(res.scores["crps"][-1]),
+            np.asarray(metrics.crps(ens, truth, aw)), rtol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(res.scores["ens_rmse"][-1]),
+            np.asarray(metrics.ensemble_skill(ens, truth, aw)), rtol=1e-5)
+        assert res.scores["ssr"].shape == (STEPS, cfg.n_state)
+
+
+class TestDonation:
+    def test_repeat_forecasts_identical(self, setup):
+        # (b) donated state/noise carries must not leak between calls.
+        cfg, model, ds, buffers, params, state0 = setup
+        eng = ForecastEngine(model, EngineConfig(members=MEMBERS,
+                                                 lead_chunk=2, donate=True))
+
+        def run():
+            return np.asarray(eng.forecast(params, buffers, state0,
+                                           _aux_fn(ds), KEY,
+                                           steps=STEPS).final_state)
+
+        first, second = run(), run()
+        np.testing.assert_array_equal(first, second)
+
+    def test_donation_off_matches_on(self, setup):
+        cfg, model, ds, buffers, params, state0 = setup
+        outs = []
+        for donate in (True, False):
+            eng = ForecastEngine(model, EngineConfig(
+                members=MEMBERS, lead_chunk=2, donate=donate))
+            outs.append(np.asarray(eng.forecast(
+                params, buffers, state0, _aux_fn(ds), KEY,
+                steps=STEPS).final_state))
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+
+class TestNoiseCentering:
+    def test_antithetic_pairs_at_step0(self, setup):
+        # (c) paper E.3: odd members see the negated noise of their even
+        # partner, exactly as the scan body consumes it.
+        cfg, model, ds, buffers, params, state0 = setup
+        eng = ForecastEngine(model, EngineConfig(members=MEMBERS,
+                                                 centered=True))
+        _, z_hat = eng.init_carry(state0, KEY)
+        z = np.asarray(eng.noise_fields(z_hat))
+        assert z.shape == (MEMBERS, cfg.n_noise, cfg.nlat, cfg.nlon)
+        np.testing.assert_array_equal(z[1::2], -z[0::2])
+        assert np.abs(z[0::2]).max() > 0  # non-degenerate noise
+
+    def test_uncentered_members_independent(self, setup):
+        cfg, model, ds, buffers, params, state0 = setup
+        eng = ForecastEngine(model, EngineConfig(members=MEMBERS,
+                                                 centered=False))
+        _, z_hat = eng.init_carry(state0, KEY)
+        z = np.asarray(eng.noise_fields(z_hat))
+        assert np.abs(z[1] + z[0]).max() > 1e-6  # not antithetic
+
+
+class TestPrecisionPolicy:
+    def test_bf16_compute_fp32_scores(self, setup):
+        cfg, model, ds, buffers, params, state0 = setup
+        eng = ForecastEngine(model, EngineConfig(
+            members=MEMBERS, lead_chunk=STEPS, compute_dtype="bfloat16"))
+        res = eng.forecast(params, buffers, state0, _aux_fn(ds), KEY,
+                           steps=STEPS,
+                           truth=lambda n: ds.state(SAMPLE, n + 1))
+        assert res.final_state.dtype == jnp.bfloat16
+        for v in res.scores.values():
+            assert v.dtype == jnp.float32
+            assert bool(jnp.isfinite(v).all())
+        # bf16 rollout stays close to the fp32 trajectory on 3 steps
+        ref = ForecastEngine(model, EngineConfig(
+            members=MEMBERS, lead_chunk=STEPS)).forecast(
+                params, buffers, state0, _aux_fn(ds), KEY, steps=STEPS)
+        err = np.abs(np.asarray(res.final_state, np.float32)
+                     - np.asarray(ref.final_state))
+        assert err.max() < 0.15
+
+
+class TestStreaming:
+    def test_stream_chunks_concat_to_forecast(self, setup):
+        cfg, model, ds, buffers, params, state0 = setup
+        eng = ForecastEngine(model, EngineConfig(members=MEMBERS,
+                                                 lead_chunk=2))
+        blocks = list(eng.stream(params, buffers, state0, _aux_fn(ds), KEY,
+                                 steps=STEPS,
+                                 truth=lambda n: ds.state(SAMPLE, n + 1)))
+        assert [b.lead_steps.tolist() for b in blocks] == [[0, 1], [2]]
+        assert blocks[0].final_state is None  # carry donated onward
+        assert blocks[-1].final_state is not None
+        whole = eng.forecast(params, buffers, state0, _aux_fn(ds), KEY,
+                             steps=STEPS,
+                             truth=lambda n: ds.state(SAMPLE, n + 1))
+        np.testing.assert_array_equal(
+            np.concatenate([np.asarray(b.scores["crps"]) for b in blocks]),
+            np.asarray(whole.scores["crps"]))
+
+    def test_diagnostics_traced_into_scan(self, setup):
+        cfg, model, ds, buffers, params, state0 = setup
+        eng = ForecastEngine(
+            model, EngineConfig(members=MEMBERS, lead_chunk=2),
+            diagnostics=lambda ens: {"absmax": jnp.abs(ens).max(axis=(1, 2, 3))})
+        res = eng.forecast(params, buffers, state0, _aux_fn(ds), KEY,
+                           steps=STEPS)
+        assert res.diagnostics["absmax"].shape == (STEPS, MEMBERS)
+        assert bool(jnp.isfinite(res.diagnostics["absmax"]).all())

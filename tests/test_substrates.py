@@ -1,6 +1,5 @@
 """Tests for optimizer, data pipeline, checkpointing and the trainer."""
 
-import os
 
 import jax
 import jax.numpy as jnp
@@ -144,6 +143,7 @@ class TestEnsembleTrainer:
         loader = dlib.Loader(self.ds, global_batch=batch, rollout=rollout)
         return next(iter(loader))
 
+    @pytest.mark.slow
     def test_loss_decreases_over_steps(self):
         tcfg = trlib.TrainConfig(ensemble_size=2, rollout_steps=1, lr=2e-3)
         tr = trlib.EnsembleTrainer(self.model, tcfg, self.cw)
@@ -165,6 +165,7 @@ class TestEnsembleTrainer:
             assert np.isfinite(losses[-1])
         assert losses[-1] < losses[0], losses
 
+    @pytest.mark.slow
     def test_rollout_training_runs(self):
         tcfg = trlib.TrainConfig(ensemble_size=2, rollout_steps=2,
                                  fair_crps=True, noise_centering=True)
