@@ -120,9 +120,13 @@ def bench_inference_speed(members: int = 2, steps: int = 8) -> None:
     forecast in under 4 minutes on one GPU; here a reduced model on CPU).
 
     Rows report per-step microseconds for ``members``-member ensembles:
-      * sec5_inference_speed         -- scan-compiled ForecastEngine
-      * sec5_inference_speed_scored  -- engine incl. in-scan CRPS/RMSE/SSR
-      * sec5_inference_speed_legacy  -- one jitted dispatch per lead time
+      * sec5_inference_speed          -- scan-compiled ForecastEngine
+      * sec5_inference_speed_scored   -- engine incl. in-scan CRPS/RMSE/SSR
+                                         and the rank histogram
+      * sec5_inference_speed_calibrated -- scored + per-degree energy
+                                         spectra (one extra SHT per member,
+                                         channel and lead)
+      * sec5_inference_speed_legacy   -- one jitted dispatch per lead time
     """
     from repro.core.sphere import noise as noiselib
     from repro.inference import EngineConfig, ForecastEngine
@@ -161,24 +165,34 @@ def bench_inference_speed(members: int = 2, steps: int = 8) -> None:
     eng = ForecastEngine(model, EngineConfig(members=members,
                                              lead_chunk=steps,
                                              static_buffers=True))
+    # Same engine with per-degree energy spectra added to the in-scan
+    # score set: the A/B isolates the calibration-scoring overhead.
+    eng_cal = ForecastEngine(model, EngineConfig(members=members,
+                                                 lead_chunk=steps,
+                                                 static_buffers=True,
+                                                 spectra=True))
 
-    def run_engine(truth_arr=None):
-        return eng.forecast(params, buffers, state0, aux, key,
-                            truth=truth_arr).final_state
+    def run_engine(e=eng, truth_arr=None):
+        return e.forecast(params, buffers, state0, aux, key,
+                          truth=truth_arr).final_state
 
     # Interleaved best-of timing: host noise on shared CPU runners is
     # ~10%, far above the dispatch-overhead difference being measured, and
     # drifts over seconds -- so alternate the candidates round-robin and
     # take each one's fastest round.
-    us_eng, us_leg, us_sco = (
+    us_eng, us_leg, us_sco, us_cal = (
         u / steps for u in _ab_timeit(
-            [run_engine, run_legacy, lambda: run_engine(truth)], n=30))
+            [run_engine, run_legacy,
+             lambda: run_engine(truth_arr=truth),
+             lambda: run_engine(e=eng_cal, truth_arr=truth)], n=30))
     _row("sec5_inference_speed", us_eng,
          f"members={members};steps={steps};"
          f"legacy_us={us_leg:.1f};speedup={us_leg / us_eng:.2f}x;"
          f"15day_forecast_s={us_eng * steps_15d / 1e6:.2f}")
     _row("sec5_inference_speed_scored", us_sco,
          f"scoring_overhead={us_sco / us_eng:.2f}x")
+    _row("sec5_inference_speed_calibrated", us_cal,
+         f"calibration_overhead={us_cal / us_sco:.2f}x_vs_scored")
     _row("sec5_inference_speed_legacy", us_leg,
          f"15day_forecast_s={us_leg * steps_15d / 1e6:.2f}")
 

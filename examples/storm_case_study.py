@@ -1,10 +1,14 @@
 """Case study: ensemble spread around an intense synthetic cyclone.
 
 Mirrors the paper's storm-Dennis case study (Fig. 4): initialize from a
-state containing a strong vortex, run an ensemble forecast, and inspect
-(a) per-member wind-speed maxima (different members = different scenarios),
-(b) the angular power spectral density of the forecast vs truth -- the
-paper's headline result is that FCN3 keeps realistic spectra at long leads.
+state containing a strong vortex, seed the ensemble with cycled bred
+vectors (paper App. E -- perturbations aligned with the flow's
+fastest-growing directions, so members diverge into genuinely different
+storm scenarios instead of shedding unstructured noise), run an ensemble
+forecast, and inspect (a) per-member wind-speed maxima (different members
+= different scenarios), (b) the angular power spectral density of the
+forecast vs truth -- the paper's headline result is that FCN3 keeps
+realistic spectra at long leads.
 
 Run:  PYTHONPATH=src python examples/storm_case_study.py
 """
@@ -17,7 +21,9 @@ from repro.configs import fcn3 as fcn3cfg
 from repro.core.fcn3 import FCN3
 from repro.data import era5_synthetic as dlib
 from repro.evaluation import metrics
-from repro.inference import EngineConfig, ForecastEngine
+from repro.inference import (EngineConfig, ForecastEngine,
+                             InitialConditionPerturbation,
+                             PerturbationConfig)
 
 
 def add_vortex(state: jnp.ndarray, grid, lat0=0.9, lon0=2.0,
@@ -63,8 +69,16 @@ def main() -> None:
         return {"wind_max": wind.max(axis=(-2, -1)),
                 "psd_u0": metrics.angular_psd(ens[0, uidx], wpct)}
 
-    eng = ForecastEngine(model, EngineConfig(members=members, lead_chunk=6),
-                         diagnostics=storm_diag)
+    # Bred-vector seeding: two cycles of perturb -> integrate -> rescale
+    # grow the initial perturbations along the vortex's unstable
+    # directions before the forecast starts (all on device, inside
+    # init_carry's compiled program).
+    pcfg = PerturbationConfig(kind="bred", amplitude=0.1, bred_cycles=2)
+    eng = ForecastEngine(model, EngineConfig(members=members, lead_chunk=6,
+                                             perturb=pcfg),
+                         diagnostics=storm_diag,
+                         perturbation=InitialConditionPerturbation
+                         .from_dataset(model.in_sht, pcfg, ds))
     res = eng.forecast(params, buffers, state0,
                        lambda n: ds.aux_fields(6.0 * n),
                        jax.random.PRNGKey(3), steps=6)

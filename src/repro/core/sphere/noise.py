@@ -27,6 +27,52 @@ FCN3_KT_SCALES = (3.08e-5, 1.23e-4, 4.93e-4, 1.97e-3,
                   7.89e-3, 3.16e-2, 1.26e-1, 5.05e-1)
 
 
+def power_law_sigma_l(lmax: int, slope: float = 3.0, peak_l: int = 4,
+                      band_limit: float = 0.85) -> np.ndarray:
+    """(L,) per-degree std of an atmospheric power-law spectrum.
+
+    PSD ~ l^-slope beyond the synoptic peak ``peak_l`` (Tulloch & Smith
+    2006), band-limited below ``band_limit * lmax`` (equiangular quadrature
+    is inexact near l ~ lmax; power injected there aliases across the whole
+    spectrum), and normalized so a field sampled with these per-degree stds
+    has unit pointwise variance:  Var = sum_l sigma_l^2 (2l+1) / (4 pi).
+
+    Shared by the synthetic-ERA5 surrogate and the obs-error
+    initial-condition perturbations (``repro.inference.perturbations``).
+    """
+    ell = np.arange(lmax, dtype=np.float64)
+    s = (1.0 + (ell / peak_l) ** slope) ** -1.0
+    s[0] = 0.0
+    s[ell > band_limit * lmax] = 0.0
+    var = (s * (2 * ell + 1) / (4 * np.pi)).sum()
+    return np.sqrt(s / var).astype(np.float32)
+
+
+def sample_spectral_coeffs(key: jax.Array, batch_shape: tuple[int, ...],
+                           sigma_l: jax.Array, lmax: int, mmax: int
+                           ) -> jax.Array:
+    """White orthonormal-basis SH coefficients scaled per degree.
+
+    Real-field convention: m = 0 coefficients are real N(0,1); m > 0 are
+    complex with Re, Im ~ N(0, 1/2) (so that the m<0 mirror restores unit
+    total variance per (l, m) pair).  ``sigma_l`` has shape (..., L) and is
+    broadcast against ``batch_shape + (L, M)`` from the right, so a bank of
+    processes passes (n_proc, L) with ``batch_shape`` ending in n_proc.
+
+    Returns (*batch_shape, L, M) complex64.
+    """
+    shape = batch_shape + (lmax, mmax)
+    kr, ki = jax.random.split(key)
+    re = jax.random.normal(kr, shape, jnp.float32)
+    im = jax.random.normal(ki, shape, jnp.float32)
+    m = jnp.arange(mmax)
+    scale_m = jnp.where(m == 0, 1.0, np.sqrt(0.5))
+    im_mask = jnp.where(m == 0, 0.0, 1.0)
+    mask = jnp.asarray(shtlib.mode_mask(lmax, mmax), jnp.float32)
+    eta = jax.lax.complex(re * scale_m, im * scale_m * im_mask) * mask
+    return eta * sigma_l[..., :, None]
+
+
 @dataclasses.dataclass(frozen=True)
 class SphericalDiffusion:
     """A bank of spherical AR(1) diffusion processes sharing one SHT."""
@@ -62,23 +108,9 @@ class SphericalDiffusion:
 
     def _sample_coeffs(self, key: jax.Array, batch_shape: tuple[int, ...],
                        sigma_l: jax.Array) -> jax.Array:
-        """White orthonormal-basis coefficients scaled by sigma_l.
-
-        Real-field convention: m = 0 coefficients are real N(0,1); m > 0 are
-        complex with Re, Im ~ N(0, 1/2) (so that the m<0 mirror restores unit
-        total variance per (l, m) pair).
-        """
-        lmax, mmax = self.sht.lmax, self.sht.mmax
-        shape = batch_shape + (self.n_proc, lmax, mmax)
-        kr, ki = jax.random.split(key)
-        re = jax.random.normal(kr, shape, jnp.float32)
-        im = jax.random.normal(ki, shape, jnp.float32)
-        m = jnp.arange(mmax)
-        scale_m = jnp.where(m == 0, 1.0, np.sqrt(0.5))
-        im_mask = jnp.where(m == 0, 0.0, 1.0)
-        mask = jnp.asarray(shtlib.mode_mask(lmax, mmax), jnp.float32)
-        eta = jax.lax.complex(re * scale_m, im * scale_m * im_mask) * mask
-        return eta * sigma_l[:, :, None]
+        """White coefficients for the process bank, (*batch, n_proc, L, M)."""
+        return sample_spectral_coeffs(key, batch_shape + (self.n_proc,),
+                                      sigma_l, self.sht.lmax, self.sht.mmax)
 
     def init_state(self, key: jax.Array, batch_shape: tuple[int, ...] = (),
                    buffers: dict | None = None) -> jax.Array:
@@ -102,13 +134,39 @@ class SphericalDiffusion:
         return shtlib.sht_inverse(z_hat, b["pct"], self.sht.grid.nlon)
 
 
+def _mirror_pairs(x: jax.Array, src: jax.Array, n: int, axis: int
+                  ) -> jax.Array:
+    """Gather ``src`` slices along ``axis`` and negate every odd output slot.
+
+    The one antithetic-pairing primitive (paper E.3) shared by noise
+    centering (src maps members onto their even partner) and
+    initial-condition perturbations (src expands K independent draws to
+    2K +/- members).
+    """
+    idx = jnp.arange(n)
+    sign = jnp.where(idx % 2 == 0, 1.0, -1.0)
+    xt = jnp.take(x, src, axis=axis)
+    shape = [1] * xt.ndim
+    shape[axis] = n
+    return xt * sign.reshape(shape).astype(x.dtype)
+
+
 def center_noise(z: jax.Array, axis: int = 0) -> jax.Array:
     """Antithetic noise centering (paper E.3): odd members = -even members."""
     n = z.shape[axis]
-    idx = jnp.arange(n)
-    src = (idx // 2) * 2
-    sign = jnp.where(idx % 2 == 0, 1.0, -1.0)
-    zt = jnp.take(z, src, axis=axis)
-    shape = [1] * z.ndim
-    shape[axis] = n
-    return zt * sign.reshape(shape).astype(z.dtype)
+    return _mirror_pairs(z, (jnp.arange(n) // 2) * 2, n, axis)
+
+
+def antithetic_expand(p: jax.Array, members: int, axis: int = 0) -> jax.Array:
+    """Expand ceil(members/2) independent draws to ``members`` +/- pairs.
+
+    p has K = ceil(members/2) slices along ``axis``; output slot 2i is
+    +p_i and slot 2i+1 is -p_i (a trailing unpaired member gets +p_K-1).
+    Centering perturbations this way keeps each pair's mean exactly on the
+    control state, halving the sampling noise of the ensemble mean.
+    """
+    if p.shape[axis] != (members + 1) // 2:
+        raise ValueError(
+            f"need {(members + 1) // 2} draws for {members} antithetic "
+            f"members, got {p.shape[axis]}")
+    return _mirror_pairs(p, jnp.arange(members) // 2, members, axis)

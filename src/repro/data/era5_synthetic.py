@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core.fcn3 import FCN3Config
 from repro.core.sphere import grids as glib
+from repro.core.sphere import noise as noiselib
 from repro.core.sphere import sht as shtlib
 
 
@@ -64,18 +65,24 @@ class SyntheticERA5:
 
     @functools.cached_property
     def _sigma_l(self) -> np.ndarray:
-        ell = np.arange(self.sht.lmax, dtype=np.float64)
-        s = (1.0 + (ell / self.peak_l) ** self.spectral_slope) ** -1.0
-        s[0] = 0.0
-        # Band-limit below the grid's resolvable degree: equiangular
-        # quadrature is inexact for l ~ lmax, so power injected there
-        # aliases across the whole spectrum on the forward transform and
-        # floods the power-law tail of the surrogate.
-        s[ell > 0.85 * self.sht.lmax] = 0.0
-        # normalize to unit pointwise variance:
-        # Var = sum_l sigma_l^2 (2l+1) / (4 pi)
-        var = (s * (2 * ell + 1) / (4 * np.pi)).sum()
-        return np.sqrt(s / var).astype(np.float32)
+        # Band-limited power law normalized to unit pointwise variance;
+        # shared with the obs-error initial-condition perturbations so
+        # perturbed members carry the same spectral signature as the data.
+        return noiselib.power_law_sigma_l(self.sht.lmax, self.spectral_slope,
+                                          self.peak_l)
+
+    @property
+    def spectrum_sigma_l(self) -> np.ndarray:
+        """(L,) per-degree std of the surrogate's angular spectrum (public
+        accessor for perturbation sampling and spectral diagnostics)."""
+        return self._sigma_l
+
+    def channel_std(self, n: int = 8) -> np.ndarray:
+        """(C,) climatological per-channel std over ``n`` deterministic
+        samples -- the obs-error scaling of paper App. E (real ERA5 would
+        read this from the normalization stats)."""
+        x = np.stack([np.asarray(self.state(i)) for i in range(n)])
+        return x.std(axis=(0, 2, 3)).astype(np.float32)
 
     # -- static auxiliary fields -------------------------------------------
     @functools.cached_property

@@ -82,6 +82,50 @@ def crps(ens: jax.Array, target: jax.Array, area_weights: jax.Array,
     return _spatial_mean(pt, area_weights)
 
 
+def ring_weights(area_weights: jax.Array) -> jax.Array:
+    """(H,) per-point weight on each latitude ring.
+
+    Tensor-product grids have longitude-uniform area weights (the cell area
+    depends only on the ring), so any column of the (H, W) map is the
+    per-point ring weight.  Latitude-banded reductions exploit this: count
+    exactly (integers) within each ring, then contract once with these
+    weights.
+    """
+    return area_weights[..., :, 0].astype(jnp.float32)
+
+
+def ring_contract(counts: jax.Array, area_weights: jax.Array) -> jax.Array:
+    """(..., H, R) per-ring integer bin counts -> (..., R) weighted freqs.
+
+    The single float contraction of the latitude-banded rank histogram.
+    Both the reference (`rank_histogram_per_channel`) and the engine's
+    in-scan accumulator end here, so their results are bit-identical
+    whenever their integer counts agree.
+    """
+    return jnp.einsum("...hr,h->...r", counts.astype(jnp.float32),
+                      ring_weights(area_weights))
+
+
+def rank_histogram_per_channel(ens: jax.Array, target: jax.Array,
+                               area_weights: jax.Array, axis: int = 0
+                               ) -> jax.Array:
+    """Per-channel area-weighted rank frequencies, (..., E+1).
+
+    Reference implementation for the engine's in-scan accumulator
+    (`repro.inference.engine.in_scan_rank_histogram`): ranks are comparison
+    counts (never a materialized E x H x W sort), binned exactly as int32
+    one-hot counts per latitude ring, then contracted with the ring
+    weights.  Requires longitude-uniform area weights (true of all
+    tensor-product grids here).  Frequencies sum to 1 per channel; a
+    calibrated ensemble is flat at 1/(E+1) (Hamill 2001).
+    """
+    e = ens.shape[axis]
+    rank = jnp.sum((ens < jnp.expand_dims(target, axis)).astype(jnp.int32),
+                   axis=axis)  # (..., H, W) in [0, E]
+    onehot = jax.nn.one_hot(rank, e + 1, dtype=jnp.int32)  # (..., H, W, E+1)
+    return ring_contract(onehot.sum(axis=-2), area_weights)
+
+
 def rank_histogram(ens: jax.Array, target: jax.Array,
                    area_weights: jax.Array, axis: int = 0) -> jax.Array:
     """Frequencies of the observation's rank within the ensemble (F.3).
@@ -102,6 +146,17 @@ def rank_histogram(ens: jax.Array, target: jax.Array,
 def angular_psd(x: jax.Array, wpct: jax.Array) -> jax.Array:
     """Angular power spectral density, eq. (53). x: (..., H, W) -> (..., L)."""
     return shtlib.spectrum(shtlib.sht_forward(x, wpct))
+
+
+def ensemble_spectrum(ens: jax.Array, wpct: jax.Array, axis: int = 0
+                      ) -> jax.Array:
+    """Member-mean per-degree energy spectrum (paper Fig. 5 diagnostic).
+
+    ens: (E, ..., H, W) -> (..., L).  Reference for the engine's in-scan
+    spectrum accumulator; a forecast whose spectrum ratio against truth
+    stays O(1) per degree is neither blurring nor blowing up.
+    """
+    return jnp.mean(angular_psd(ens, wpct), axis=axis)
 
 
 def zonal_psd(x: jax.Array, lat_index: int, colat: float) -> jax.Array:

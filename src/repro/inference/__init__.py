@@ -5,3 +5,7 @@ from repro.inference.engine import (  # noqa: F401
     ForecastEngine,
     ForecastResult,
 )
+from repro.inference.perturbations import (  # noqa: F401
+    InitialConditionPerturbation,
+    PerturbationConfig,
+)

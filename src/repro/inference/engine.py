@@ -28,11 +28,22 @@ Design points:
   ensemble dim of the state/conditioning is sharding-constrained to those
   axes, so a large ensemble spreads across devices with no code change.
 * **In-situ scoring.**  When truth states are supplied, fair CRPS,
-  ensemble-mean RMSE, spread and spread-skill ratio (paper D.2/D.5) are
-  computed inside the scan, per channel and lead time; raw member fields
-  never leave the device.  An optional ``diagnostics`` callable is traced
-  into the scan for custom per-step reductions (e.g. per-member wind
-  maxima) -- the paper's "online scoring" generalized.
+  ensemble-mean RMSE, spread, spread-skill ratio and the per-channel rank
+  histogram (paper D.2/D.5/F.3) are computed inside the scan, per channel
+  and lead time; raw member fields never leave the device.  The scan
+  reductions are assembled per config by ``_score_fns`` -- one registry,
+  not ad-hoc branches -- and the rank histogram uses a latitude-banded
+  integer bincount that stays O(E) in memory per grid point (no E x H x W
+  sort is ever materialized).  ``spectra=True`` adds per-degree energy
+  spectra (member mean, and truth when given).  An optional
+  ``diagnostics`` callable is traced into the scan for custom per-step
+  reductions (e.g. per-member wind maxima) -- the paper's "online
+  scoring" generalized.
+* **Initial-condition perturbations.**  ``EngineConfig.perturb`` selects
+  obs-error sampling or cycled bred vectors
+  (``repro.inference.perturbations``, paper App. E); ``init_carry``
+  generates the perturbed members on device inside a compiled program.
+  The default ("none") replicates the analysis state exactly as before.
 """
 
 from __future__ import annotations
@@ -47,6 +58,37 @@ import numpy as np
 from repro.core.fcn3 import FCN3
 from repro.core.sphere import noise as noiselib
 from repro.evaluation import metrics
+from repro.inference import perturbations as perturblib
+
+# fold_in salt separating the perturbation stream from the noise-process
+# stream (which folds in the 0-based lead index).
+_PERTURB_SALT = 0x5EED
+
+#: score names an engine forecast can emit, in emission order.
+SCORE_NAMES = ("crps", "ens_rmse", "spread", "ssr", "rank_hist",
+               "spectrum", "spectrum_truth")
+
+
+def in_scan_rank_histogram(ens: jax.Array, target: jax.Array,
+                           area_weights: jax.Array) -> jax.Array:
+    """(C, E+1) area-weighted rank histogram for the scan body.
+
+    Ranks are comparison counts, binned by an integer segment-sum per
+    (channel, latitude ring) -- peak memory stays O(E) per grid point and
+    no E x H x W sort or (H, W, E+1) float one-hot is materialized, which
+    is what makes rank histograms affordable inside the scan at 0.25
+    degrees.  Integer counts are exact, and the final float contraction is
+    shared with the reference (``metrics.ring_contract``), so the result
+    is bit-identical to ``metrics.rank_histogram_per_channel``.
+    """
+    e = ens.shape[0]
+    rank = jnp.sum((ens < target[None]).astype(jnp.int32), axis=0)  # (C,H,W)
+    c, h, w = rank.shape
+    seg = rank + (e + 1) * jnp.arange(c * h, dtype=jnp.int32).reshape(c, h, 1)
+    counts = jax.ops.segment_sum(
+        jnp.ones((c * h * w,), jnp.int32), seg.reshape(-1),
+        num_segments=c * h * (e + 1))
+    return metrics.ring_contract(counts.reshape(c, h, e + 1), area_weights)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +112,18 @@ class EngineConfig:
                     serving) but cannot be sharded or swapped without a
                     recompile -- keep False for multi-device runs and for
                     full-resolution Legendre tables (~GB-scale constants).
+    perturb:        initial-condition perturbation of the members (paper
+                    App. E), generated on device in ``init_carry``; the
+                    default "none" replicates the analysis state.  Pass
+                    a data-derived ``InitialConditionPerturbation`` to
+                    the engine for climatological per-channel scaling --
+                    the auto-built fallback sampler uses channel_std=1
+                    (amplitude becomes absolute normalized units) and
+                    the generic power-law spectrum.
+    spectra:        add per-degree energy spectra ("spectrum", member
+                    mean; "spectrum_truth" when truth is given) to the
+                    in-scan score set -- one extra SHT per member, channel
+                    and lead, so opt-in.
     """
 
     members: int = 4
@@ -79,6 +133,8 @@ class EngineConfig:
     member_axes: tuple | None = None
     donate: bool = True
     static_buffers: bool = False
+    perturb: perturblib.PerturbationConfig = perturblib.PerturbationConfig()
+    spectra: bool = False
 
     @property
     def jdtype(self):
@@ -91,8 +147,12 @@ class ForecastResult:
 
     lead_steps: (T,) 0-based global lead indices; lead i verifies at
                 t0 + 6h * (i + 1).
-    scores:     per-channel fp32 arrays of shape (T, C): "crps",
-                "ens_rmse", "spread", "ssr" (empty when no truth given).
+    scores:     fp32 accumulators keyed by name (see ``SCORE_NAMES``):
+                per-channel (T, C) "crps" / "ens_rmse" / "spread" / "ssr"
+                and the (T, C, E+1) "rank_hist" when truth is given;
+                (T, C, L) per-degree "spectrum" (member mean) and
+                "spectrum_truth" when the engine runs with
+                ``spectra=True``.  Empty when neither applies.
     diagnostics: stacked pytree from the engine's ``diagnostics`` fn.
     final_state / final_noise: ensemble carry after the last lead in this
                 block; only set on the final block (earlier blocks' carries
@@ -141,15 +201,37 @@ class ForecastEngine:
     """
 
     def __init__(self, model: FCN3, cfg: EngineConfig,
-                 diagnostics: Callable[[jax.Array], Any] | None = None):
+                 diagnostics: Callable[[jax.Array], Any] | None = None,
+                 perturbation: perturblib.InitialConditionPerturbation
+                 | None = None):
         self.model = model
         self.cfg = cfg
         self.diagnostics = diagnostics
         self.noise_buffers = model.noise.buffers()
         self.area_weights = jnp.asarray(model.grid_in.area_weights_2d(),
                                         jnp.float32)
-        self._compiled: dict[tuple, tuple] = {}
+        # IC perturbation sampler: EngineConfig.perturb is the single
+        # source of truth for *whether/how* members are perturbed; an
+        # explicit sampler only contributes the data-derived
+        # spectrum/std, so its config must match exactly -- anything
+        # else (including an active sampler next to the default
+        # kind="none") is a config bug, refused rather than silently
+        # resolved.
+        if perturbation is not None and perturbation.cfg != cfg.perturb:
+            raise ValueError(
+                "EngineConfig.perturb and the explicit perturbation "
+                "sampler's config disagree; build both from the same "
+                "PerturbationConfig")
+        if perturbation is None and cfg.perturb.active:
+            perturbation = perturblib.InitialConditionPerturbation(
+                model.in_sht, cfg.perturb, model.grid_in.area_weights_2d())
+        self.perturbation = perturbation
+        self._compiled: dict[Any, Any] = {}
         self._cast_cache: dict[str, tuple] = {}
+
+    @property
+    def _perturb_cfg(self) -> perturblib.PerturbationConfig:
+        return self.cfg.perturb
 
     # ------------------------------------------------------------------
     def _constrain(self, x: jax.Array) -> jax.Array:
@@ -164,13 +246,79 @@ class ForecastEngine:
                              *([None] * (x.ndim - 1)))
         return jax.lax.with_sharding_constraint(x, spec)
 
-    def init_carry(self, state0: jax.Array, key: jax.Array
+    def init_carry(self, state0: jax.Array, key: jax.Array,
+                   params=None, buffers=None, aux0: jax.Array | None = None
                    ) -> tuple[jax.Array, jax.Array]:
-        """Ensemble-state / noise-coefficient carry from one (C,H,W) state."""
+        """Ensemble-state / noise-coefficient carry from one (C,H,W) state.
+
+        With an active perturbation config the members are perturbed on
+        device inside a compiled program (obs-error sampling needs nothing
+        extra; bred vectors additionally need ``params``/``buffers`` and
+        ``aux0``, the frozen conditioning fields the breeding rollouts run
+        under).  The perturbation key stream is salted away from the noise
+        process, so kind="none" stays bit-identical to the unperturbed
+        engine.
+        """
         e = self.cfg.members
         z_hat = self.model.noise.init_state(key, (e,), self.noise_buffers)
-        s = jnp.broadcast_to(state0, (e,) + state0.shape)
+        if self._perturb_cfg.active:
+            if self._perturb_cfg.kind == "bred" and (
+                    params is None or buffers is None or aux0 is None):
+                raise ValueError(
+                    "bred perturbations need params=, buffers= and aux0=")
+            s = self._get_init_fn()(state0, key, params, buffers, aux0)
+        else:
+            s = jnp.broadcast_to(state0, (e,) + state0.shape)
         return self._constrain(s.astype(self.cfg.jdtype)), z_hat
+
+    def _get_init_fn(self) -> Callable:
+        """Compiled perturbed-member sampler, cached per engine.
+
+        The sampler's Legendre tables travel as jit arguments (shardable,
+        never GB-scale HLO constants at full resolution); unlike the
+        per-step chunk functions there is no ``static_buffers`` baking --
+        init runs once per forecast, so constant folding buys nothing.
+        """
+        fn = self._compiled.get("init")
+        if fn is not None:
+            return fn
+        pert, e, m = self.perturbation, self.cfg.members, self.model
+        # The noise process runs on in_sht, so when the sampler shares
+        # that SHT (every current construction path) its Legendre tables
+        # already live in noise_buffers -- reuse them instead of holding
+        # a second device copy.
+        pbufs = (self.noise_buffers if pert.sht is m.in_sht
+                 else pert.buffers)
+
+        if pert.cfg.kind == "obs":
+            @jax.jit
+            def obs_init(state0, key, pb):
+                return pert.members(jax.random.fold_in(key, _PERTURB_SALT),
+                                    state0, e, sht_buffers=pb)
+
+            def fn(state0, key, params, buffers, aux0):
+                return obs_init(state0, key, pbufs)
+        else:
+            @jax.jit
+            def bred_init(params, buffers, state0, aux0, key, pb):
+                # Breeding runs the deterministic control dynamics: frozen
+                # aux conditioning, zero noise channels, fp32 carries.
+                cond = jnp.concatenate(
+                    [aux0, jnp.zeros((m.cfg.n_noise,) + state0.shape[-2:],
+                                     aux0.dtype)], axis=0)
+
+                def step_fn(s):
+                    return m.apply(params, buffers, s,
+                                   cond).astype(jnp.float32)
+
+                return pert.members(jax.random.fold_in(key, _PERTURB_SALT),
+                                    state0, e, step_fn, sht_buffers=pb)
+
+            def fn(state0, key, params, buffers, aux0):
+                return bred_init(params, buffers, state0, aux0, key, pbufs)
+
+        self._compiled["init"] = fn
+        return fn
 
     def noise_fields(self, z_hat: jax.Array) -> jax.Array:
         """Grid-space conditioning noise exactly as the scan body sees it
@@ -181,12 +329,42 @@ class ForecastEngine:
         return z
 
     # ------------------------------------------------------------------
+    def _score_fns(self, scored: bool, nbufs, aw
+                   ) -> dict[str, Callable]:
+        """Assemble the in-scan reduction registry from the config.
+
+        One place decides what the scan accumulates: each entry maps the
+        fp32 ensemble state and the per-step inputs to a per-lead
+        accumulator.  ``nbufs``/``aw`` arrive as traced values so the
+        non-baked chunk path keeps them as jit arguments (shardable), not
+        closed-over constants.
+        """
+        fns: dict[str, Callable] = {}
+        if scored:
+            fns["crps"] = lambda sf, x: metrics.crps(sf, x["truth"], aw)
+            fns["ens_rmse"] = (
+                lambda sf, x: metrics.ensemble_skill(sf, x["truth"], aw))
+            fns["spread"] = lambda sf, x: metrics.ensemble_spread(sf, aw)
+            fns["ssr"] = (
+                lambda sf, x: metrics.spread_skill_ratio(sf, x["truth"], aw))
+            fns["rank_hist"] = (
+                lambda sf, x: in_scan_rank_histogram(sf, x["truth"], aw))
+        if self.cfg.spectra:
+            wpct = nbufs["wpct"]  # noise shares the IO-resolution SHT
+            fns["spectrum"] = lambda sf, x: metrics.ensemble_spectrum(sf,
+                                                                      wpct)
+            if scored:
+                fns["spectrum_truth"] = (
+                    lambda sf, x: metrics.angular_psd(x["truth"], wpct))
+        return fns
+
     def _run_chunk(self, scored, params, buffers, nbufs, aw, s, z_hat,
                    key, xs):
         """Scan body shared by both chunk calling conventions."""
         m, c = self.model, self.cfg
         e, dt = c.members, c.jdtype
         diag = self.diagnostics
+        score_fns = self._score_fns(scored, nbufs, aw)
 
         def body(carry, x):
             s, z_hat = carry
@@ -206,13 +384,7 @@ class ForecastEngine:
             z_hat = m.noise.step(jax.random.fold_in(key, x["n"]),
                                  z_hat, nbufs)
             sf = s.astype(jnp.float32)
-            out = {}
-            if scored:
-                t = x["truth"]
-                out["crps"] = metrics.crps(sf, t, aw)
-                out["ens_rmse"] = metrics.ensemble_skill(sf, t, aw)
-                out["spread"] = metrics.ensemble_spread(sf, aw)
-                out["ssr"] = metrics.spread_skill_ratio(sf, t, aw)
+            out = {name: fn(sf, x) for name, fn in score_fns.items()}
             if diag is not None:
                 out["diag"] = diag(sf)
             return (s, z_hat), out
@@ -314,7 +486,12 @@ class ForecastEngine:
         fn = self._get_chunk_fn(
             scored, orig_buffers,
             buffers if self.cfg.static_buffers else None)
-        s, z_hat = self.init_carry(jnp.asarray(state0), key)
+        # Bred vectors cycle the model at init time: freeze the first
+        # lead's conditioning fields for the breeding rollouts.
+        aux0 = (jnp.asarray(self._stage(aux, 0, 1)[0], jnp.float32)
+                if self._perturb_cfg.kind == "bred" else None)
+        s, z_hat = self.init_carry(jnp.asarray(state0), key,
+                                   params=params, buffers=buffers, aux0=aux0)
         start = 0
         while start < steps:
             k = min(self.cfg.lead_chunk, steps - start)
@@ -326,8 +503,7 @@ class ForecastEngine:
             last = start + k >= steps
             yield ForecastResult(
                 lead_steps=np.arange(start, start + k),
-                scores={n: out[n] for n in
-                        ("crps", "ens_rmse", "spread", "ssr") if scored},
+                scores={n: out[n] for n in SCORE_NAMES if n in out},
                 diagnostics=out.get("diag"),
                 final_state=s if last else None,
                 final_noise=z_hat if last else None)

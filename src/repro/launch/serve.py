@@ -14,6 +14,15 @@ exposed here:
                        memory vs dispatch-count trade-off);
 * ``--precision bfloat16``  bf16 model compute with fp32 metric
                        accumulation;
+* ``--perturb {none,obs,bred}``  on-device initial-condition
+                       perturbations (paper App. E): obs-error sampling
+                       or cycled bred vectors, antithetically centered,
+                       scaled by the dataset's climatological stats;
+* ``--calibration``    per-degree energy spectra in the scan and a
+                       calibration summary (rank-histogram flatness,
+                       spread-skill, spectral ratio) per lead time --
+                       see docs/calibration.md;
+* ``--scores-out F``   save every in-scan score array to ``F`` (.npz);
 * members shard over the ``member_axes`` mesh convention of
   ``train.trainer`` when the engine is constructed with one (this CLI
   runs the single-host default).
@@ -22,7 +31,7 @@ exposed here:
 A/B timing; both paths are bit-identical in fp32.
 
   PYTHONPATH=src python -m repro.launch.serve --config smoke \
-      --members 4 --lead-steps 8
+      --members 4 --lead-steps 8 --perturb obs --calibration
 """
 
 from __future__ import annotations
@@ -32,13 +41,16 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import fcn3 as fcn3cfg
 from repro.core.fcn3 import FCN3
 from repro.core.sphere import noise as noiselib
 from repro.data import era5_synthetic as dlib
 from repro.evaluation import metrics
-from repro.inference import EngineConfig, ForecastEngine
+from repro.inference import (EngineConfig, ForecastEngine,
+                             InitialConditionPerturbation,
+                             PerturbationConfig)
 from repro.train import checkpoint as ckptlib
 
 CONFIGS = {"smoke": fcn3cfg.fcn3_smoke, "small": fcn3cfg.fcn3_small,
@@ -101,9 +113,28 @@ def main() -> None:
     ap.add_argument("--legacy-loop", action="store_true",
                     help="per-step-dispatch baseline instead of the "
                          "scan-compiled engine")
+    ap.add_argument("--perturb", default="none",
+                    choices=["none", "obs", "bred"],
+                    help="on-device initial-condition perturbation of the "
+                         "members (engine path)")
+    ap.add_argument("--perturb-amplitude", type=float, default=0.05,
+                    help="perturbation size as a fraction of the "
+                         "climatological channel std")
+    ap.add_argument("--bred-cycles", type=int, default=3,
+                    help="breeding cycles for --perturb bred")
+    ap.add_argument("--calibration", action="store_true",
+                    help="in-scan per-degree energy spectra + calibration "
+                         "summary per lead (rank-histogram flatness, "
+                         "spectral ratio)")
+    ap.add_argument("--scores-out", default=None,
+                    help="save all in-scan score arrays to this .npz file")
     ap.add_argument("--sample", type=int, default=123)
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
+    if args.legacy_loop and (args.perturb != "none" or args.calibration
+                             or args.scores_out):
+        ap.error("--perturb/--calibration/--scores-out require the "
+                 "engine path")
 
     cfg = CONFIGS[args.config]()
     model = FCN3(cfg)
@@ -137,18 +168,51 @@ def main() -> None:
         # Single-host CLI: bake the geometry into the executable except at
         # full resolution, where the Legendre tables are GB-scale and must
         # stay jit arguments (shardable, not HLO constants).
+        pcfg = PerturbationConfig(kind=args.perturb,
+                                  amplitude=args.perturb_amplitude,
+                                  bred_cycles=args.bred_cycles)
+        perturbation = (InitialConditionPerturbation.from_dataset(
+            model.in_sht, pcfg, ds) if pcfg.active else None)
         eng = ForecastEngine(model, EngineConfig(
             members=args.members, lead_chunk=args.lead_chunk,
             compute_dtype=args.precision,
-            static_buffers=args.config != "full"))
+            static_buffers=args.config != "full",
+            perturb=pcfg, spectra=args.calibration),
+            perturbation=perturbation)
+        collected: dict[str, list] = {}
         for block in eng.stream(params, buffers, state0,
                                 lambda n: ds.aux_fields(6.0 * (n + 1)), key,
                                 steps=args.lead_steps,
                                 truth=lambda n: ds.state(args.sample, n + 1)):
+            if args.scores_out:
+                # host copies only when they will be written: a long
+                # rollout otherwise accumulates every (T, C, L) spectrum
+                # on the host just to discard it
+                for name, arr in block.scores.items():
+                    collected.setdefault(name, []).append(np.asarray(arr))
             for i, n in enumerate(block.lead_steps):
                 report(int(n), float(block.scores["crps"][i].mean()),
                        float(block.scores["ens_rmse"][i].mean()),
                        float(block.scores["ssr"][i].mean()))
+                if args.calibration:
+                    # Channel-mean rank histogram flatness (max/min bin
+                    # frequency; 1 = perfectly flat) and the median
+                    # forecast/truth spectral-power ratio (1 = neither
+                    # blurred nor blown up) -- docs/calibration.md.
+                    rh = np.asarray(block.scores["rank_hist"][i]).mean(0)
+                    spec = np.asarray(block.scores["spectrum"][i])
+                    spec_t = np.asarray(block.scores["spectrum_truth"][i])
+                    lo = spec.shape[-1] // 2
+                    ratio = np.median(spec[:, 1:lo]
+                                      / np.maximum(spec_t[:, 1:lo], 1e-12))
+                    print(f"          rank-hist flatness="
+                          f"{rh.max() / max(rh.min(), 1e-12):.2f} "
+                          f"spectral ratio={ratio:.3f}")
+        if args.scores_out:
+            scores = {k: np.concatenate(v) for k, v in collected.items()}
+            np.savez(args.scores_out, **scores)
+            print(f"[serve] scores -> {args.scores_out} "
+                  f"({', '.join(sorted(scores))})")
     print("[serve] done -- no fields written to disk (in-situ scoring)")
 
 

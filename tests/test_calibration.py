@@ -1,0 +1,180 @@
+"""Tests for in-scan calibration scores (rank histograms, energy spectra).
+
+The engine's scan-body accumulators are latitude-banded O(E) reductions;
+they must match the reference implementations in ``evaluation/metrics``
+-- the rank histogram *bit-for-bit* (both end in the same integer counts
+and the same ring contraction) -- and the rank histogram must be uniform
+(chi-square) when the truth is statistically exchangeable with the
+ensemble members.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import fcn3 as fcn3cfg
+from repro.core.fcn3 import FCN3
+from repro.core.sphere import grids
+from repro.data import era5_synthetic as dlib
+from repro.evaluation import metrics
+from repro.inference import EngineConfig, ForecastEngine
+from repro.inference.engine import in_scan_rank_histogram
+
+NLAT, NLON = 16, 32
+AW = jnp.asarray(grids.make_grid(NLAT, NLON, "gauss").area_weights_2d(),
+                 jnp.float32)
+
+
+class TestRankHistogram:
+    @settings(max_examples=10, deadline=None)
+    @given(e=st.integers(2, 9), c=st.integers(1, 4),
+           seed=st.integers(0, 10_000))
+    def test_in_scan_bit_matches_reference(self, e, c, seed):
+        rng = np.random.default_rng(seed)
+        ens = jnp.asarray(rng.normal(size=(e, c, NLAT, NLON)), jnp.float32)
+        truth = jnp.asarray(rng.normal(size=(c, NLAT, NLON)), jnp.float32)
+        got = jax.jit(in_scan_rank_histogram)(ens, truth, AW)
+        ref = jax.jit(metrics.rank_histogram_per_channel)(ens, truth, AW)
+        assert got.shape == (c, e + 1)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    def test_in_scan_inside_lax_scan_still_matches(self):
+        # The accumulator runs inside a scan body in the engine; fusing
+        # must not change a bit either.
+        rng = np.random.default_rng(0)
+        ens = jnp.asarray(rng.normal(size=(5, 4, 3, NLAT, NLON)), jnp.float32)
+        truth = jnp.asarray(rng.normal(size=(5, 3, NLAT, NLON)), jnp.float32)
+
+        @jax.jit
+        def scanned(ens, truth):
+            return jax.lax.scan(
+                lambda _, x: (None, in_scan_rank_histogram(x[0], x[1], AW)),
+                None, (ens, truth))[1]
+
+        got = np.asarray(scanned(ens, truth))
+        for t in range(5):
+            ref = metrics.rank_histogram_per_channel(ens[t], truth[t], AW)
+            np.testing.assert_array_equal(got[t], np.asarray(ref))
+
+    def test_frequencies_sum_to_one(self):
+        rng = np.random.default_rng(3)
+        ens = jnp.asarray(rng.normal(size=(6, 2, NLAT, NLON)), jnp.float32)
+        truth = jnp.asarray(rng.normal(size=(2, NLAT, NLON)), jnp.float32)
+        h = np.asarray(in_scan_rank_histogram(ens, truth, AW))
+        np.testing.assert_allclose(h.sum(-1), 1.0, atol=1e-5)
+
+    def test_uniform_when_truth_exchangeable(self):
+        # Truth drawn from the ensemble distribution -> every rank equally
+        # likely.  iid fields, uniform weights: bin counts are multinomial
+        # (N, 1/(E+1)); Pearson chi-square must stay below the 0.999
+        # quantile of chi2(E) (~27.9 for E=8... use E=4: 18.47).
+        e, c = 4, 6
+        rng = np.random.default_rng(42)
+        ens = jnp.asarray(rng.normal(size=(e, c, NLAT, NLON)), jnp.float32)
+        truth = jnp.asarray(rng.normal(size=(c, NLAT, NLON)), jnp.float32)
+        uniform = jnp.full((NLAT, NLON), 1.0 / (NLAT * NLON), jnp.float32)
+        freq = np.asarray(
+            metrics.rank_histogram_per_channel(ens, truth, uniform))
+        n = NLAT * NLON
+        expected = 1.0 / (e + 1)
+        # pool channels: n*c iid points
+        chi2 = (n * c) * ((freq.mean(0) - expected) ** 2 / expected).sum()
+        assert chi2 < 18.47, f"rank histogram not uniform: chi2={chi2}"
+
+    def test_biased_ensemble_is_not_uniform(self):
+        # Sanity power check: a mean-shifted ensemble must blow past the
+        # same chi-square bound (the test above can actually fail).
+        e, c = 4, 6
+        rng = np.random.default_rng(42)
+        ens = jnp.asarray(rng.normal(size=(e, c, NLAT, NLON)) + 0.5,
+                          jnp.float32)
+        truth = jnp.asarray(rng.normal(size=(c, NLAT, NLON)), jnp.float32)
+        uniform = jnp.full((NLAT, NLON), 1.0 / (NLAT * NLON), jnp.float32)
+        freq = np.asarray(
+            metrics.rank_histogram_per_channel(ens, truth, uniform))
+        n = NLAT * NLON
+        expected = 1.0 / (e + 1)
+        chi2 = (n * c) * ((freq.mean(0) - expected) ** 2 / expected).sum()
+        assert chi2 > 18.47
+
+    def test_reference_consistent_with_legacy_rank_histogram(self):
+        # The per-channel reference, channel-averaged, agrees with the
+        # pre-existing pooled implementation.
+        rng = np.random.default_rng(7)
+        ens = jnp.asarray(rng.normal(size=(5, 3, NLAT, NLON)), jnp.float32)
+        truth = jnp.asarray(rng.normal(size=(3, NLAT, NLON)), jnp.float32)
+        per = np.asarray(
+            metrics.rank_histogram_per_channel(ens, truth, AW)).mean(0)
+        pooled = np.asarray(metrics.rank_histogram(ens, truth, AW))
+        np.testing.assert_allclose(per, pooled, rtol=1e-5)
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = fcn3cfg.fcn3_smoke()
+    model = FCN3(cfg)
+    ds = dlib.SyntheticERA5(cfg)
+    buffers = model.make_buffers()
+    state0 = ds.state(11, 0)
+    cond0 = jnp.concatenate(
+        [jnp.asarray(ds.aux_fields(0.0))[None],
+         model.sample_noise(jax.random.PRNGKey(1), (1,))], axis=1)
+    params = model.init_calibrated(jax.random.PRNGKey(0), state0[None],
+                                   cond0, buffers)
+    return cfg, model, ds, buffers, params, state0
+
+
+class TestEngineCalibrationScores:
+    STEPS = 3
+
+    def run(self, setup, **ecfg):
+        cfg, model, ds, buffers, params, state0 = setup
+        eng = ForecastEngine(model, EngineConfig(
+            members=4, lead_chunk=2, **ecfg))
+        return eng.forecast(params, buffers, state0,
+                            lambda n: ds.aux_fields(6.0 * (n + 1)),
+                            jax.random.PRNGKey(7), steps=self.STEPS,
+                            truth=lambda n: ds.state(11, n + 1))
+
+    def test_in_scan_rank_hist_matches_reference_exactly(self, engine_setup):
+        cfg, model, ds, buffers, params, state0 = engine_setup
+        res = self.run(engine_setup)
+        assert res.scores["rank_hist"].shape == (self.STEPS, cfg.n_state, 5)
+        aw = jnp.asarray(ds.grid.area_weights_2d(), jnp.float32)
+        ref = metrics.rank_histogram_per_channel(
+            res.final_state, ds.state(11, self.STEPS), aw)
+        np.testing.assert_array_equal(
+            np.asarray(res.scores["rank_hist"][-1]), np.asarray(ref))
+
+    def test_in_scan_spectrum_matches_reference(self, engine_setup):
+        cfg, model, ds, buffers, params, state0 = engine_setup
+        res = self.run(engine_setup, spectra=True)
+        lmax = model.in_sht.lmax
+        assert res.scores["spectrum"].shape == (self.STEPS, cfg.n_state,
+                                                lmax)
+        wpct = model.in_sht.buffers()["wpct"]
+        np.testing.assert_allclose(
+            np.asarray(res.scores["spectrum"][-1]),
+            np.asarray(metrics.ensemble_spectrum(res.final_state, wpct)),
+            rtol=2e-5, atol=1e-8)
+        np.testing.assert_allclose(
+            np.asarray(res.scores["spectrum_truth"][-1]),
+            np.asarray(metrics.angular_psd(ds.state(11, self.STEPS), wpct)),
+            rtol=2e-5, atol=1e-8)
+
+    def test_spectra_off_by_default(self, engine_setup):
+        res = self.run(engine_setup)
+        assert "spectrum" not in res.scores
+        assert "spectrum_truth" not in res.scores
+
+    def test_spectrum_without_truth(self, engine_setup):
+        cfg, model, ds, buffers, params, state0 = engine_setup
+        eng = ForecastEngine(model, EngineConfig(members=4, lead_chunk=2,
+                                                 spectra=True))
+        res = eng.forecast(params, buffers, state0,
+                           lambda n: ds.aux_fields(6.0 * (n + 1)),
+                           jax.random.PRNGKey(7), steps=2)
+        assert set(res.scores) == {"spectrum"}
+        assert bool(jnp.isfinite(res.scores["spectrum"]).all())

@@ -1,0 +1,73 @@
+"""Golden regression test for the spherical-diffusion spectral stds.
+
+``SphericalDiffusion._sigma_l`` implements eq. (28): sigma_l = F0
+exp(-k_T/2 l(l+1)) with F0 fixing the stationary pointwise variance.  The
+seed's normalization was only ever eyeballed against sampled fields, so a
+silent change of convention (4pi factors, the l=0 exclusion, phi
+placement) would re-scale every ensemble's noise conditioning without any
+test noticing.  These checked-in values pin eq. (28) for all eight
+Table-1 ``k_T`` scales at lmax=16; the analytic identities below pin the
+normalization contract the numbers came from.
+"""
+
+import numpy as np
+
+from repro.core.sphere import grids, sht as shtlib
+from repro.core.sphere.noise import FCN3_KT_SCALES, SphericalDiffusion
+
+LMAX = 16
+GOLDEN_LS = (1, 2, 4, 8, 15)
+# rows: Table-1 k_T scales (small -> large); cols: degrees GOLDEN_LS.
+GOLDEN_SIGMA_L = np.array([
+    [1.46246630e-01, 1.46237620e-01, 1.46206090e-01, 1.46089060e-01,
+     1.45711590e-01],
+    [1.47095790e-01, 1.47059600e-01, 1.46933040e-01, 1.46463900e-01,
+     1.44958420e-01],
+    [1.50518750e-01, 1.50370410e-01, 1.49852370e-01, 1.47943830e-01,
+     1.41942300e-01],
+    [1.64392520e-01, 1.63746090e-01, 1.61503530e-01, 1.53439600e-01,
+     1.30038030e-01],
+    [2.21235140e-01, 2.17771450e-01, 2.06070040e-01, 1.67850900e-01,
+     8.65148500e-02],
+    [4.05796330e-01, 3.80943620e-01, 3.05347780e-01, 1.34269820e-01,
+     9.44468000e-03],
+    [7.61681243e-01, 5.92012738e-01, 2.45066145e-01, 9.25837134e-03,
+     2.34402262e-07],
+    [1.21025165e+00, 4.40796622e-01, 1.28530816e-02, 2.55106025e-08,
+     9.63715389e-27],
+])
+
+
+def _sigma_l():
+    s = shtlib.SHT.create(grids.make_grid(LMAX, 2 * LMAX, "gauss"))
+    return SphericalDiffusion(sht=s)._sigma_l()
+
+
+class TestSigmaLGolden:
+    def test_table1_values_pinned(self):
+        sig = _sigma_l()
+        assert sig.shape == (len(FCN3_KT_SCALES), LMAX)
+        np.testing.assert_allclose(sig[:, GOLDEN_LS], GOLDEN_SIGMA_L,
+                                   rtol=1e-6)
+
+    def test_l0_excluded(self):
+        # eq. (28c) sums over l > 0: the mean mode carries no noise.
+        np.testing.assert_array_equal(_sigma_l()[:, 0], 0.0)
+
+    def test_normalization_identity(self):
+        # The F0 normalization makes sum_{l>0} (2l+1) sigma_l^2 equal
+        # 2 pi sigma^2 (1 - phi^2) for EVERY k_T -- the scale-independent
+        # contract behind eq. (28)'s stationary pointwise variance.
+        sig = _sigma_l()
+        ell = np.arange(LMAX)
+        sums = ((2 * ell + 1) * sig ** 2).sum(axis=1)
+        phi = np.exp(-1.0)
+        np.testing.assert_allclose(
+            sums, 2.0 * np.pi * (1.0 - phi * phi), rtol=1e-10)
+
+    def test_monotone_in_kt(self):
+        # Larger k_T concentrates power at low degrees: sigma_l at l=15
+        # strictly decreases, sigma_l at l=1 strictly increases.
+        sig = _sigma_l()
+        assert np.all(np.diff(sig[:, 15]) < 0)
+        assert np.all(np.diff(sig[:, 1]) > 0)

@@ -1,0 +1,225 @@
+"""Tests for initial-condition perturbations (paper App. E).
+
+Property tests (via ``_hypothesis_compat``) for the sampler itself --
+prescribed per-channel variance, antithetic pairing, bred-vector
+amplitude convergence -- plus engine-integration checks that perturbed
+members are generated on device in ``init_carry`` and that kind="none"
+keeps the PR-1 behaviour bit-for-bit.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import fcn3 as fcn3cfg
+from repro.core.fcn3 import FCN3
+from repro.core.sphere import grids, noise as noiselib, sht as shtlib
+from repro.data import era5_synthetic as dlib
+from repro.evaluation import metrics
+from repro.inference import (EngineConfig, ForecastEngine,
+                             InitialConditionPerturbation,
+                             PerturbationConfig)
+
+NLAT, NLON = 16, 32
+
+
+def make_pert(kind="obs", amplitude=0.1, channel_std=1.0, antithetic=True,
+              bred_cycles=2, bred_steps=1, slope=1.0, peak_l=6):
+    """Sampler on a small Gaussian grid with a flat-ish spectrum (more
+    spectral dof than the steep atmospheric law -> tighter statistics)."""
+    grid = grids.make_grid(NLAT, NLON, "gauss")
+    s = shtlib.SHT.create(grid)
+    cfg = PerturbationConfig(kind=kind, amplitude=amplitude,
+                             antithetic=antithetic, bred_cycles=bred_cycles,
+                             bred_steps=bred_steps)
+    sigma_l = noiselib.power_law_sigma_l(s.lmax, slope=slope, peak_l=peak_l)
+    return InitialConditionPerturbation(s, cfg, grid.area_weights_2d(),
+                                        sigma_l=sigma_l,
+                                        channel_std=channel_std)
+
+
+class TestObsError:
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 1000), amplitude=st.floats(0.05, 0.5))
+    def test_prescribed_per_channel_variance(self, seed, amplitude):
+        # sigma_l is normalized to unit pointwise variance, so each
+        # channel's spatially averaged squared perturbation estimates
+        # (amplitude * channel_std)^2.  32 independent draws x the grid's
+        # spectral dof give a ~3% estimator std; assert within 15%.
+        std = np.asarray([0.5, 1.0, 2.0, 4.0], np.float32)
+        pert = make_pert(amplitude=amplitude, channel_std=std,
+                         antithetic=False)
+        p = pert.obs_vectors(jax.random.PRNGKey(seed), 32, len(std))
+        assert p.shape == (32, len(std), NLAT, NLON)
+        var = metrics._spatial_mean(p * p, pert.area_weights).mean(axis=0)
+        np.testing.assert_allclose(np.asarray(var), (amplitude * std) ** 2,
+                                   rtol=0.15)
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 1000), members=st.integers(2, 9))
+    def test_antithetic_pairs_sum_to_control(self, seed, members):
+        pert = make_pert()
+        state0 = jnp.asarray(
+            np.random.default_rng(seed).normal(size=(3, NLAT, NLON)),
+            jnp.float32)
+        m = pert.members(jax.random.PRNGKey(seed), state0, members)
+        assert m.shape == (members,) + state0.shape
+        p = np.asarray(m) - np.asarray(state0)[None]
+        k = members - members % 2
+        # perturbations are exactly mirrored; the pair mean recovers the
+        # control up to one float addition's rounding
+        np.testing.assert_allclose(p[1:k:2], -p[0:k:2], atol=1e-6)
+        np.testing.assert_allclose(
+            0.5 * (np.asarray(m)[0:k:2] + np.asarray(m)[1:k:2]),
+            np.broadcast_to(np.asarray(state0), (k // 2,) + state0.shape),
+            atol=1e-6)
+
+    def test_antithetic_vectors_exactly_mirrored(self):
+        # The raw expansion (before adding the control) is exact negation.
+        p = make_pert().obs_vectors(jax.random.PRNGKey(0), 3, 2)
+        z = noiselib.antithetic_expand(p, 6)
+        np.testing.assert_array_equal(np.asarray(z[1::2]),
+                                      -np.asarray(z[0::2]))
+        with pytest.raises(ValueError):
+            noiselib.antithetic_expand(p, 4)  # 3 draws != ceil(4/2)
+
+    def test_uncentered_members_independent(self):
+        pert = make_pert(antithetic=False)
+        state0 = jnp.zeros((2, NLAT, NLON))
+        m = np.asarray(pert.members(jax.random.PRNGKey(3), state0, 4))
+        assert np.abs(m[0] + m[1]).max() > 1e-6
+
+
+class TestBredVectors:
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 1000), cycles=st.integers(1, 4),
+           steps=st.integers(1, 2))
+    def test_converges_to_target_amplitude(self, seed, cycles, steps):
+        # Unstable linear dynamics: breeding must return vectors whose
+        # per-channel area-weighted RMS is exactly the target amplitude
+        # (the last cycle ends in a rescale), regardless of the growth
+        # rate the cycling fought against.
+        std = np.asarray([1.0, 2.0], np.float32)
+        pert = make_pert(kind="bred", amplitude=0.2, channel_std=std,
+                         bred_cycles=cycles, bred_steps=steps)
+        state0 = jnp.asarray(
+            np.random.default_rng(seed).normal(size=(2, NLAT, NLON)),
+            jnp.float32)
+
+        def step_fn(s):  # growing, rotating linear map
+            return 1.7 * jnp.roll(s, 1, axis=-1)
+
+        p = pert.bred_vectors(jax.random.PRNGKey(seed), state0, step_fn, 3)
+        rms = np.sqrt(np.asarray(
+            metrics._spatial_mean(p * p, pert.area_weights)))
+        np.testing.assert_allclose(rms, 0.2 * std[None, :].repeat(3, 0),
+                                   rtol=1e-4)
+
+    def test_cycling_aligns_with_growing_direction(self):
+        # Dynamics that amplify channel 0 and damp channel 1 *before* the
+        # per-channel rescale see their bred vector dominated by the
+        # growing spatial structure: cycling pulls energy toward the
+        # leading mode of the propagator (here: low-wavenumber smoothing
+        # kills fine structure, so spectra must steepen under cycling).
+        pert = make_pert(kind="bred", amplitude=0.1, bred_cycles=4)
+        state0 = jnp.zeros((1, NLAT, NLON))
+
+        def smooth(s):  # contract fine scales: 2x neighbour averaging
+            return 2.0 * (0.5 * s + 0.25 * jnp.roll(s, 1, -1)
+                          + 0.25 * jnp.roll(s, -1, -1))
+
+        key = jax.random.PRNGKey(5)
+        p0 = pert._rescale(pert.obs_vectors(key, 1, 1))
+        pk = pert.bred_vectors(key, state0, smooth, 1)
+        wpct = pert.buffers["wpct"]
+        s0 = np.asarray(metrics.angular_psd(p0[0, 0], wpct))
+        sk = np.asarray(metrics.angular_psd(pk[0, 0], wpct))
+        lo, hi = slice(1, 5), slice(8, 14)
+        assert (sk[hi].sum() / sk[lo].sum()
+                < 0.5 * s0[hi].sum() / s0[lo].sum())
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = fcn3cfg.fcn3_smoke()
+    model = FCN3(cfg)
+    ds = dlib.SyntheticERA5(cfg)
+    buffers = model.make_buffers()
+    state0 = ds.state(11, 0)
+    cond0 = jnp.concatenate(
+        [jnp.asarray(ds.aux_fields(0.0))[None],
+         model.sample_noise(jax.random.PRNGKey(1), (1,))], axis=1)
+    params = model.init_calibrated(jax.random.PRNGKey(0), state0[None],
+                                   cond0, buffers)
+    return cfg, model, ds, buffers, params, state0
+
+
+class TestEngineIntegration:
+    def test_obs_members_on_device_init(self, engine_setup):
+        cfg, model, ds, buffers, params, state0 = engine_setup
+        pcfg = PerturbationConfig(kind="obs", amplitude=0.1)
+        eng = ForecastEngine(
+            model, EngineConfig(members=4, perturb=pcfg),
+            perturbation=InitialConditionPerturbation.from_dataset(
+                model.in_sht, pcfg, ds))
+        s, _ = eng.init_carry(state0, jax.random.PRNGKey(7))
+        p = np.asarray(s) - np.asarray(state0)[None]
+        np.testing.assert_allclose(p[1::2], -p[0::2], atol=1e-6)
+        assert np.abs(p).max() > 1e-3  # actually perturbed
+
+    def test_perturbed_noise_stream_unchanged(self, engine_setup):
+        # The perturbation key stream is salted away from the AR(1) noise
+        # process: same z_hat with and without perturbations.
+        cfg, model, ds, buffers, params, state0 = engine_setup
+        base = ForecastEngine(model, EngineConfig(members=4))
+        pert = ForecastEngine(model, EngineConfig(
+            members=4, perturb=PerturbationConfig(kind="obs")))
+        _, z0 = base.init_carry(state0, jax.random.PRNGKey(7))
+        _, z1 = pert.init_carry(state0, jax.random.PRNGKey(7))
+        np.testing.assert_array_equal(np.asarray(z0), np.asarray(z1))
+
+    def test_bred_forecast_runs_and_spreads(self, engine_setup):
+        cfg, model, ds, buffers, params, state0 = engine_setup
+        pcfg = PerturbationConfig(kind="bred", amplitude=0.1, bred_cycles=1)
+        eng = ForecastEngine(
+            model, EngineConfig(members=2, lead_chunk=2, perturb=pcfg),
+            perturbation=InitialConditionPerturbation.from_dataset(
+                model.in_sht, pcfg, ds))
+        res = eng.forecast(params, buffers, state0,
+                           lambda n: ds.aux_fields(6.0 * (n + 1)),
+                           jax.random.PRNGKey(7), steps=2,
+                           truth=lambda n: ds.state(11, n + 1))
+        assert bool(jnp.isfinite(res.final_state).all())
+        base = ForecastEngine(model, EngineConfig(members=2, lead_chunk=2))
+        ref = base.forecast(params, buffers, state0,
+                            lambda n: ds.aux_fields(6.0 * (n + 1)),
+                            jax.random.PRNGKey(7), steps=2,
+                            truth=lambda n: ds.state(11, n + 1))
+        # IC perturbations add spread on top of the noise conditioning
+        assert (float(res.scores["spread"].mean())
+                > float(ref.scores["spread"].mean()))
+
+    def test_bred_requires_params(self, engine_setup):
+        cfg, model, ds, buffers, params, state0 = engine_setup
+        eng = ForecastEngine(model, EngineConfig(
+            members=2, perturb=PerturbationConfig(kind="bred")))
+        with pytest.raises(ValueError, match="bred"):
+            eng.init_carry(state0, jax.random.PRNGKey(0))
+
+    def test_bad_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown perturbation kind"):
+            PerturbationConfig(kind="typo")
+
+    def test_disagreeing_configs_rejected(self, engine_setup):
+        # EngineConfig.perturb and an explicit sampler built from a
+        # different config is a silent-wrong-amplitude bug -- refuse.
+        cfg, model, ds, buffers, params, state0 = engine_setup
+        sampler = InitialConditionPerturbation.from_dataset(
+            model.in_sht, PerturbationConfig(kind="obs", amplitude=0.05), ds)
+        with pytest.raises(ValueError, match="disagree"):
+            ForecastEngine(model, EngineConfig(
+                members=2,
+                perturb=PerturbationConfig(kind="obs", amplitude=0.2)),
+                perturbation=sampler)
