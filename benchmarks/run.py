@@ -7,6 +7,9 @@ EXPERIMENTS.md (dry-run roofline terms for the production mesh).
   fig3_crps / fig15_ssr / fig16_rank_hist -- probabilistic skill, calibration
   fig5_spectral_fidelity                  -- angular PSD ratio vs truth
   sec5_inference_speed                    -- autoregressive rollout step time
+  sec5_serving                            -- served-request latency: cold vs
+                                             warm executable cache, 1 vs N
+                                             concurrent requests
   table3_train_step                       -- ensemble CRPS train-step time
   kernel_*                                -- Pallas hot-spot kernels
   secG_dryrun_rooflines                   -- production-mesh roofline summary
@@ -197,6 +200,60 @@ def bench_inference_speed(members: int = 2, steps: int = 8) -> None:
          f"15day_forecast_s={us_leg * steps_15d / 1e6:.2f}")
 
 
+def bench_serving(members: int = 2, steps: int = 4) -> None:
+    """Section 5, served: request latency/throughput through the serving
+    scheduler (queue -> executable cache -> chunk-streamed rollout).
+
+    Rows (microseconds per request):
+      * sec5_serving_cold_request -- first request for a shape key: pays
+        lower+compile once (``compile_s`` in the derived column)
+      * sec5_serving_warm_request -- same shape again: cache hit, zero
+        compile, the cold-vs-warm ratio is the executable cache's win
+      * sec5_serving_concurrent   -- N warm requests submitted at once
+        vs sequentially (scheduler queueing + staging overlap)
+    """
+    from repro.serving.cache import ExecutableCache
+    from repro.serving.scheduler import (ForecastScheduler, ModelPool,
+                                         RequestSpec)
+    sched = ForecastScheduler(pool=ModelPool(), cache=ExecutableCache(),
+                              max_concurrency=2)
+    spec = RequestSpec(config="smoke", members=members, lead_steps=steps,
+                       lead_chunk=max(1, steps // 2), scored=True)
+    try:
+        t0 = time.perf_counter()
+        cold = sched.submit(spec).result()
+        cold_s = time.perf_counter() - t0
+        _row("sec5_serving_cold_request", cold_s * 1e6,
+             f"compile_s={cold.timing['compile_s']:.2f};"
+             f"setup_s={cold.timing['setup_s']:.2f};"
+             f"cache_misses={cold.cache['misses']}")
+
+        t0 = time.perf_counter()
+        warm = sched.submit(spec).result()
+        warm_s = time.perf_counter() - t0
+        assert warm.timing["compile_s"] == 0.0, "warm request recompiled"
+        _row("sec5_serving_warm_request", warm_s * 1e6,
+             f"compile_s={warm.timing['compile_s']:.2f};"
+             f"cache_misses={warm.cache['misses']};"
+             f"cold_vs_warm={cold_s / warm_s:.1f}x")
+
+        n = 4
+        t0 = time.perf_counter()
+        for _ in range(n):
+            sched.submit(spec).result()
+        seq_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        streams = [sched.submit(spec) for _ in range(n)]
+        for s in streams:
+            s.result()
+        conc_s = time.perf_counter() - t0
+        _row("sec5_serving_concurrent", conc_s / n * 1e6,
+             f"n={n};throughput_rps={n / conc_s:.2f};"
+             f"sequential_rps={n / seq_s:.2f}")
+    finally:
+        sched.close()
+
+
 def bench_train_step() -> None:
     """Table 3: one ensemble-CRPS training step (stage-1 recipe, reduced)."""
     from repro.configs import fcn3 as fcn3cfg
@@ -267,6 +324,7 @@ BENCHES = {
     "fig5_spectral_fidelity": lambda a: bench_spectral_fidelity(),
     "sec5_inference_speed": lambda a: bench_inference_speed(a.members,
                                                             a.steps),
+    "sec5_serving": lambda a: bench_serving(a.members, a.steps),
     "table3_train_step": lambda a: bench_train_step(),
     "kernel_pallas": lambda a: bench_kernels(),
     "secG_dryrun_rooflines": lambda a: bench_dist_roofline(),

@@ -85,3 +85,13 @@ def fcn3_small() -> FCN3Config:
         n_levels=5, atmos_embed=20, surface_embed=21, cond_embed=12,
         n_blocks=5, global_block_every=5, mlp_hidden=256,
     )
+
+
+#: Named model configs shared by every CLI entry point (serve, service,
+#: benchmarks): one registry so a serving request's ``config`` field and
+#: ``--config`` flags resolve identically everywhere.
+NAMED_CONFIGS = {
+    "smoke": fcn3_smoke,
+    "small": fcn3_small,
+    "full": fcn3_full,
+}

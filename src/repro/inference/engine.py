@@ -44,11 +44,20 @@ Design points:
   (``repro.inference.perturbations``, paper App. E); ``init_carry``
   generates the perturbed members on device inside a compiled program.
   The default ("none") replicates the analysis state exactly as before.
+* **AOT executables.**  ``lower_chunk`` / ``compile_chunk`` expose the
+  chunk function's explicit lower-then-compile stages (the serving
+  layer's executable cache, ``repro.serving.cache``, drives them), and
+  ``export_chunk`` / ``import_chunk`` round-trip the lowered program
+  through ``jax.export`` so a fresh process skips Python tracing.
+  ``stream`` dispatches to an installed executable whenever one matches
+  the chunk length, falling back to the implicit jit path otherwise;
+  both paths run the same lowering, so results are bit-identical.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Callable, Iterator
 
 import jax
@@ -228,6 +237,21 @@ class ForecastEngine:
         self.perturbation = perturbation
         self._compiled: dict[Any, Any] = {}
         self._cast_cache: dict[str, tuple] = {}
+        # AOT executables installed by compile_chunk/import_chunk, keyed
+        # (scored, baked, chunk_len); dispatch_counts records which path
+        # served each chunk call ("aot" must stay exclusive on a warm
+        # serving engine -- a "jit" tick there is a recompilation).
+        self._aot: dict[Any, tuple] = {}
+        self.dispatch_counts = {"aot": 0, "jit": 0}
+        # chunk dispatches are one per lead_chunk, so a lock here is
+        # noise next to the device work -- but it keeps the counts exact
+        # when a serving scheduler runs concurrent rollouts on one engine
+        self._dispatch_lock = threading.Lock()
+        # guards the identity-keyed caches (_cast_cache, _compiled):
+        # concurrent workers warming one engine must agree on a single
+        # cast params/buffers object, or AOT entries pinned to the loser
+        # would silently fall back to the recompiling jit path
+        self._cache_lock = threading.RLock()
 
     @property
     def _perturb_cfg(self) -> perturblib.PerturbationConfig:
@@ -279,6 +303,10 @@ class ForecastEngine:
         per-step chunk functions there is no ``static_buffers`` baking --
         init runs once per forecast, so constant folding buys nothing.
         """
+        with self._cache_lock:
+            return self._init_fn_locked()
+
+    def _init_fn_locked(self) -> Callable:
         fn = self._compiled.get("init")
         if fn is not None:
             return fn
@@ -398,17 +426,50 @@ class ForecastEngine:
         recasting GB-scale trees per forecast would dominate.  A *new*
         tree object (e.g. updated params) recasts and replaces the entry.
         """
-        entry = self._cast_cache.get(slot)
-        if entry is not None and entry[0] is tree:
-            return entry[1]
-        cast = _cast_floats(tree, dt)
-        self._cast_cache[slot] = (tree, cast)
-        return cast
+        with self._cache_lock:
+            entry = self._cast_cache.get(slot)
+            if entry is not None and entry[0] is tree:
+                return entry[1]
+            cast = _cast_floats(tree, dt)
+            self._cast_cache[slot] = (tree, cast)
+            return cast
 
-    def _get_chunk_fn(self, scored: bool, buffers=None,
-                      baked_buffers=None) -> Callable:
-        """The compiled scan over one chunk of lead times, as a callable
-        ``fn(params, buffers, s, z_hat, key, xs)``.
+    def _count_dispatch(self, path: str) -> None:
+        with self._dispatch_lock:
+            self.dispatch_counts[path] += 1
+
+    def dispatch_stats(self) -> dict:
+        """Copy of the chunk-dispatch counters ("aot" vs "jit"); on a
+        warm serving engine "jit" staying 0 is the no-recompilation
+        invariant the tests and /v1/stats assert."""
+        with self._dispatch_lock:
+            return dict(self.dispatch_counts)
+
+    def _lookup_aot(self, scored: bool, baked: bool, k: int,
+                    params, prepared_buffers) -> Callable | None:
+        """Installed executable for a k-step chunk, or None.
+
+        Entries are pinned to the params/buffers *objects* they were
+        compiled against: an AOT executable hard-codes shapes and
+        shardings, so a different object falls back to the (gracefully
+        retracing) jit path instead of crashing mid-request.
+        """
+        ent = self._aot.get((scored, baked, k))
+        if ent is None:
+            return None
+        pin_params, pin_bufs, call = ent
+        if pin_params is not params or pin_bufs is not prepared_buffers:
+            return None
+        return call
+
+    def _get_chunk_entry(self, scored: bool, buffers=None,
+                         baked_buffers=None) -> tuple:
+        """(pin, fn, jitted) for one (scored, baked) chunk variant.
+
+        ``fn(params, buffers, s, z_hat, key, xs)`` is the dispatching
+        callable ``stream`` uses: it prefers an installed AOT executable
+        for the chunk length and falls back to ``jitted`` (the raw
+        ``jax.jit`` object the lower/compile/export hooks operate on).
 
         With ``static_buffers``, ``baked_buffers`` (the possibly
         precision-cast copy) is closed over -- constant-folded into the
@@ -420,9 +481,15 @@ class ForecastEngine:
         """
         baked = baked_buffers is not None
         cache_key = (scored, baked)
+        with self._cache_lock:
+            return self._chunk_entry_locked(scored, baked, cache_key,
+                                            buffers, baked_buffers)
+
+    def _chunk_entry_locked(self, scored, baked, cache_key, buffers,
+                            baked_buffers) -> tuple:
         entry = self._compiled.get(cache_key)
         if entry is not None and (not baked or entry[0] is buffers):
-            return entry[1]
+            return entry
         donate = self.cfg.donate
         nbufs, aw = self.noise_buffers, self.area_weights
 
@@ -434,6 +501,13 @@ class ForecastEngine:
             jitted = jax.jit(chunk, donate_argnums=(1, 2) if donate else ())
 
             def fn(params, _buffers, s, z_hat, key, xs):
+                k = int(xs["n"].shape[0])
+                aot = self._lookup_aot(scored, True, k, params,
+                                       baked_buffers)
+                if aot is not None:
+                    self._count_dispatch("aot")
+                    return aot(params, s, z_hat, key, xs)
+                self._count_dispatch("jit")
                 return jitted(params, s, z_hat, key, xs)
         else:
             def chunk(params, bufs, nb, w, s, z_hat, key, xs):
@@ -443,10 +517,138 @@ class ForecastEngine:
             jitted = jax.jit(chunk, donate_argnums=(4, 5) if donate else ())
 
             def fn(params, bufs, s, z_hat, key, xs):
+                k = int(xs["n"].shape[0])
+                aot = self._lookup_aot(scored, False, k, params, bufs)
+                if aot is not None:
+                    self._count_dispatch("aot")
+                    return aot(params, bufs, nbufs, aw, s, z_hat, key, xs)
+                self._count_dispatch("jit")
                 return jitted(params, bufs, nbufs, aw, s, z_hat, key, xs)
 
-        self._compiled[cache_key] = (buffers if baked else None, fn)
-        return fn
+        entry = (buffers if baked else None, fn, jitted)
+        self._compiled[cache_key] = entry
+        return entry
+
+    def _get_chunk_fn(self, scored: bool, buffers=None,
+                      baked_buffers=None) -> Callable:
+        """The compiled scan over one chunk of lead times, as a callable
+        ``fn(params, buffers, s, z_hat, key, xs)``."""
+        return self._get_chunk_entry(scored, buffers, baked_buffers)[1]
+
+    # ------------------------------------------------------------------
+    # AOT hooks: explicit lower/compile (and jax.export persistence) of
+    # the chunk function, instead of relying on implicit jit.  Driven by
+    # the serving layer's executable cache (repro.serving.cache).
+    def _prepare_inputs(self, params, buffers) -> tuple:
+        """Apply the precision policy to params/buffers (identity-cached,
+        so warm serving loops hand back the same cast objects)."""
+        dt = self.cfg.jdtype
+        if dt != jnp.float32:
+            params = self._cast_cached("params", params, dt)
+            buffers = self._cast_cached("buffers", buffers, dt)
+        return params, buffers
+
+    def chunk_lengths(self, steps: int) -> list[int]:
+        """Distinct scan lengths a ``steps``-long rollout dispatches: the
+        full ``lead_chunk`` plus the shorter final chunk when uneven.
+        Warming executables for exactly these keys makes the rollout pay
+        zero compile time inside ``stream``."""
+        lens: list[int] = []
+        start = 0
+        while start < steps:
+            k = min(self.cfg.lead_chunk, steps - start)
+            if k not in lens:
+                lens.append(k)
+            start += k
+        return lens
+
+    def _chunk_avals(self, scored: bool, k: int, params, buffers) -> tuple:
+        """Abstract arguments of the k-step chunk jit, in its calling
+        convention: ``(params, s, z_hat, key, xs)`` when buffers are
+        baked, else ``(params, buffers, nbufs, aw, s, z_hat, key, xs)``.
+        ``params``/``buffers`` must already be precision-prepared."""
+        def avals(tree):
+            return jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(jnp.shape(a),
+                                               jnp.asarray(a).dtype), tree)
+
+        m, cfg = self.model, self.cfg
+        h, w = m.grid_in.nlat, m.grid_in.nlon
+        s_av = jax.ShapeDtypeStruct((cfg.members, m.cfg.n_state, h, w),
+                                    cfg.jdtype)
+        z_av = jax.ShapeDtypeStruct(
+            (cfg.members, m.noise.n_proc, m.in_sht.lmax, m.in_sht.mmax),
+            jnp.complex64)
+        k0 = jax.random.PRNGKey(0)
+        key_av = jax.ShapeDtypeStruct(k0.shape, k0.dtype)
+        xs_av = {"n": jax.ShapeDtypeStruct((k,), jnp.int32),
+                 "aux": jax.ShapeDtypeStruct((k, m.cfg.n_aux, h, w),
+                                             jnp.float32)}
+        if scored:
+            xs_av["truth"] = jax.ShapeDtypeStruct((k, m.cfg.n_state, h, w),
+                                                  jnp.float32)
+        if cfg.static_buffers:
+            return (avals(params), s_av, z_av, key_av, xs_av)
+        return (avals(params), avals(buffers), avals(self.noise_buffers),
+                avals(self.area_weights), s_av, z_av, key_av, xs_av)
+
+    def _chunk_jitted_and_prepared(self, scored: bool, params, buffers
+                                   ) -> tuple:
+        pc, bc = self._prepare_inputs(params, buffers)
+        entry = self._get_chunk_entry(
+            scored, buffers, bc if self.cfg.static_buffers else None)
+        return entry[2], pc, bc
+
+    def lower_chunk(self, scored: bool, k: int, params, buffers
+                    ) -> jax.stages.Lowered:
+        """Explicitly lower the k-step chunk function (``jax.jit(...)
+        .lower``) against this engine's shapes.  ``.compile()`` on the
+        result is what ``compile_chunk`` installs."""
+        jitted, pc, bc = self._chunk_jitted_and_prepared(scored, params,
+                                                         buffers)
+        return jitted.lower(*self._chunk_avals(scored, k, pc, bc))
+
+    def compile_chunk(self, scored: bool, k: int, params, buffers):
+        """AOT-compile the k-step chunk and install it so ``stream``
+        dispatches to it (bit-identical to the implicit jit path -- same
+        lowering, same compiler).  Returns the ``jax.stages.Compiled``."""
+        compiled = self.lower_chunk(scored, k, params, buffers).compile()
+        pc, bc = self._prepare_inputs(params, buffers)
+        self._aot[(scored, self.cfg.static_buffers, k)] = (pc, bc, compiled)
+        return compiled
+
+    def has_chunk_executable(self, scored: bool, k: int, params, buffers
+                             ) -> bool:
+        """True when a warm executable is installed for this chunk length
+        and would actually be dispatched for these params/buffers."""
+        pc, bc = self._prepare_inputs(params, buffers)
+        return self._lookup_aot(scored, self.cfg.static_buffers, k, pc,
+                                bc) is not None
+
+    def export_chunk(self, scored: bool, k: int, params, buffers) -> bytes:
+        """Serialize the lowered k-step chunk program via ``jax.export``
+        (StableHLO).  A fresh process imports the blob with
+        ``import_chunk`` and skips Python tracing/lowering entirely; the
+        XLA backend compile of the restored module still runs once (pair
+        with a persistent XLA compilation cache to also skip that)."""
+        from jax import export as jexport
+        jitted, pc, bc = self._chunk_jitted_and_prepared(scored, params,
+                                                         buffers)
+        exp = jexport.export(jitted)(*self._chunk_avals(scored, k, pc, bc))
+        return bytes(exp.serialize())
+
+    def import_chunk(self, scored: bool, k: int, blob: bytes, params,
+                     buffers) -> None:
+        """Deserialize an ``export_chunk`` blob, compile it eagerly and
+        install it like ``compile_chunk``.  Carry donation is not
+        re-declared on imported programs (jax.export drops it); the jit
+        path's donation only saves a state-sized copy per chunk."""
+        from jax import export as jexport
+        exp = jexport.deserialize(bytearray(blob))
+        pc, bc = self._prepare_inputs(params, buffers)
+        avals = self._chunk_avals(scored, k, pc, bc)
+        compiled = jax.jit(exp.call).lower(*avals).compile()
+        self._aot[(scored, self.cfg.static_buffers, k)] = (pc, bc, compiled)
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -478,10 +680,7 @@ class ForecastEngine:
             raise ValueError(
                 f"lead_chunk must be >= 1, got {self.cfg.lead_chunk}")
         orig_buffers = buffers
-        dt = self.cfg.jdtype
-        if dt != jnp.float32:
-            params = self._cast_cached("params", params, dt)
-            buffers = self._cast_cached("buffers", buffers, dt)
+        params, buffers = self._prepare_inputs(params, buffers)
         scored = truth is not None
         fn = self._get_chunk_fn(
             scored, orig_buffers,

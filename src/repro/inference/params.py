@@ -1,0 +1,31 @@
+"""Forecast-model parameter loading.
+
+One loader shared by every entry point that needs ready-to-serve params
+(the one-shot serve CLI, the serving pool's model bundles), so all of
+them stay bit-identical by construction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def load_params(model, ds, buffers, state0, ckpt: str | None = None):
+    """Checkpoint restore, or deterministic calibrated init.
+
+    Without a checkpoint: LSUV-style calibrated init on ``state0`` with
+    fixed keys (PRNGKey(0) calibration, PRNGKey(1) noise sample), so the
+    same (config, state0) always yields the same params.
+    """
+    if ckpt:
+        from repro.train import checkpoint as ckptlib
+        template = {"params": jax.eval_shape(model.init,
+                                             jax.random.PRNGKey(0))}
+        restored, _ = ckptlib.restore_checkpoint(ckpt, template)
+        return restored["params"]
+    cond0 = jnp.concatenate(
+        [jnp.asarray(ds.aux_fields(0.0))[None],
+         model.sample_noise(jax.random.PRNGKey(1), (1,))], axis=1)
+    return model.init_calibrated(jax.random.PRNGKey(0), state0[None],
+                                 cond0, buffers)

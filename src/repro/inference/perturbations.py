@@ -40,6 +40,42 @@ from repro.evaluation import metrics
 PERTURB_KINDS = ("none", "obs", "bred")
 
 
+def validate_member_count(members: int, centered: bool,
+                          cfg: "PerturbationConfig") -> list[str]:
+    """Up-front member/perturbation compatibility check for CLIs and the
+    serving request validator.
+
+    Returns human-readable problem strings (empty = valid) so callers can
+    raise a clear ``argparse`` error or HTTP 400 *before* any tracing
+    starts, instead of a mid-trace failure or a silently off-center
+    ensemble mean.
+    """
+    problems: list[str] = []
+    if members < 1:
+        problems.append(f"members must be >= 1, got {members}")
+        return problems
+    # members == 1 is the degenerate single-trajectory case: there is no
+    # pair whose mean could be off-center, so nothing to validate.
+    if members % 2 and members > 1:
+        if centered:
+            problems.append(
+                f"antithetic noise centering needs an even member count "
+                f"(members come in +/- pairs whose mean is the control); "
+                f"got members={members}")
+        elif cfg.active and cfg.antithetic:
+            problems.append(
+                f"antithetic initial-condition perturbations need an even "
+                f"member count; got members={members}")
+    draws = (members + 1) // 2 if cfg.antithetic else members
+    if cfg.ensemble_transform and draws < 2:
+        detail = (">= 4 antithetic members" if cfg.antithetic
+                  else ">= 2 members")
+        problems.append(
+            "ensemble_transform needs at least two independent draws to "
+            f"orthogonalize ({detail}); got members={members}")
+    return problems
+
+
 @dataclasses.dataclass(frozen=True)
 class PerturbationConfig:
     """Initial-condition perturbation hyperparameters.
@@ -56,6 +92,15 @@ class PerturbationConfig:
     bred_cycles: breeding cycles (perturb -> integrate -> rescale).
     bred_steps:  model steps per breeding cycle.
     antithetic:  +/- pair centering (E.3); ceil(E/2) independent draws.
+    ensemble_transform:
+                 orthogonalize the bred draws against each other in the
+                 area-weighted inner product after every breeding cycle
+                 (ensemble-transform rescaling, Wei et al. 2008) instead
+                 of only renormalizing.  Plain breeding collapses all
+                 draws onto the single fastest-growing mode; the
+                 transform keeps the pairs spanning K distinct growing
+                 directions.  Requires kind="bred" and at least two
+                 independent draws (>= 4 antithetic members).
     """
 
     kind: str = "none"
@@ -63,6 +108,7 @@ class PerturbationConfig:
     bred_cycles: int = 3
     bred_steps: int = 1
     antithetic: bool = True
+    ensemble_transform: bool = False
 
     def __post_init__(self):
         if self.kind not in PERTURB_KINDS:
@@ -71,6 +117,10 @@ class PerturbationConfig:
                 f"expected one of {PERTURB_KINDS}")
         if self.kind == "bred" and self.bred_cycles < 1:
             raise ValueError("bred perturbations need bred_cycles >= 1")
+        if self.ensemble_transform and self.kind != "bred":
+            raise ValueError(
+                "ensemble_transform orthogonalizes bred-vector pairs; it "
+                f"requires kind='bred', got kind={self.kind!r}")
 
     @property
     def active(self) -> bool:
@@ -158,6 +208,28 @@ class InitialConditionPerturbation:
         target = self._channel_scale(p.shape[-3])
         return p * (target / jnp.maximum(rms, 1e-12))[..., None, None]
 
+    def orthogonalize(self, p: jax.Array) -> jax.Array:
+        """Ensemble-transform whitening of the draw axis (Wei et al. 2008).
+
+        ``p`` is (K, C, H, W); the K draws are rotated/rescaled by
+        ``(P Pt)^(-1/2)`` -- the symmetric inverse square root of their
+        Gram matrix in the area-weighted inner product over (C, H, W) --
+        so they come out exactly orthonormal.  The symmetric choice (over
+        e.g. Gram-Schmidt) perturbs each draw minimally and keeps the
+        transform permutation-equivariant.  The K x K eigendecomposition
+        is negligible next to one model step, so the transform is cheap
+        inside the compiled breeding scan.
+        """
+        k = p.shape[0]
+        if k < 2:
+            return p
+        w = self.area_weights / jnp.sum(self.area_weights)
+        flat = (p * jnp.sqrt(w)).reshape(k, -1)
+        gram = flat @ flat.T
+        lam, u = jnp.linalg.eigh(gram)
+        inv_sqrt = (u / jnp.sqrt(jnp.maximum(lam, 1e-12))) @ u.T
+        return jnp.einsum("ij,j...->i...", inv_sqrt, p)
+
     def bred_vectors(self, key: jax.Array, state0: jax.Array,
                      step_fn: Callable[[jax.Array], jax.Array], n: int,
                      sht_buffers: dict | None = None) -> jax.Array:
@@ -166,8 +238,12 @@ class InitialConditionPerturbation:
         Seeded from obs-error draws rescaled to the target amplitude; each
         cycle integrates the control and the perturbed states ``bred_steps``
         model steps, re-extracts the difference and rescales it per channel
-        back to ``amplitude * channel_std`` (area-weighted RMS).  The final
-        vectors are applied to the *original* analysis state0.
+        back to ``amplitude * channel_std`` (area-weighted RMS).  With
+        ``cfg.ensemble_transform`` the differences are first orthogonalized
+        against each other (``orthogonalize``), so the draws track K
+        distinct growing directions instead of all collapsing onto the
+        leading one.  The final vectors are applied to the *original*
+        analysis state0.
         """
         nc = state0.shape[-3]
         p0 = self._rescale(self.obs_vectors(key, n, nc, sht_buffers))
@@ -178,7 +254,10 @@ class InitialConditionPerturbation:
             for _ in range(self.cfg.bred_steps):
                 ctrl = step_fn(ctrl)
                 pert = jax.vmap(step_fn)(pert)
-            return (ctrl, self._rescale(pert - ctrl)), None
+            d = pert - ctrl
+            if self.cfg.ensemble_transform:
+                d = self.orthogonalize(d)
+            return (ctrl, self._rescale(d)), None
 
         (_, p), _ = jax.lax.scan(cycle, (state0, p0), None,
                                  length=self.cfg.bred_cycles)

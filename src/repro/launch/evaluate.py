@@ -28,8 +28,7 @@ from repro.data import era5_synthetic as dlib
 from repro.evaluation import metrics
 from repro.train import checkpoint as ckptlib
 
-CONFIGS = {"smoke": fcn3cfg.fcn3_smoke, "small": fcn3cfg.fcn3_small,
-           "full": fcn3cfg.fcn3_full}
+CONFIGS = fcn3cfg.NAMED_CONFIGS
 
 # WB2 headline channels present in our channel table (paper F.2)
 HEADLINE = ("z500", "t850", "t2m", "u10m", "msl", "q700")

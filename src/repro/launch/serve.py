@@ -51,10 +51,10 @@ from repro.evaluation import metrics
 from repro.inference import (EngineConfig, ForecastEngine,
                              InitialConditionPerturbation,
                              PerturbationConfig)
-from repro.train import checkpoint as ckptlib
+from repro.inference import perturbations as perturblib
+from repro.inference.params import load_params
 
-CONFIGS = {"smoke": fcn3cfg.fcn3_smoke, "small": fcn3cfg.fcn3_small,
-           "full": fcn3cfg.fcn3_full}
+CONFIGS = fcn3cfg.NAMED_CONFIGS
 
 
 def legacy_forecast(model: FCN3, params, buffers, state0, aux_fn, key,
@@ -87,19 +87,6 @@ def legacy_forecast(model: FCN3, params, buffers, state0, aux_fn, key,
         yield n, s
 
 
-def _load_params(model: FCN3, ds, buffers, state0, ckpt: str | None):
-    if ckpt:
-        template = {"params": jax.eval_shape(model.init,
-                                             jax.random.PRNGKey(0))}
-        restored, _ = ckptlib.restore_checkpoint(ckpt, template)
-        return restored["params"]
-    cond0 = jnp.concatenate(
-        [jnp.asarray(ds.aux_fields(0.0))[None],
-         model.sample_noise(jax.random.PRNGKey(1), (1,))], axis=1)
-    return model.init_calibrated(jax.random.PRNGKey(0), state0[None],
-                                 cond0, buffers)
-
-
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--config", default="smoke", choices=sorted(CONFIGS))
@@ -122,6 +109,10 @@ def main() -> None:
                          "climatological channel std")
     ap.add_argument("--bred-cycles", type=int, default=3,
                     help="breeding cycles for --perturb bred")
+    ap.add_argument("--ensemble-transform", action="store_true",
+                    help="orthogonalize bred-vector pairs against each "
+                         "other every cycle (ensemble-transform "
+                         "rescaling) instead of only renormalizing")
     ap.add_argument("--calibration", action="store_true",
                     help="in-scan per-degree energy spectra + calibration "
                          "summary per lead (rank-histogram flatness, "
@@ -135,13 +126,27 @@ def main() -> None:
                              or args.scores_out):
         ap.error("--perturb/--calibration/--scores-out require the "
                  "engine path")
+    # Validate member/perturbation combinations before any tracing: both
+    # paths antithetically center the conditioning noise, so an odd
+    # member count silently un-centers the ensemble mean.
+    try:
+        pcfg = PerturbationConfig(kind=args.perturb,
+                                  amplitude=args.perturb_amplitude,
+                                  bred_cycles=args.bred_cycles,
+                                  ensemble_transform=args.ensemble_transform)
+    except ValueError as e:
+        ap.error(str(e))
+    problems = perturblib.validate_member_count(args.members, centered=True,
+                                                cfg=pcfg)
+    if problems:
+        ap.error("; ".join(problems))
 
     cfg = CONFIGS[args.config]()
     model = FCN3(cfg)
     ds = dlib.SyntheticERA5(cfg)
     buffers = model.make_buffers()
     state0 = ds.state(args.sample, 0)
-    params = _load_params(model, ds, buffers, state0, args.ckpt)
+    params = load_params(model, ds, buffers, state0, args.ckpt)
 
     key = jax.random.PRNGKey(7)
     aw = jnp.asarray(ds.grid.area_weights_2d(), jnp.float32)
@@ -168,9 +173,6 @@ def main() -> None:
         # Single-host CLI: bake the geometry into the executable except at
         # full resolution, where the Legendre tables are GB-scale and must
         # stay jit arguments (shardable, not HLO constants).
-        pcfg = PerturbationConfig(kind=args.perturb,
-                                  amplitude=args.perturb_amplitude,
-                                  bred_cycles=args.bred_cycles)
         perturbation = (InitialConditionPerturbation.from_dataset(
             model.in_sht, pcfg, ds) if pcfg.active else None)
         eng = ForecastEngine(model, EngineConfig(

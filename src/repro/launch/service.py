@@ -1,0 +1,115 @@
+"""Launch the forecast service (paper Section 5, served).
+
+Starts the HTTP front end over the async scheduler: requests queue,
+engines stay warm per shape key, executables are cached (optionally
+persisted), and every response streams scores chunk-by-chunk as NDJSON.
+
+  PYTHONPATH=src python -m repro.launch.service --config smoke --port 8771
+
+then, from anywhere::
+
+  python -m repro.serving.client --port 8771 --members 2 --lead-steps 4
+
+``--persist-dir D`` persists compiled chunk programs across processes:
+``jax.export`` blobs for the lowered StableHLO (skips Python tracing)
+*and* the XLA compilation cache (skips the backend compile), so a
+restarted service warm-starts from disk.  ``--warm SPEC_JSON`` compiles
+executables for a request shape before the server accepts traffic.
+
+See docs/serving.md for the API and the NDJSON event grammar.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.configs import fcn3 as fcn3cfg
+
+
+def _enable_xla_cache(persist_dir: str) -> None:
+    """Point JAX's persistent compilation cache into the persist dir, so
+    a fresh process skips the backend compile of restored programs too."""
+    import jax
+    cache_dir = os.path.join(persist_dir, "xla")
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    try:
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    except AttributeError:  # older jax: keep the default threshold
+        pass
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8771,
+                    help="0 picks an ephemeral port (printed at startup)")
+    ap.add_argument("--config", nargs="+", default=["smoke"],
+                    choices=sorted(fcn3cfg.NAMED_CONFIGS),
+                    help="configs to preload (model + params built at "
+                         "startup, not on first request)")
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint for the first --config entry")
+    ap.add_argument("--max-concurrency", type=int, default=1,
+                    help="worker threads running device work")
+    ap.add_argument("--queue-size", type=int, default=64,
+                    help="pending requests before 503")
+    ap.add_argument("--persist-dir", default=None,
+                    help="persist compiled chunk programs (jax.export "
+                         "blobs + XLA compilation cache) here")
+    ap.add_argument("--warm", action="append", default=[],
+                    metavar="SPEC_JSON",
+                    help="RequestSpec JSON to precompile before serving "
+                         "(repeatable), e.g. "
+                         "'{\"members\": 4, \"lead_steps\": 8}'")
+    args = ap.parse_args(argv)
+
+    if args.persist_dir:
+        _enable_xla_cache(args.persist_dir)
+
+    # Imports after the cache config: jax reads it at first use.
+    from repro.serving.cache import ExecutableCache
+    from repro.serving.scheduler import (ForecastScheduler, ModelPool,
+                                         RequestSpec)
+    from repro.serving.service import ForecastService
+
+    warm_specs = []
+    for raw in args.warm:
+        try:
+            spec = RequestSpec.from_dict(json.loads(raw))
+            spec.validate()
+        except (ValueError, TypeError, json.JSONDecodeError) as e:
+            ap.error(f"--warm {raw!r}: {e}")
+        warm_specs.append(spec)
+
+    pool = ModelPool({args.config[0]: args.ckpt} if args.ckpt else None)
+    scheduler = ForecastScheduler(
+        pool=pool, cache=ExecutableCache(args.persist_dir),
+        max_concurrency=args.max_concurrency, queue_size=args.queue_size)
+    for name in args.config:
+        print(f"[service] preloading config {name!r} ...", flush=True)
+        pool.get(name)
+    for spec in warm_specs:
+        out = scheduler.warmup(spec)
+        print(f"[service] warmed {spec.to_dict()}: "
+              f"compile_s={out['compile_s']:.2f} "
+              f"({[o['source'] for o in out['outcomes']]})", flush=True)
+
+    service = ForecastService(scheduler=scheduler)
+    server = service.make_server(args.host, args.port)
+    host, port = server.server_address[:2]
+    print(f"[service] listening on http://{host}:{port} "
+          f"(POST /v1/forecast, GET /v1/stats, GET /healthz)", flush=True)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        print("[service] shutting down")
+    finally:
+        server.server_close()
+        service.close()
+
+
+if __name__ == "__main__":
+    main()

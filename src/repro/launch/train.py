@@ -22,8 +22,7 @@ from repro.data import era5_synthetic as dlib
 from repro.train import checkpoint as ckptlib
 from repro.train import trainer as trlib
 
-CONFIGS = {"smoke": fcn3cfg.fcn3_smoke, "small": fcn3cfg.fcn3_small,
-           "full": fcn3cfg.fcn3_full}
+CONFIGS = fcn3cfg.NAMED_CONFIGS
 
 
 def stage_to_tcfg(stage: fcn3cfg.FCN3TrainingStage, ensemble: int | None,

@@ -1,0 +1,51 @@
+"""Forecast serving subsystem: from "a CLI that runs a forecast" to "a
+system that serves forecasts" (paper Section 5's operational pitch).
+
+Three pillars:
+
+* ``cache``     -- AOT executable cache over the engine's explicit
+                   ``lower_chunk``/``compile_chunk`` hooks, keyed on
+                   (config, chunk_len, scored, the full EngineConfig),
+                   optionally persisted via ``jax.export``;
+* ``scheduler`` -- async request scheduler: FIFO queue, warm engines per
+                   shape key, bounded device concurrency, per-request
+                   queue/compile/run timings;
+* ``transport`` / ``service`` / ``client``
+                -- chunk-streamed delivery: ``ForecastEngine.stream``
+                   blocks serialized as NDJSON over stdlib HTTP, so
+                   clients see CRPS/rank-histogram/spectra scores as
+                   each lead chunk retires.
+
+Launch with ``python -m repro.launch.service``; see docs/serving.md.
+
+The client side (``spec``/``transport``/``client``) must stay importable
+without jax or the model stack, so the heavy server-side modules are
+re-exported lazily (PEP 562) and ``ForecastClient`` is not re-exported
+at all -- the client doubles as a ``python -m repro.serving.client``
+entry point, and a package-level import would re-execute it under runpy.
+Import it from ``repro.serving.client`` directly.
+"""
+
+from repro.serving.cache import ExecutableCache, ExecutableKey  # noqa: F401
+from repro.serving.spec import RequestSpec  # noqa: F401
+from repro.serving.transport import (  # noqa: F401
+    ServedForecast,
+    ServingError,
+)
+
+_LAZY = {
+    "ForecastScheduler": "repro.serving.scheduler",
+    "ForecastStream": "repro.serving.scheduler",
+    "ModelPool": "repro.serving.scheduler",
+    "QueueFull": "repro.serving.scheduler",
+    "build_bundle": "repro.serving.scheduler",
+    "ForecastService": "repro.serving.service",
+}
+
+
+def __getattr__(name: str):
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(module), name)

@@ -1,0 +1,232 @@
+"""AOT executable cache for the forecast service.
+
+The one-shot CLI pays a full JIT cold start per invocation; the service
+must not.  This cache drives the engine's explicit AOT hooks
+(``ForecastEngine.lower_chunk`` / ``compile_chunk`` /
+``export_chunk`` / ``import_chunk``) so that
+
+* the first request for a shape key lowers and compiles each distinct
+  chunk length once (a **miss**, timed as the request's ``compile_s``);
+* every later request with the same key dispatches the installed
+  executable with **zero** compile time (a **hit**);
+* with ``persist_dir`` the lowered StableHLO is additionally serialized
+  via ``jax.export``, so a fresh *process* deserializes instead of
+  re-tracing Python (a **disk hit**; the XLA backend compile of the
+  restored module still runs once -- point ``jax_compilation_cache_dir``
+  at a directory, as ``repro.launch.service --persist-dir`` does, to
+  skip that too).
+
+Keys follow the ISSUE/ROADMAP contract -- ``(config, members,
+lead_chunk, precision, perturb, scored)`` -- extended by the fields that
+also select a distinct executable: the concrete ``chunk_len`` (an uneven
+final chunk is its own program), ``spectra`` (changes the in-scan score
+set) and ``static_buffers`` (changes the calling convention).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import threading
+import time
+
+_CODE_FINGERPRINT: str | None = None
+
+
+def _code_fingerprint() -> str:
+    """sha1 over every ``repro`` source file, computed once per process.
+
+    A persisted StableHLO blob bakes in the model *math*, not just the
+    shapes in the key -- a math-only edit (a constant, a normalization
+    fix) keeps every shape identical, so the blob would deserialize
+    cleanly and silently serve the old model.  Hashing the package
+    source over-invalidates (any repo edit forces one recompile), which
+    is the cheap, safe side of that trade.
+    """
+    global _CODE_FINGERPRINT
+    if _CODE_FINGERPRINT is None:
+        import repro
+        h = hashlib.sha1()
+        # repro is a namespace package: hash every source root on its
+        # __path__ (there is no repro.__file__)
+        for root in sorted(os.path.abspath(p) for p in repro.__path__):
+            for dirpath, dirnames, filenames in os.walk(root):
+                dirnames.sort()  # deterministic traversal order
+                for name in sorted(filenames):
+                    if name.endswith(".py"):
+                        path = os.path.join(dirpath, name)
+                        h.update(os.path.relpath(path,
+                                                 root).encode("utf-8"))
+                        with open(path, "rb") as f:
+                            h.update(f.read())
+        _CODE_FINGERPRINT = h.hexdigest()
+    return _CODE_FINGERPRINT
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutableKey:
+    """Identity of one compiled chunk executable.
+
+    ``engine`` is the *entire* ``EngineConfig`` as a nested tuple
+    (members, lead_chunk, centered, precision, member_axes, donate,
+    static_buffers, the perturbation settings, spectra) -- capturing the
+    whole config rather than a hand-picked subset means a future engine
+    knob that changes the compiled math can never be silently missing
+    from the key.
+    """
+
+    config: str
+    chunk_len: int
+    scored: bool
+    engine: tuple
+
+    @classmethod
+    def for_engine(cls, config: str, engine, scored: bool,
+                   chunk_len: int) -> "ExecutableKey":
+        return cls(config=config, chunk_len=chunk_len, scored=scored,
+                   engine=dataclasses.astuple(engine.cfg))
+
+    def token(self) -> str:
+        """Stable filename stem for on-disk persistence.
+
+        Scoped by jax version and backend platform (an exported StableHLO
+        blob is not guaranteed loadable across either, so a routine jax
+        upgrade or a CPU-to-GPU move gets a fresh file instead of a
+        deserialization failure) and by the ``repro`` source fingerprint
+        (so a model-code edit can never silently serve a blob compiled
+        from the old math).
+        """
+        import jax
+        tag = (f"{self!r}|jax={jax.__version__}|{jax.default_backend()}"
+               f"|src={_code_fingerprint()}")
+        return hashlib.sha1(tag.encode("utf-8")).hexdigest()[:16]
+
+
+class ExecutableCache:
+    """Thread-safe warm/hit/miss bookkeeping over engine AOT hooks.
+
+    Compilation is serialized **per key** -- two requests racing on the
+    same shape trace it once, while a cold compile for one shape never
+    blocks a warm hit (or a compile) for another.  The global lock is
+    only held for lookups and stats updates.
+    """
+
+    def __init__(self, persist_dir: str | None = None):
+        self.persist_dir = persist_dir
+        if persist_dir:
+            os.makedirs(persist_dir, exist_ok=True)
+        self._lock = threading.Lock()
+        self._key_locks: dict[ExecutableKey, threading.Lock] = {}
+        self._known: set[ExecutableKey] = set()
+        self.hits = 0
+        self.misses = 0
+        self.disk_hits = 0
+        self.compile_s = 0.0
+
+    def _path(self, key: ExecutableKey) -> str | None:
+        if not self.persist_dir:
+            return None
+        return os.path.join(self.persist_dir, f"chunk_{key.token()}.stablehlo")
+
+    def _installed(self, key: ExecutableKey, engine, params, buffers
+                   ) -> bool:
+        return engine.has_chunk_executable(key.scored, key.chunk_len,
+                                           params, buffers)
+
+    def _from_disk(self, key: ExecutableKey, path: str, engine, params,
+                   buffers) -> bool:
+        """Try installing a persisted blob; a stale/incompatible file is
+        removed and reported as a miss (recompile), never a poisoned key."""
+        try:
+            with open(path, "rb") as f:
+                blob = f.read()
+            engine.import_chunk(key.scored, key.chunk_len, blob,
+                                params, buffers)
+            return True
+        except Exception as e:  # noqa: BLE001 -- any load failure => recompile
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            print(f"[serving-cache] discarding stale executable {path} "
+                  f"({type(e).__name__}: {e}); recompiling")
+            return False
+
+    def warm(self, key: ExecutableKey, engine, params, buffers) -> dict:
+        """Ensure an executable for ``key`` is installed on ``engine``.
+
+        Returns ``{"hit", "source", "compile_s"}`` where source is
+        "memory" (already installed), "disk" (deserialized from
+        ``persist_dir``) or "compiled" (lowered + compiled now).
+        """
+        with self._lock:
+            if self._installed(key, engine, params, buffers):
+                self.hits += 1
+                return {"hit": True, "source": "memory", "compile_s": 0.0}
+            key_lock = self._key_locks.setdefault(key, threading.Lock())
+        with key_lock:
+            # another request may have compiled this key while we waited
+            if self._installed(key, engine, params, buffers):
+                with self._lock:
+                    self.hits += 1
+                return {"hit": True, "source": "memory", "compile_s": 0.0}
+            path = self._path(key)
+            t0 = time.perf_counter()
+            if (path and os.path.exists(path)
+                    and self._from_disk(key, path, engine, params, buffers)):
+                dt = time.perf_counter() - t0
+                with self._lock:
+                    self.disk_hits += 1
+                    self.compile_s += dt
+                    self._known.add(key)
+                return {"hit": True, "source": "disk", "compile_s": dt}
+            if path:
+                # Persisting anyway: trace/lower once through jax.export
+                # and install from the exported module, instead of
+                # lowering twice (once to compile, once to serialize).
+                # The imported program drops carry donation (documented
+                # on import_chunk) -- the explicit persistence trade.
+                blob = engine.export_chunk(key.scored, key.chunk_len,
+                                           params, buffers)
+                tmp = f"{path}.tmp.{os.getpid()}"
+                with open(tmp, "wb") as f:
+                    f.write(blob)
+                os.replace(tmp, path)
+                engine.import_chunk(key.scored, key.chunk_len, blob,
+                                    params, buffers)
+            else:
+                engine.compile_chunk(key.scored, key.chunk_len, params,
+                                     buffers)
+            dt = time.perf_counter() - t0
+            with self._lock:
+                self.misses += 1
+                self.compile_s += dt
+                self._known.add(key)
+            return {"hit": False, "source": "compiled", "compile_s": dt}
+
+    def warm_engine(self, config: str, engine, scored: bool, steps: int,
+                    params, buffers) -> dict:
+        """Warm every chunk length a ``steps``-long rollout dispatches.
+
+        Returns the per-request summary the scheduler reports: total
+        ``compile_s`` plus one outcome entry per distinct chunk length.
+        """
+        outcomes = []
+        for k in engine.chunk_lengths(steps):
+            key = ExecutableKey.for_engine(config, engine, scored, k)
+            out = self.warm(key, engine, params, buffers)
+            outcomes.append({"chunk_len": k, **out})
+        return {
+            "compile_s": sum(o["compile_s"] for o in outcomes),
+            "hits": sum(1 for o in outcomes if o["hit"]),
+            "misses": sum(1 for o in outcomes if not o["hit"]),
+            "outcomes": outcomes,
+        }
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"keys": len(self._known), "hits": self.hits,
+                    "misses": self.misses, "disk_hits": self.disk_hits,
+                    "compile_s": self.compile_s,
+                    "persist_dir": self.persist_dir}

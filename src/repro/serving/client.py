@@ -1,0 +1,191 @@
+"""Thin stdlib client (and CLI) for the forecast service.
+
+Library use::
+
+    from repro.serving.client import ForecastClient
+    from repro.serving.spec import RequestSpec
+
+    c = ForecastClient(port=8771)
+    for ev in c.stream(RequestSpec(members=4, lead_steps=8)):
+        ...                       # chunk events as lead chunks retire
+    res = c.forecast(RequestSpec(members=4, lead_steps=8))
+    res.scores["crps"]            # (T, C), bit-identical to the engine
+
+CLI (prints per-lead score lines as chunks arrive and can save a timing
+report, which CI uploads as an artifact)::
+
+    python -m repro.serving.client --port 8771 --members 2 \
+        --lead-steps 4 --lead-chunk 2 --timing-out serving_timing.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import http.client
+import json
+import time
+
+import numpy as np
+
+from repro.serving import transport
+from repro.serving.spec import RequestSpec
+
+
+class ForecastClient:
+    def __init__(self, host: str = "127.0.0.1", port: int = 8771,
+                 timeout: float = 600.0):
+        self.host = host
+        self.port = port
+        self.timeout = timeout
+
+    def _connect(self) -> http.client.HTTPConnection:
+        return http.client.HTTPConnection(self.host, self.port,
+                                          timeout=self.timeout)
+
+    def _get_json(self, path: str) -> dict:
+        conn = self._connect()
+        try:
+            conn.request("GET", path)
+            resp = conn.getresponse()
+            body = resp.read()
+            if resp.status != 200:
+                raise transport.ServingError(
+                    f"GET {path} -> {resp.status}: {body.decode()}")
+            return json.loads(body)
+        finally:
+            conn.close()
+
+    def health(self, retries: int = 0, delay: float = 0.5) -> dict:
+        """Liveness probe; ``retries`` makes it double as a startup wait."""
+        for attempt in range(retries + 1):
+            try:
+                return self._get_json("/healthz")
+            except (ConnectionError, OSError):
+                if attempt == retries:
+                    raise
+                time.sleep(delay)
+
+    def stats(self) -> dict:
+        return self._get_json("/v1/stats")
+
+    def stream(self, spec: RequestSpec | dict):
+        """Yield transport events as the server emits them (NDJSON)."""
+        body = json.dumps(spec.to_dict() if isinstance(spec, RequestSpec)
+                          else spec)
+        conn = self._connect()
+        try:
+            conn.request("POST", "/v1/forecast", body,
+                         {"Content-Type": "application/json"})
+            resp = conn.getresponse()
+            if resp.status != 200:
+                err = resp.read().decode("utf-8", "replace")
+                try:
+                    err = json.loads(err).get("error", err)
+                except json.JSONDecodeError:
+                    pass
+                raise transport.ServingError(
+                    f"POST /v1/forecast -> {resp.status}: {err}")
+            yield from transport.read_events(resp)
+        finally:
+            conn.close()
+
+    def forecast(self, spec: RequestSpec | dict) -> transport.ServedForecast:
+        """Block until the rollout finishes; returns assembled arrays."""
+        return transport.collect(self.stream(spec))
+
+
+def _spec_from_args(args: argparse.Namespace) -> RequestSpec:
+    return RequestSpec(
+        config=args.config, members=args.members,
+        lead_steps=args.lead_steps, lead_chunk=args.lead_chunk,
+        precision=args.precision, perturb=args.perturb,
+        perturb_amplitude=args.perturb_amplitude,
+        bred_cycles=args.bred_cycles,
+        ensemble_transform=args.ensemble_transform,
+        spectra=args.calibration, scored=not args.unscored,
+        sample=args.sample, seed=args.seed,
+        return_state=args.return_state)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8771)
+    ap.add_argument("--wait-s", type=float, default=30.0,
+                    help="seconds to wait for the service to come up")
+    ap.add_argument("--config", default="smoke")
+    ap.add_argument("--members", type=int, default=2)
+    ap.add_argument("--lead-steps", type=int, default=4)
+    ap.add_argument("--lead-chunk", type=int, default=2)
+    ap.add_argument("--precision", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--perturb", default="none",
+                    choices=["none", "obs", "bred"])
+    ap.add_argument("--perturb-amplitude", type=float, default=0.05)
+    ap.add_argument("--bred-cycles", type=int, default=3)
+    ap.add_argument("--ensemble-transform", action="store_true")
+    ap.add_argument("--calibration", action="store_true",
+                    help="request in-scan spectra too")
+    ap.add_argument("--unscored", action="store_true",
+                    help="skip in-scan scoring (no truth comparison)")
+    ap.add_argument("--sample", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--return-state", action="store_true",
+                    help="include the final ensemble state (base64 fp32)")
+    ap.add_argument("--timing-out", default=None,
+                    help="save the timing/chunk report to this JSON file")
+    args = ap.parse_args(argv)
+    try:
+        spec = _spec_from_args(args)
+        spec.validate()  # fail client-side before touching the network
+    except ValueError as e:
+        ap.error(str(e))
+
+    client = ForecastClient(args.host, args.port)
+    client.health(retries=max(0, int(args.wait_s / 0.5)), delay=0.5)
+    t0 = time.time()
+    report: dict = {"spec": spec.to_dict(), "chunks": []}
+    done = None
+    for ev in client.stream(spec):
+        kind = ev["event"]
+        if kind == "done":
+            done = ev
+        if kind == "start":
+            print(f"[client] {ev['request_id']} accepted: "
+                  f"queue={ev['queue_s']:.3f}s "
+                  f"setup={ev.get('setup_s', 0.0):.3f}s "
+                  f"compile={ev['compile_s']:.3f}s "
+                  f"cache={[o['source'] for o in ev['cache']]}")
+        elif kind == "chunk":
+            entry = {"index": ev["index"], "lead_steps": ev["lead_steps"],
+                     "chunk_s": ev["chunk_s"],
+                     "scores": sorted(ev["scores"])}
+            report["chunks"].append(entry)
+            for i, n in enumerate(ev["lead_steps"]):
+                line = f"lead {6 * (n + 1):4d}h"
+                for name in ("crps", "ens_rmse", "ssr"):
+                    if name in ev["scores"]:
+                        v = float(np.mean(ev["scores"][name][i]))
+                        line += f"  {name}={v:.4f}"
+                print(f"{line}  ({time.time() - t0:.1f}s)")
+        elif kind == "error":
+            raise transport.ServingError(ev["message"])
+    if done is None:
+        # close-delimited framing: a dead server is just EOF -- refuse
+        # to write a bogus "success" timing report
+        raise transport.ServingError(
+            "stream ended without a terminal 'done' event")
+    report["request_id"] = done.get("request_id")
+    report["timing"] = done.get("timing", {})
+    report["cache"] = done.get("cache", {})
+    print(f"[client] done: run={report['timing'].get('run_s', 0):.3f}s "
+          f"total={report['timing'].get('total_s', 0):.3f}s "
+          f"cache_misses={report['cache'].get('misses')}")
+    if args.timing_out:
+        with open(args.timing_out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"[client] timing report -> {args.timing_out}")
+
+
+if __name__ == "__main__":
+    main()

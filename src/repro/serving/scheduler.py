@@ -1,0 +1,333 @@
+"""Async request scheduler: many forecast requests, few warm engines.
+
+``ForecastScheduler`` turns ``ForecastEngine`` into a long-lived
+service core:
+
+* requests queue in FIFO order and are validated **before** queueing
+  (``RequestSpec.validate`` -- a clear error instead of a mid-trace
+  failure);
+* device work is bounded by ``max_concurrency`` worker threads (JAX
+  dispatch releases the GIL while the device runs, so a small pool
+  overlaps host staging with device compute without oversubscribing);
+* engines are warm per **shape key** -- the spec fields that force a
+  different compiled program -- and shared across requests, so the
+  second request with a seen shape pays no tracing;
+* executables are warmed through the ``ExecutableCache`` before the
+  rollout starts, splitting every request's latency into the
+  ``queue_s`` / ``compile_s`` / ``run_s`` it reports;
+* results leave as transport events chunk-by-chunk
+  (``ForecastStream``), so consumers see scores as each ``lead_chunk``
+  retires rather than at rollout end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import queue
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import fcn3 as fcn3cfg
+from repro.core.fcn3 import FCN3
+from repro.data import era5_synthetic as dlib
+from repro.inference import ForecastEngine, InitialConditionPerturbation
+from repro.inference.params import load_params
+from repro.serving import transport
+from repro.serving.cache import ExecutableCache
+from repro.serving.spec import RequestSpec  # noqa: F401 -- re-export
+
+
+class QueueFull(RuntimeError):
+    """The scheduler's request queue is at capacity (HTTP 503)."""
+
+
+class KeyedBuilds:
+    """Build-once-per-key registry with per-key build locks.
+
+    The one double-checked-locking implementation shared by the model
+    pool and the engine pool (the executable cache's ``warm`` keeps its
+    own variant -- its critical section has disk/compile branches, not a
+    single build): lookups touch only the global lock, and a cold build
+    for one key never blocks a hit -- or a build -- for another.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items: dict = {}
+        self._build_locks: dict = {}
+
+    def get_or_build(self, key, build):
+        with self._lock:
+            item = self._items.get(key)
+            if item is not None:
+                return item
+            build_lock = self._build_locks.setdefault(key, threading.Lock())
+        with build_lock:
+            with self._lock:
+                item = self._items.get(key)
+            if item is None:
+                item = build()
+                with self._lock:
+                    self._items[key] = item
+            return item
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return dict(self._items)
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    """Everything per named config the engines share: the model, the
+    (synthetic-ERA5) data source, geometry buffers and params."""
+
+    name: str
+    model: FCN3
+    ds: dlib.SyntheticERA5
+    buffers: dict
+    params: dict
+
+
+def build_bundle(name: str, ckpt: str | None = None) -> ModelBundle:
+    """Deterministic bundle construction (calibrated on sample 0), so a
+    direct ``ForecastEngine`` built from the same config reproduces
+    served results bit-for-bit."""
+    cfg = fcn3cfg.NAMED_CONFIGS[name]()
+    model = FCN3(cfg)
+    ds = dlib.SyntheticERA5(cfg)
+    buffers = model.make_buffers()
+    params = load_params(model, ds, buffers, ds.state(0, 0), ckpt)
+    return ModelBundle(name=name, model=model, ds=ds, buffers=buffers,
+                       params=params)
+
+
+class ModelPool:
+    """Per-config bundles, built once and shared by all engines.
+
+    Builds are serialized per config name, never under a global lock: a
+    multi-minute "full" build must not stall a warm "smoke" request.
+    """
+
+    def __init__(self, ckpts: dict[str, str] | None = None):
+        self._ckpts = ckpts or {}
+        self._bundles = KeyedBuilds()
+
+    def get(self, name: str) -> ModelBundle:
+        return self._bundles.get_or_build(
+            name, lambda: build_bundle(name, self._ckpts.get(name)))
+
+
+class ForecastStream:
+    """Handle for one submitted request: a blocking iterator of
+    transport events, fed by the worker as chunks retire."""
+
+    def __init__(self, request_id: str, spec: RequestSpec):
+        self.request_id = request_id
+        self.spec = spec
+        self.submitted_at = time.perf_counter()
+        self._q: queue.Queue = queue.Queue()
+        self._cancelled = threading.Event()
+
+    def put(self, ev: dict) -> None:
+        self._q.put(ev)
+
+    def cancel(self) -> None:
+        """Consumer went away: the worker stops at the next chunk
+        boundary instead of finishing the rollout."""
+        self._cancelled.set()
+
+    @property
+    def cancelled(self) -> bool:
+        return self._cancelled.is_set()
+
+    def events(self):
+        while True:
+            ev = self._q.get()
+            yield ev
+            if ev.get("event") in transport.TERMINAL_EVENTS:
+                return
+
+    def result(self) -> transport.ServedForecast:
+        """Block until done and fold the stream into arrays."""
+        return transport.collect(self.events())
+
+
+class ForecastScheduler:
+    """Bounded worker pool over a FIFO queue of ``RequestSpec``s."""
+
+    def __init__(self, pool: ModelPool | None = None,
+                 cache: ExecutableCache | None = None,
+                 max_concurrency: int = 1, queue_size: int = 64):
+        self.pool = pool if pool is not None else ModelPool()
+        self.cache = cache if cache is not None else ExecutableCache()
+        self._queue: queue.Queue = queue.Queue(maxsize=queue_size)
+        self._engines = KeyedBuilds()
+        self._lock = threading.Lock()
+        self._ids = itertools.count()
+        self._closed = False
+        self._served = 0
+        self._failed = 0
+        self._workers = [
+            threading.Thread(target=self._worker, daemon=True,
+                             name=f"forecast-worker-{i}")
+            for i in range(max(1, max_concurrency))]
+        for w in self._workers:
+            w.start()
+
+    # ------------------------------------------------------------------
+    def submit(self, spec: RequestSpec) -> ForecastStream:
+        """Validate and enqueue; returns immediately with the stream."""
+        spec.validate()
+        stream = ForecastStream(f"r{next(self._ids)}", spec)
+        # closed-check and enqueue are one atomic step against close():
+        # a stream enqueued behind the shutdown sentinels would never be
+        # popped and its consumer would block forever.
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            try:
+                self._queue.put_nowait(stream)
+            except queue.Full:
+                raise QueueFull(
+                    f"request queue full ({self._queue.maxsize} pending)")
+        return stream
+
+    def warmup(self, spec: RequestSpec) -> dict:
+        """Build the engine and compile its executables without running a
+        rollout (the service CLI's --warm)."""
+        spec.validate()
+        engine, bundle = self._get_engine(spec)
+        return self.cache.warm_engine(spec.config, engine, spec.scored,
+                                      spec.lead_steps, bundle.params,
+                                      bundle.buffers)
+
+    def stats(self) -> dict:
+        engines = [{"config": key[0],
+                    "members": key[1].members,
+                    "lead_chunk": key[1].lead_chunk,
+                    "precision": key[1].compute_dtype,
+                    "perturb": key[1].perturb.kind,
+                    "dispatch": eng.dispatch_stats()}
+                   for key, eng in self._engines.snapshot().items()]
+        with self._lock:
+            served, failed = self._served, self._failed
+        return {"queued": self._queue.qsize(), "served": served,
+                "failed": failed, "workers": len(self._workers),
+                "engines": engines, "cache": self.cache.stats()}
+
+    def close(self, timeout: float = 30.0) -> None:
+        """Stop accepting requests, drain pending ones, join workers."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        # sentinels go behind any already-queued streams, so pending
+        # requests are served before the workers exit
+        for _ in self._workers:
+            self._queue.put(None)
+        for w in self._workers:
+            w.join(timeout=timeout)
+        stuck = [w.name for w in self._workers if w.is_alive()]
+        if stuck:
+            # daemon threads die with the process; say so instead of
+            # pretending the drain completed
+            print(f"[scheduler] close() timed out after {timeout}s with "
+                  f"{len(stuck)} request(s) still running ({stuck}); "
+                  f"their streams will end without a terminal event")
+
+    # ------------------------------------------------------------------
+    def _get_engine(self, spec: RequestSpec
+                    ) -> tuple[ForecastEngine, ModelBundle]:
+        """Warm engine for the spec's shape key, built on first use
+        (per-key build locks via KeyedBuilds: a cold engine build for
+        one shape never blocks warm requests or the stats endpoint)."""
+        bundle = self.pool.get(spec.config)
+
+        def build() -> ForecastEngine:
+            pcfg = spec.perturbation_config()
+            pert = (InitialConditionPerturbation.from_dataset(
+                bundle.model.in_sht, pcfg, bundle.ds)
+                if pcfg.active else None)
+            return ForecastEngine(bundle.model, spec.engine_config(),
+                                  perturbation=pert)
+
+        return self._engines.get_or_build(spec.engine_key(), build), bundle
+
+    def _worker(self) -> None:
+        while True:
+            stream = self._queue.get()
+            if stream is None:
+                return
+            try:
+                self._serve(stream)
+                with self._lock:
+                    self._served += 1
+            except Exception as e:  # noqa: BLE001 -- report, keep serving
+                with self._lock:
+                    self._failed += 1
+                stream.put({"event": "error",
+                            "request_id": stream.request_id,
+                            "message": f"{type(e).__name__}: {e}"})
+
+    def _serve(self, stream: ForecastStream) -> None:
+        spec = stream.spec
+        t_start = time.perf_counter()
+        queue_s = t_start - stream.submitted_at
+        # setup_s is everything between worker pickup and rollout start
+        # that is NOT compilation proper: model-bundle / engine builds on
+        # a cold config and time spent waiting on another request's
+        # in-flight compile of the same key.  Without it, cold-request
+        # latency would be silently misattributed (total_s != the sum of
+        # its parts).
+        engine, bundle = self._get_engine(spec)
+        warm = self.cache.warm_engine(spec.config, engine, spec.scored,
+                                      spec.lead_steps, bundle.params,
+                                      bundle.buffers)
+        setup_s = (time.perf_counter() - t_start) - warm["compile_s"]
+        stream.put({"event": "start", "request_id": stream.request_id,
+                    "spec": spec.to_dict(), "queue_s": queue_s,
+                    "setup_s": setup_s,
+                    "compile_s": warm["compile_s"],
+                    "cache": warm["outcomes"]})
+        ds = bundle.ds
+        truth = ((lambda n: ds.state(spec.sample, n + 1))
+                 if spec.scored else None)
+        state0 = ds.state(spec.sample, 0)
+        key = jax.random.PRNGKey(spec.seed)
+        run_t0 = time.perf_counter()
+        chunk_s: list[float] = []
+        final_state = None
+        last = run_t0
+        for i, block in enumerate(engine.stream(
+                bundle.params, bundle.buffers, state0,
+                lambda n: ds.aux_fields(6.0 * (n + 1)), key,
+                steps=spec.lead_steps, truth=truth)):
+            now = time.perf_counter()
+            ev = transport.chunk_event(stream.request_id, i, block)
+            ev["chunk_s"] = now - last
+            chunk_s.append(now - last)
+            last = now
+            if block.final_state is not None and spec.return_state:
+                final_state = np.asarray(
+                    jax.device_get(block.final_state))
+            stream.put(ev)
+            if stream.cancelled:
+                break
+        done = {
+            "event": "done", "request_id": stream.request_id,
+            "cancelled": stream.cancelled,
+            "timing": {"queue_s": queue_s,
+                       "setup_s": setup_s,
+                       "compile_s": warm["compile_s"],
+                       "run_s": time.perf_counter() - run_t0,
+                       "total_s": time.perf_counter() - stream.submitted_at,
+                       "chunk_s": chunk_s},
+            "cache": {"hits": warm["hits"], "misses": warm["misses"]},
+        }
+        if final_state is not None:
+            done["final_state"] = transport.encode_array(final_state)
+        stream.put(done)

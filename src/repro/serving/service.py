@@ -1,0 +1,102 @@
+"""HTTP front end: chunk-streamed NDJSON over stdlib ``http.server``.
+
+Routes:
+
+* ``POST /v1/forecast`` -- body is a ``RequestSpec`` JSON object.
+  Responds 200 with an ``application/x-ndjson`` stream (see
+  ``repro.serving.transport`` for the event grammar), 400 on an invalid
+  spec, 503 when the request queue is full.
+* ``GET /v1/stats``     -- scheduler + executable-cache statistics.
+* ``GET /healthz``      -- liveness.
+
+Framing: HTTP/1.0 close-delimited bodies.  Every stdlib client handles
+them, the handler stays small, and chunk latency is dominated by device
+work, not transfer encoding.  ``ThreadingHTTPServer`` gives each
+connection its own thread; actual device work stays bounded by the
+scheduler's worker pool, so N slow clients cannot oversubscribe the
+accelerator.
+"""
+
+from __future__ import annotations
+
+import json
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from repro.serving import transport
+from repro.serving.scheduler import ForecastScheduler, QueueFull
+from repro.serving.spec import RequestSpec
+
+
+class ForecastService:
+    """Owns a scheduler and builds HTTP servers bound to it."""
+
+    def __init__(self, scheduler: ForecastScheduler | None = None,
+                 **scheduler_kwargs):
+        self.scheduler = (scheduler if scheduler is not None
+                          else ForecastScheduler(**scheduler_kwargs))
+
+    def make_server(self, host: str = "127.0.0.1",
+                    port: int = 0) -> ThreadingHTTPServer:
+        """Bound server (``port=0`` picks an ephemeral port; read it back
+        from ``server.server_address``).  Call ``serve_forever`` on it."""
+        service = self
+
+        class Handler(_ForecastHandler):
+            pass
+
+        Handler.service = service
+        return ThreadingHTTPServer((host, port), Handler)
+
+    def close(self) -> None:
+        self.scheduler.close()
+
+
+class _ForecastHandler(BaseHTTPRequestHandler):
+    service: ForecastService
+
+    # Quiet by default: one line per request on stderr drowns benchmarks.
+    def log_message(self, format, *args):  # noqa: A002 - stdlib signature
+        pass
+
+    def _json(self, code: int, obj: dict) -> None:
+        body = json.dumps(obj).encode("utf-8")
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def do_GET(self):  # noqa: N802 - stdlib naming
+        if self.path == "/healthz":
+            self._json(200, {"ok": True})
+        elif self.path == "/v1/stats":
+            self._json(200, self.service.scheduler.stats())
+        else:
+            self._json(404, {"error": f"no route {self.path}"})
+
+    def do_POST(self):  # noqa: N802 - stdlib naming
+        if self.path != "/v1/forecast":
+            return self._json(404, {"error": f"no route {self.path}"})
+        try:
+            n = int(self.headers.get("Content-Length") or 0)
+            body = self.rfile.read(n) if n else b"{}"
+            spec = RequestSpec.from_dict(json.loads(body))
+            stream = self.service.scheduler.submit(spec)
+        except RuntimeError as e:
+            # QueueFull, or submit() on a scheduler mid-shutdown --
+            # both are "try again later", not a dropped socket
+            return self._json(503, {"error": str(e)})
+        except (ValueError, TypeError) as e:
+            return self._json(400, {"error": str(e)})
+        self.send_response(200)
+        self.send_header("Content-Type", transport.NDJSON_MIME)
+        self.send_header("Connection", "close")
+        self.end_headers()
+        try:
+            for ev in stream.events():
+                self.wfile.write(transport.dump_event(ev))
+                self.wfile.flush()
+        except (BrokenPipeError, ConnectionResetError):
+            # Client hung up mid-stream: stop the rollout at the next
+            # chunk boundary; the worker moves on to the next request.
+            stream.cancel()

@@ -1,0 +1,135 @@
+"""Request schema + validation -- the wire contract of the service.
+
+Kept dependency-light on purpose: the thin client imports this module
+(plus ``transport``) to build and validate requests, so constructing a
+``RequestSpec`` must not drag jax or the model stack into the process.
+The heavier imports (configs, perturbation rules, engine config) happen
+lazily inside the methods that need them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+PRECISIONS = ("float32", "bfloat16")
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestSpec:
+    """One forecast request -- also the JSON schema of POST /v1/forecast.
+
+    The **shape key** (``engine_key``) is every field that selects a
+    different compiled program: config, members, lead_chunk, precision,
+    the perturbation settings and spectra.  ``sample``/``seed`` pick the
+    initial condition and noise stream within a warm engine;
+    ``scored``/``return_state`` select what the stream carries.
+    """
+
+    config: str = "smoke"
+    members: int = 2
+    lead_steps: int = 4
+    lead_chunk: int = 2
+    precision: str = "float32"
+    perturb: str = "none"
+    perturb_amplitude: float = 0.05
+    bred_cycles: int = 3
+    ensemble_transform: bool = False
+    spectra: bool = False
+    scored: bool = True
+    sample: int = 0
+    seed: int = 7
+    return_state: bool = False
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RequestSpec":
+        names = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - names)
+        if unknown:
+            raise ValueError(
+                f"unknown request field(s) {unknown}; "
+                f"expected a subset of {sorted(names)}")
+        return cls(**d)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def perturbation_config(self):
+        from repro.inference import PerturbationConfig
+        return PerturbationConfig(kind=self.perturb,
+                                  amplitude=self.perturb_amplitude,
+                                  bred_cycles=self.bred_cycles,
+                                  ensemble_transform=self.ensemble_transform)
+
+    def engine_config(self):
+        # Single-host service: bake the geometry into the executable
+        # except at full resolution, where the Legendre tables are
+        # GB-scale and must stay jit arguments (same policy as the
+        # serve CLI).
+        from repro.inference import EngineConfig
+        return EngineConfig(members=self.members,
+                            lead_chunk=self.lead_chunk,
+                            compute_dtype=self.precision,
+                            static_buffers=self.config != "full",
+                            perturb=self.perturbation_config(),
+                            spectra=self.spectra)
+
+    def engine_key(self) -> tuple:
+        return (self.config, self.engine_config())
+
+    _INT_FIELDS = ("members", "lead_steps", "lead_chunk", "bred_cycles",
+                   "sample", "seed")
+    _BOOL_FIELDS = ("ensemble_transform", "spectra", "scored",
+                    "return_state")
+    _STR_FIELDS = ("config", "precision", "perturb")
+
+    def _type_problems(self) -> list[str]:
+        """JSON is typed; the spec must be too -- members=2.0 or
+        lead_steps=true would otherwise survive until mid-rollout."""
+        problems = []
+        for name in self._INT_FIELDS:
+            v = getattr(self, name)
+            if isinstance(v, bool) or not isinstance(v, int):
+                problems.append(f"{name} must be an integer, got {v!r}")
+        for name in self._BOOL_FIELDS:
+            if not isinstance(getattr(self, name), bool):
+                problems.append(f"{name} must be a boolean, "
+                                f"got {getattr(self, name)!r}")
+        for name in self._STR_FIELDS:
+            if not isinstance(getattr(self, name), str):
+                problems.append(f"{name} must be a string, "
+                                f"got {getattr(self, name)!r}")
+        v = self.perturb_amplitude
+        if isinstance(v, bool) or not isinstance(v, (int, float)):
+            problems.append(f"perturb_amplitude must be a number, got {v!r}")
+        return problems
+
+    def validate(self) -> None:
+        """Raise ValueError listing every problem (nothing traced yet)."""
+        problems = self._type_problems()
+        if problems:
+            # type errors first; the value checks below assume them
+            raise ValueError("; ".join(problems))
+        from repro.configs import fcn3 as fcn3cfg
+        from repro.inference import perturbations as perturblib
+        if self.config not in fcn3cfg.NAMED_CONFIGS:
+            problems.append(
+                f"unknown config {self.config!r}; expected one of "
+                f"{sorted(fcn3cfg.NAMED_CONFIGS)}")
+        if self.lead_steps < 1:
+            problems.append(f"lead_steps must be >= 1, got {self.lead_steps}")
+        if self.lead_chunk < 1:
+            problems.append(f"lead_chunk must be >= 1, got {self.lead_chunk}")
+        if self.precision not in PRECISIONS:
+            problems.append(
+                f"precision must be one of {PRECISIONS}, "
+                f"got {self.precision!r}")
+        try:
+            pcfg = self.perturbation_config()
+        except ValueError as e:
+            problems.append(str(e))
+        else:
+            # the engine always centers the conditioning noise
+            problems += perturblib.validate_member_count(
+                self.members, centered=True, cfg=pcfg)
+        if problems:
+            raise ValueError("; ".join(problems))

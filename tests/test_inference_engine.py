@@ -159,6 +159,116 @@ class TestPrecisionPolicy:
         assert err.max() < 0.15
 
 
+class TestStreamChunkBoundaries:
+    """Chunking is an execution detail: any lead_chunk, any aux/truth
+    staging style, scored or not, must reproduce the single-chunk
+    rollout bit-for-bit (the serving layer relies on this when it picks
+    chunk sizes for latency, not numerics)."""
+
+    STEPS = 5  # lead_chunk=2 leaves an uneven final chunk [4]
+    _engines: dict = {}  # engines reused across tests (compile once)
+
+    def _run(self, setup, lead_chunk, scored, as_arrays):
+        cfg, model, ds, buffers, params, state0 = setup
+        eng = self._engines.get(lead_chunk)
+        if eng is None:
+            eng = ForecastEngine(model, EngineConfig(members=MEMBERS,
+                                                     lead_chunk=lead_chunk))
+            self._engines[lead_chunk] = eng
+        aux = _aux_fn(ds)
+        truth = (lambda n: ds.state(SAMPLE, n + 1)) if scored else None
+        if as_arrays:
+            aux = jnp.stack([jnp.asarray(aux(n))
+                             for n in range(self.STEPS)])
+            if scored:
+                truth = jnp.stack([ds.state(SAMPLE, n + 1)
+                                   for n in range(self.STEPS)])
+        return eng.forecast(params, buffers, state0, aux, KEY,
+                            steps=self.STEPS, truth=truth)
+
+    @pytest.mark.parametrize("scored", [True, False])
+    def test_uneven_final_chunk_matches_unchunked(self, setup, scored):
+        ref = self._run(setup, self.STEPS, scored, as_arrays=False)
+        res = self._run(setup, 2, scored, as_arrays=False)
+        np.testing.assert_array_equal(np.asarray(res.final_state),
+                                      np.asarray(ref.final_state))
+        assert set(res.scores) == set(ref.scores)
+        for name in ref.scores:
+            np.testing.assert_array_equal(np.asarray(res.scores[name]),
+                                          np.asarray(ref.scores[name]),
+                                          err_msg=name)
+
+    def test_callable_vs_array_staging_identical(self, setup):
+        ref = self._run(setup, 2, True, as_arrays=False)
+        res = self._run(setup, 2, True, as_arrays=True)
+        np.testing.assert_array_equal(np.asarray(res.final_state),
+                                      np.asarray(ref.final_state))
+        np.testing.assert_array_equal(np.asarray(res.scores["crps"]),
+                                      np.asarray(ref.scores["crps"]))
+
+    def test_chunk_lengths_enumerates_dispatches(self, setup):
+        cfg, model, ds, buffers, params, state0 = setup
+        eng = ForecastEngine(model, EngineConfig(members=MEMBERS,
+                                                 lead_chunk=2))
+        assert eng.chunk_lengths(5) == [2, 1]
+        assert eng.chunk_lengths(4) == [2]
+        assert eng.chunk_lengths(1) == [1]
+        eng2 = ForecastEngine(model, EngineConfig(members=MEMBERS,
+                                                  lead_chunk=8))
+        assert eng2.chunk_lengths(3) == [3]
+
+
+class TestAOTHooks:
+    def test_compiled_chunks_dispatch_and_match_jit(self, setup):
+        # compile_chunk installs executables; the rollout must dispatch
+        # them exclusively and stay bit-identical to the implicit-jit
+        # engine.
+        cfg, model, ds, buffers, params, state0 = setup
+        ref_eng = ForecastEngine(model, EngineConfig(members=MEMBERS,
+                                                     lead_chunk=2))
+        ref = ref_eng.forecast(params, buffers, state0, _aux_fn(ds), KEY,
+                               steps=STEPS,
+                               truth=lambda n: ds.state(SAMPLE, n + 1))
+        eng = ForecastEngine(model, EngineConfig(members=MEMBERS,
+                                                 lead_chunk=2))
+        for k in eng.chunk_lengths(STEPS):
+            eng.compile_chunk(True, k, params, buffers)
+            assert eng.has_chunk_executable(True, k, params, buffers)
+        res = eng.forecast(params, buffers, state0, _aux_fn(ds), KEY,
+                           steps=STEPS,
+                           truth=lambda n: ds.state(SAMPLE, n + 1))
+        assert eng.dispatch_counts == {"aot": 2, "jit": 0}
+        np.testing.assert_array_equal(np.asarray(res.final_state),
+                                      np.asarray(ref.final_state))
+        for name in ref.scores:
+            np.testing.assert_array_equal(np.asarray(res.scores[name]),
+                                          np.asarray(ref.scores[name]),
+                                          err_msg=name)
+
+    def test_different_params_falls_back_to_jit(self, setup):
+        # AOT executables are pinned to the params object they were
+        # compiled against; a different object must not crash -- it
+        # falls back to the (retracing) jit path.
+        cfg, model, ds, buffers, params, state0 = setup
+        eng = ForecastEngine(model, EngineConfig(members=MEMBERS,
+                                                 lead_chunk=STEPS))
+        eng.compile_chunk(False, STEPS, params, buffers)
+        other = jax.tree.map(lambda a: a + 0, params)
+        assert not eng.has_chunk_executable(False, STEPS, other, buffers)
+        res = eng.forecast(other, buffers, state0, _aux_fn(ds), KEY,
+                           steps=STEPS)
+        assert eng.dispatch_counts["jit"] == 1
+        assert bool(jnp.isfinite(res.final_state).all())
+
+    def test_lower_chunk_exposes_staged_compile(self, setup):
+        cfg, model, ds, buffers, params, state0 = setup
+        eng = ForecastEngine(model, EngineConfig(members=MEMBERS,
+                                                 lead_chunk=2))
+        lowered = eng.lower_chunk(True, 2, params, buffers)
+        assert isinstance(lowered, jax.stages.Lowered)
+        assert hasattr(lowered.compile(), "__call__")
+
+
 class TestStreaming:
     def test_stream_chunks_concat_to_forecast(self, setup):
         cfg, model, ds, buffers, params, state0 = setup

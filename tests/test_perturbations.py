@@ -26,14 +26,16 @@ NLAT, NLON = 16, 32
 
 
 def make_pert(kind="obs", amplitude=0.1, channel_std=1.0, antithetic=True,
-              bred_cycles=2, bred_steps=1, slope=1.0, peak_l=6):
+              bred_cycles=2, bred_steps=1, slope=1.0, peak_l=6,
+              ensemble_transform=False):
     """Sampler on a small Gaussian grid with a flat-ish spectrum (more
     spectral dof than the steep atmospheric law -> tighter statistics)."""
     grid = grids.make_grid(NLAT, NLON, "gauss")
     s = shtlib.SHT.create(grid)
     cfg = PerturbationConfig(kind=kind, amplitude=amplitude,
                              antithetic=antithetic, bred_cycles=bred_cycles,
-                             bred_steps=bred_steps)
+                             bred_steps=bred_steps,
+                             ensemble_transform=ensemble_transform)
     sigma_l = noiselib.power_law_sigma_l(s.lmax, slope=slope, peak_l=peak_l)
     return InitialConditionPerturbation(s, cfg, grid.area_weights_2d(),
                                         sigma_l=sigma_l,
@@ -139,6 +141,86 @@ class TestBredVectors:
         lo, hi = slice(1, 5), slice(8, 14)
         assert (sk[hi].sum() / sk[lo].sum()
                 < 0.5 * s0[hi].sum() / s0[lo].sum())
+
+
+class TestEnsembleTransform:
+    def _weighted_gram(self, pert, p):
+        w = np.asarray(pert.area_weights)
+        w = w / w.sum()
+        flat = (np.asarray(p) * np.sqrt(w)).reshape(p.shape[0], -1)
+        return flat @ flat.T
+
+    def test_orthogonalize_whitens_exactly(self):
+        # The symmetric transform makes the draws orthonormal in the
+        # area-weighted inner product over (C, H, W).
+        pert = make_pert(kind="bred", ensemble_transform=True)
+        p = pert.obs_vectors(jax.random.PRNGKey(0), 4, 3)
+        g = self._weighted_gram(pert, pert.orthogonalize(p))
+        np.testing.assert_allclose(g, np.eye(4), atol=1e-4)
+
+    def test_single_draw_passthrough(self):
+        pert = make_pert(kind="bred", ensemble_transform=True)
+        p = pert.obs_vectors(jax.random.PRNGKey(1), 1, 2)
+        np.testing.assert_array_equal(np.asarray(pert.orthogonalize(p)),
+                                      np.asarray(p))
+
+    def test_bred_pairs_decollapse_under_transform(self):
+        # A smoothing propagator collapses plain bred vectors toward its
+        # leading mode; the ensemble transform keeps the draws spanning
+        # distinct directions (pairwise correlations drop by >= 10x).
+        def smooth(s):
+            return 2.0 * (0.5 * s + 0.25 * jnp.roll(s, 1, -1)
+                          + 0.25 * jnp.roll(s, -1, -1))
+
+        state0 = jnp.zeros((3, NLAT, NLON))
+        corr = {}
+        for et in (False, True):
+            pert = make_pert(kind="bred", bred_cycles=3,
+                             ensemble_transform=et)
+            p = pert.bred_vectors(jax.random.PRNGKey(1), state0, smooth, 4)
+            g = self._weighted_gram(pert, p)
+            norm = np.sqrt(np.outer(np.diag(g), np.diag(g)))
+            off = np.abs(g / norm)[np.triu_indices(4, 1)]
+            corr[et] = off.mean()
+        assert corr[True] < 0.1 * corr[False]
+
+    def test_transform_preserves_target_amplitude(self):
+        std = np.asarray([1.0, 2.0], np.float32)
+        pert = make_pert(kind="bred", amplitude=0.2, channel_std=std,
+                         ensemble_transform=True)
+        state0 = jnp.asarray(
+            np.random.default_rng(0).normal(size=(2, NLAT, NLON)),
+            jnp.float32)
+        p = pert.bred_vectors(jax.random.PRNGKey(2), state0,
+                              lambda s: 1.3 * jnp.roll(s, 1, -1), 3)
+        rms = np.sqrt(np.asarray(
+            metrics._spatial_mean(p * p, pert.area_weights)))
+        np.testing.assert_allclose(rms, 0.2 * std[None, :].repeat(3, 0),
+                                   rtol=1e-4)
+
+    def test_requires_bred_kind(self):
+        with pytest.raises(ValueError, match="bred"):
+            PerturbationConfig(kind="obs", ensemble_transform=True)
+
+    def test_member_count_validation(self):
+        from repro.inference.perturbations import validate_member_count
+        et = PerturbationConfig(kind="bred", ensemble_transform=True)
+        assert validate_member_count(4, True, et) == []
+        assert any("4 antithetic members" in p
+                   for p in validate_member_count(2, True, et))
+        assert any("even member count" in p
+                   for p in validate_member_count(3, True,
+                                                  PerturbationConfig()))
+        # uncentered, unperturbed: odd member counts are legitimate
+        assert validate_member_count(3, False, PerturbationConfig()) == []
+        # a single control trajectory has no pair to un-center: allowed
+        assert validate_member_count(1, True, PerturbationConfig()) == []
+        # non-antithetic draws count individually: 3 members = 3 draws
+        et_ind = PerturbationConfig(kind="bred", antithetic=False,
+                                    ensemble_transform=True)
+        assert validate_member_count(3, False, et_ind) == []
+        assert any("2 members" in p
+                   for p in validate_member_count(1, False, et_ind))
 
 
 @pytest.fixture(scope="module")

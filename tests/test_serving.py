@@ -1,0 +1,328 @@
+"""Tests for the forecast serving subsystem (scheduler, executable
+cache, NDJSON transport, HTTP service).
+
+The load-bearing guarantees:
+
+* fp32 results served through ``serving/`` -- including the NDJSON
+  round-trip -- are **bit-identical** to a direct
+  ``ForecastEngine.forecast`` with the same seed/config;
+* a warm (cache-hit) request reports ``compile_s == 0`` and triggers no
+  recompilation (every chunk dispatches the installed AOT executable);
+* executable-cache keys distinguish exactly the fields that select a
+  different compiled program;
+* persisted (``jax.export``) executables reload in a fresh engine and
+  reproduce the jit path bitwise.
+"""
+
+import json
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.inference import ForecastEngine
+from repro.serving import transport
+from repro.serving.cache import ExecutableCache, ExecutableKey
+from repro.serving.client import ForecastClient
+from repro.serving.scheduler import (ForecastScheduler, ModelPool,
+                                     RequestSpec)
+from repro.serving.service import ForecastService
+
+SPEC = RequestSpec(config="smoke", members=2, lead_steps=3, lead_chunk=2,
+                   scored=True, return_state=True)
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return ModelPool()
+
+
+@pytest.fixture(scope="module")
+def sched(pool):
+    s = ForecastScheduler(pool=pool, cache=ExecutableCache(),
+                          max_concurrency=1)
+    yield s
+    s.close()
+
+
+@pytest.fixture(scope="module")
+def direct(pool):
+    """Direct engine forecast with SPEC's config/seed -- the serving
+    path must reproduce it bit-for-bit."""
+    b = pool.get("smoke")
+    eng = ForecastEngine(b.model, SPEC.engine_config())
+    res = eng.forecast(b.params, b.buffers, b.ds.state(SPEC.sample, 0),
+                       lambda n: b.ds.aux_fields(6.0 * (n + 1)),
+                       jax.random.PRNGKey(SPEC.seed),
+                       steps=SPEC.lead_steps,
+                       truth=lambda n: b.ds.state(SPEC.sample, n + 1))
+    return res
+
+
+class TestRequestValidation:
+    def test_odd_members_with_centering_rejected(self):
+        with pytest.raises(ValueError, match="even member count"):
+            RequestSpec(members=3).validate()
+
+    def test_odd_members_with_perturbation_rejected(self):
+        with pytest.raises(ValueError, match="even member count"):
+            RequestSpec(members=5, perturb="obs").validate()
+
+    def test_ensemble_transform_needs_bred_and_four_members(self):
+        with pytest.raises(ValueError, match="bred"):
+            RequestSpec(members=4, perturb="obs",
+                        ensemble_transform=True).validate()
+        with pytest.raises(ValueError, match="4 antithetic members"):
+            RequestSpec(members=2, perturb="bred",
+                        ensemble_transform=True).validate()
+
+    def test_unknown_field_and_bad_values_rejected(self):
+        with pytest.raises(ValueError, match="unknown request field"):
+            RequestSpec.from_dict({"members": 2, "lead_step": 4})
+        with pytest.raises(ValueError, match="unknown config"):
+            RequestSpec(config="typo").validate()
+        with pytest.raises(ValueError, match="lead_steps"):
+            RequestSpec(lead_steps=0).validate()
+        with pytest.raises(ValueError, match="precision"):
+            RequestSpec(precision="float16").validate()
+
+    def test_non_integer_numerics_rejected(self):
+        # JSON is typed: members=2.0 or lead_steps=true must 400 up
+        # front, not TypeError mid-rollout
+        with pytest.raises(ValueError, match="members must be an integer"):
+            RequestSpec(members=2.0).validate()
+        with pytest.raises(ValueError, match="lead_steps must be an"):
+            RequestSpec(lead_steps=True).validate()
+        with pytest.raises(ValueError, match="scored must be a boolean"):
+            RequestSpec(scored=1).validate()
+
+    def test_validation_reports_every_problem_at_once(self):
+        with pytest.raises(ValueError) as e:
+            RequestSpec(config="typo", members=3, lead_chunk=0).validate()
+        msg = str(e.value)
+        assert "config" in msg and "member" in msg and "lead_chunk" in msg
+
+
+class TestExecutableKeys:
+    def test_keys_distinguish_compiled_programs(self, pool, sched):
+        eng, _ = sched._get_engine(SPEC)
+
+        def key(spec, scored=True, k=2):
+            e, _ = sched._get_engine(spec)
+            return ExecutableKey.for_engine(spec.config, e, scored, k)
+
+        base = key(SPEC)
+        assert base == key(RequestSpec(**SPEC.to_dict()))  # same shape
+        # sample/seed/return_state do NOT change the executable
+        assert base == key(RequestSpec(
+            **{**SPEC.to_dict(), "sample": 9, "seed": 1,
+               "return_state": False}))
+        # every ISSUE-contract field does
+        assert base != key(SPEC, scored=False)
+        assert base != key(SPEC, k=1)
+        assert base != key(RequestSpec(**{**SPEC.to_dict(), "members": 4}))
+        assert base != key(RequestSpec(**{**SPEC.to_dict(),
+                                          "lead_chunk": 3}))
+        assert base != key(RequestSpec(**{**SPEC.to_dict(),
+                                          "precision": "bfloat16"}))
+        assert base != key(RequestSpec(**{**SPEC.to_dict(),
+                                          "perturb": "obs"}))
+        assert base != key(RequestSpec(**{**SPEC.to_dict(),
+                                          "spectra": True}))
+
+    def test_warm_hit_miss_accounting(self, pool):
+        b = pool.get("smoke")
+        eng = ForecastEngine(b.model, SPEC.engine_config())
+        cache = ExecutableCache()
+        key = ExecutableKey.for_engine("smoke", eng, True, 2)
+        first = cache.warm(key, eng, b.params, b.buffers)
+        assert not first["hit"] and first["source"] == "compiled"
+        assert first["compile_s"] > 0
+        second = cache.warm(key, eng, b.params, b.buffers)
+        assert second["hit"] and second["source"] == "memory"
+        assert second["compile_s"] == 0.0
+        assert cache.stats()["misses"] == 1 and cache.stats()["hits"] == 1
+
+
+class TestScheduler:
+    def test_served_scores_bit_identical_to_direct(self, sched, direct):
+        # Round-trip every event through the NDJSON encoding, so this
+        # asserts transport exactness too (acceptance criterion).
+        raw = sched.submit(SPEC).events()
+        events = [json.loads(transport.dump_event(ev)) for ev in raw]
+        res = transport.collect(iter(events))
+        assert res.lead_steps.tolist() == [0, 1, 2]
+        assert [c["lead_steps"] for c in res.chunks] == [[0, 1], [2]]
+        for name, arr in direct.scores.items():
+            np.testing.assert_array_equal(res.scores[name],
+                                          np.asarray(arr), err_msg=name)
+        np.testing.assert_array_equal(res.final_state,
+                                      np.asarray(direct.final_state))
+
+    def test_warm_request_no_recompilation(self, sched):
+        before = sched.cache.stats()["misses"]
+        res = sched.submit(SPEC).result()
+        assert res.timing["compile_s"] == 0.0
+        assert res.cache == {"hits": 2, "misses": 0}
+        assert sched.cache.stats()["misses"] == before
+        # every chunk call dispatched an installed executable -- the jit
+        # (recompilation) path never ran on this warm engine
+        eng = sched._engines.snapshot()[SPEC.engine_key()]
+        assert eng.dispatch_counts["jit"] == 0
+        assert eng.dispatch_counts["aot"] > 0
+
+    def test_unscored_request_streams_without_scores(self, sched):
+        spec = RequestSpec(**{**SPEC.to_dict(), "scored": False,
+                              "return_state": True})
+        res = sched.submit(spec).result()
+        assert res.scores == {}
+        assert res.final_state is not None
+
+    def test_timing_report_fields(self, sched):
+        res = sched.submit(SPEC).result()
+        t = res.timing
+        assert set(t) == {"queue_s", "setup_s", "compile_s", "run_s",
+                          "total_s", "chunk_s"}
+        assert len(t["chunk_s"]) == 2
+        assert t["total_s"] >= t["run_s"] > 0
+
+    def test_runtime_error_reaches_stream_as_error_event(self, sched,
+                                                         monkeypatch):
+        spec = RequestSpec(**{**SPEC.to_dict(), "seed": 123})
+        monkeypatch.setattr(
+            sched.cache, "warm_engine",
+            lambda *a, **k: (_ for _ in ()).throw(RuntimeError("boom")))
+        with pytest.raises(transport.ServingError, match="boom"):
+            sched.submit(spec).result()
+
+
+class TestHTTPService:
+    @pytest.fixture(scope="class")
+    def server(self, sched):
+        svc = ForecastService(scheduler=sched)
+        srv = svc.make_server(port=0)
+        thread = threading.Thread(target=srv.serve_forever, daemon=True)
+        thread.start()
+        yield srv
+        srv.shutdown()
+        srv.server_close()
+
+    @pytest.fixture(scope="class")
+    def client(self, server):
+        return ForecastClient(port=server.server_address[1])
+
+    def test_health_and_stats(self, client):
+        assert client.health() == {"ok": True}
+        stats = client.stats()
+        assert stats["workers"] == 1 and "cache" in stats
+
+    def test_chunk_by_chunk_delivery(self, client):
+        events = list(client.stream(SPEC))
+        kinds = [e["event"] for e in events]
+        assert kinds == ["start", "chunk", "chunk", "done"]
+        chunks = [e for e in events if e["event"] == "chunk"]
+        assert [c["lead_steps"] for c in chunks] == [[0, 1], [2]]
+        assert all("crps" in c["scores"] and "rank_hist" in c["scores"]
+                   for c in chunks)
+
+    def test_served_over_http_bit_identical(self, client, direct):
+        res = client.forecast(SPEC)
+        np.testing.assert_array_equal(res.scores["crps"],
+                                      np.asarray(direct.scores["crps"]))
+        np.testing.assert_array_equal(res.final_state,
+                                      np.asarray(direct.final_state))
+
+    def test_invalid_spec_is_http_400(self, client):
+        with pytest.raises(transport.ServingError, match="400.*even"):
+            list(client.stream({"members": 3}))
+
+    def test_unknown_route_404(self, client):
+        with pytest.raises(transport.ServingError, match="404"):
+            client._get_json("/v1/nope")
+
+
+class TestPersistedExecutables:
+    def test_export_reload_bit_identical(self, pool, tmp_path, direct):
+        b = pool.get("smoke")
+        d = str(tmp_path / "aot")
+        cache1 = ExecutableCache(persist_dir=d)
+        eng1 = ForecastEngine(b.model, SPEC.engine_config())
+        out1 = cache1.warm_engine("smoke", eng1, True, SPEC.lead_steps,
+                                  b.params, b.buffers)
+        assert [o["source"] for o in out1["outcomes"]] == ["compiled",
+                                                           "compiled"]
+        # a fresh engine + cache (a "new process") loads from disk
+        cache2 = ExecutableCache(persist_dir=d)
+        eng2 = ForecastEngine(b.model, SPEC.engine_config())
+        out2 = cache2.warm_engine("smoke", eng2, True, SPEC.lead_steps,
+                                  b.params, b.buffers)
+        assert [o["source"] for o in out2["outcomes"]] == ["disk", "disk"]
+        assert cache2.stats()["disk_hits"] == 2
+        res = eng2.forecast(b.params, b.buffers, b.ds.state(SPEC.sample, 0),
+                            lambda n: b.ds.aux_fields(6.0 * (n + 1)),
+                            jax.random.PRNGKey(SPEC.seed),
+                            steps=SPEC.lead_steps,
+                            truth=lambda n: b.ds.state(SPEC.sample, n + 1))
+        assert eng2.dispatch_counts == {"aot": 2, "jit": 0}
+        np.testing.assert_array_equal(np.asarray(res.final_state),
+                                      np.asarray(direct.final_state))
+        np.testing.assert_array_equal(np.asarray(res.scores["crps"]),
+                                      np.asarray(direct.scores["crps"]))
+
+    def test_stale_blob_recompiles_instead_of_poisoning(self, pool,
+                                                        tmp_path, capsys):
+        # A corrupt/incompatible persisted file must fall back to a
+        # fresh compile and be replaced, not fail every request for its
+        # key until someone wipes the directory.
+        b = pool.get("smoke")
+        d = str(tmp_path / "aot")
+        cache = ExecutableCache(persist_dir=d)
+        eng = ForecastEngine(b.model, SPEC.engine_config())
+        key = ExecutableKey.for_engine("smoke", eng, True, 2)
+        import os
+        os.makedirs(d, exist_ok=True)
+        with open(cache._path(key), "wb") as f:
+            f.write(b"not a stablehlo module")
+        out = cache.warm(key, eng, b.params, b.buffers)
+        assert not out["hit"] and out["source"] == "compiled"
+        assert "discarding stale executable" in capsys.readouterr().out
+        assert eng.has_chunk_executable(True, 2, b.params, b.buffers)
+        # the bad file was replaced by a loadable one
+        eng2 = ForecastEngine(b.model, SPEC.engine_config())
+        out2 = ExecutableCache(persist_dir=d).warm(key, eng2, b.params,
+                                                   b.buffers)
+        assert out2["source"] == "disk"
+
+
+class TestTransport:
+    def test_array_roundtrip_exact(self):
+        rng = np.random.default_rng(0)
+        a = rng.normal(size=(3, 4, 5)).astype(np.float32)
+        np.testing.assert_array_equal(
+            transport.decode_array(transport.encode_array(a)), a)
+
+    def test_float32_survives_json_exactly(self):
+        rng = np.random.default_rng(1)
+        vals = rng.normal(size=257).astype(np.float32) * 1e-7
+        rt = np.asarray(json.loads(json.dumps(vals.tolist())), np.float32)
+        np.testing.assert_array_equal(rt, vals)
+
+    def test_collect_raises_on_error_event(self):
+        with pytest.raises(transport.ServingError, match="nope"):
+            transport.collect(iter([{"event": "error", "message": "nope"}]))
+
+    def test_collect_raises_on_truncated_stream(self):
+        # close-delimited framing: a dead server is EOF, which must not
+        # pass for a completed forecast
+        truncated = [{"event": "start", "request_id": "r9", "spec": {}},
+                     {"event": "chunk", "request_id": "r9", "index": 0,
+                      "lead_steps": [0], "scores": {"crps": [[1.0]]}}]
+        with pytest.raises(transport.ServingError, match="without a"):
+            transport.collect(iter(truncated))
+
+    def test_half_written_line_raises_serving_error(self):
+        import io
+        fp = io.BytesIO(b'{"event":"start","request_id":"r0"}\n{"event":"ch')
+        with pytest.raises(transport.ServingError, match="corrupt NDJSON"):
+            list(transport.read_events(fp))
