@@ -10,14 +10,21 @@ EXPERIMENTS.md (dry-run roofline terms for the production mesh).
   sec5_serving                            -- served-request latency: cold vs
                                              warm executable cache, 1 vs N
                                              concurrent requests
+  sec5_kernels                            -- op-level SHT/DISCO dispatch A/B
+                                             (reference vs Pallas substrate)
+                                             + banded-psi buffer footprint
   table3_train_step                       -- ensemble CRPS train-step time
   kernel_*                                -- Pallas hot-spot kernels
   secG_dryrun_rooflines                   -- production-mesh roofline summary
+
+``--json-out`` additionally writes every emitted row to a JSON artifact
+(list of {name, us_per_call, derived}), which CI uploads.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -53,7 +60,13 @@ def _ab_timeit(fns, n=10, warmup=2) -> list[float]:
     return [b * 1e6 for b in best]
 
 
+#: rows emitted this run, for the ``--json-out`` artifact
+ROWS: list[dict] = []
+
+
 def _row(name: str, us: float, derived) -> None:
+    ROWS.append({"name": name, "us_per_call": round(us, 1),
+                 "derived": str(derived)})
     print(f"{name},{us:.1f},{derived}")
 
 
@@ -299,6 +312,72 @@ def bench_kernels() -> None:
     _row("kernel_crps_interp", us_k, f"ref_us={us_r:.1f}")
 
 
+def bench_sec5_kernels() -> None:
+    """Section 5 / App. B.5, C: op-level kernel-substrate A/B.
+
+    Times the two hot contractions of the FCN3 step -- the SHT (forward
+    and inverse) and the raw DISCO contraction -- through the reference
+    XLA path vs the Pallas dispatch (interpret mode on CPU, compiled on
+    TPU/GPU; the ``mode`` field in the derived column says which ran),
+    and reports the static-memory win of the banded psi split vs the
+    full (K, H, S, W) tensor.
+    """
+    from repro.core.sphere import disco as dlib
+    from repro.core.sphere import grids, sht
+    from repro.kernels import dispatch as kdispatch
+    from repro.kernels.config import KernelConfig, default_interpret
+
+    interpret = default_interpret()
+    mode = "interpret" if interpret else "compiled"
+    kc = KernelConfig(sht="pallas", disco="pallas", interpret=interpret)
+    # the baseline must pin "reference" explicitly: a bare dispatch call
+    # resolves "auto" to pallas on TPU/GPU and would A/B pallas vs itself
+    rc = KernelConfig(sht="reference", disco="reference")
+
+    # SHT at the smoke model's latent resolution, batched over channels.
+    g = grids.make_grid(32, 64, "gauss")
+    t = sht.SHT.create(g)
+    bufs = t.buffers()
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 32, 64))
+    fwd_ref = jax.jit(lambda x: kdispatch.sht_forward(x, bufs["wpct"], rc))
+    fwd_pal = jax.jit(lambda x: kdispatch.sht_forward(x, bufs["wpct"], kc))
+    us_r, us_p = _ab_timeit([lambda: fwd_ref(x), lambda: fwd_pal(x)], n=5)
+    _row("sec5_kernels_sht_forward", us_p,
+         f"ref_us={us_r:.1f};mode={mode};speedup={us_r / us_p:.2f}x")
+
+    c = fwd_ref(x)
+    inv_ref = jax.jit(lambda c: kdispatch.sht_inverse(c, bufs["pct"], 64,
+                                                      rc))
+    inv_pal = jax.jit(lambda c: kdispatch.sht_inverse(c, bufs["pct"], 64, kc))
+    us_r, us_p = _ab_timeit([lambda: inv_ref(c), lambda: inv_pal(c)], n=5)
+    _row("sec5_kernels_sht_inverse", us_p,
+         f"ref_us={us_r:.1f};mode={mode};speedup={us_r / us_p:.2f}x")
+
+    # DISCO on a real encoder plan (equiangular -> Gaussian downsampling).
+    gi = grids.make_grid(64, 128, "equiangular")
+    go = grids.make_grid(32, 64, "gauss")
+    plan = dlib.make_disco_plan(gi, go)
+    full = plan.buffers(jnp.float32)
+    band = plan.banded_buffers(jnp.float32)
+    xd = jax.random.normal(jax.random.PRNGKey(1), (8, 64, 128))
+    dis_ref = jax.jit(lambda x: kdispatch.disco_conv(x, full, plan.stride,
+                                                     plan.affine))
+    dis_pal = jax.jit(lambda x: kdispatch.disco_conv(x, band, plan.stride,
+                                                     plan.affine, kc))
+    us_r, us_p = _ab_timeit([lambda: dis_ref(xd), lambda: dis_pal(xd)], n=5)
+    _row("sec5_kernels_disco", us_p,
+         f"ref_us={us_r:.1f};mode={mode};speedup={us_r / us_p:.2f}x")
+
+    # Static-memory footprint: banded split vs full psi, both for the
+    # benchmark plan and extrapolated to the paper's 721x1440 encoder.
+    full_b = full["psi"].size * 4
+    band_b = (band["psi_band"].size + band["psi_wrap"].size) * 4
+    _row("sec5_kernels_psi_bytes", 0.0,
+         f"full_bytes={full_b};band_bytes={band_b};"
+         f"ratio={full_b / max(band_b, 1):.1f}x;"
+         f"wrap_rows={int(band['wrap_rows'].shape[0])}/{plan.psi.shape[1]}")
+
+
 def bench_dist_roofline() -> None:
     """Appendix G: reads the dry-run results if present and reports the
     roofline bottleneck histogram of the production-mesh baselines."""
@@ -325,6 +404,7 @@ BENCHES = {
     "sec5_inference_speed": lambda a: bench_inference_speed(a.members,
                                                             a.steps),
     "sec5_serving": lambda a: bench_serving(a.members, a.steps),
+    "sec5_kernels": lambda a: bench_sec5_kernels(),
     "table3_train_step": lambda a: bench_train_step(),
     "kernel_pallas": lambda a: bench_kernels(),
     "secG_dryrun_rooflines": lambda a: bench_dist_roofline(),
@@ -342,6 +422,9 @@ def main(argv=None) -> None:
                     help="lead steps for sec5_inference_speed (short "
                          "rollouts under-amortize the engine's one-off "
                          "per-forecast setup)")
+    ap.add_argument("--json-out", default=None,
+                    help="also write the emitted rows to this JSON file "
+                         "(the CI benchmark artifact)")
     args = ap.parse_args(argv)
     selected = {n: fn for n, fn in BENCHES.items()
                 if args.only is None or args.only in n}
@@ -350,6 +433,10 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     for fn in selected.values():
         fn(args)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"backend": jax.default_backend(), "rows": ROWS}, f,
+                      indent=2)
 
 
 if __name__ == "__main__":

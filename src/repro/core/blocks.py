@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.core.sphere import disco as discolib
 from repro.core.sphere import spectral_conv as speclib
+from repro.kernels.config import KernelConfig
 
 
 def init_mlp(key: jax.Array, c_in: int, c_hidden: int, c_out: int,
@@ -77,22 +78,26 @@ def init_block(key: jax.Array, spec: BlockSpec, dtype=jnp.float32) -> dict:
 
 def apply_block(params: dict, spec: BlockSpec, x: jax.Array, cond: jax.Array,
                 buffers: dict,
-                affine: tuple[int, int] | None = None) -> jax.Array:
+                affine: tuple[int, int] | None = None,
+                kernels: KernelConfig | None = None) -> jax.Array:
     """One processor block.
 
     x: (..., C_latent, H, W) latent state; cond: (..., C_cond, H, W)
     conditioning (auxiliary + noise embeddings, constant across blocks).
-    buffers: latent-grid geometry -- {"psi", "lat_idx"} for local blocks and
-    {"wpct", "pct"} for global blocks.
+    buffers: latent-grid geometry -- {"psi", "lat_idx"} (or the banded
+    pallas layout) for local blocks and {"wpct", "pct"} for global
+    blocks.  ``kernels`` routes the hot contraction through the Pallas
+    substrate (``repro.kernels.dispatch``).
     """
     cond = jnp.broadcast_to(cond, x.shape[:-3] + cond.shape[-3:])
     h = jnp.concatenate([x, cond], axis=-3)
     if spec.kind == "local":
         h = discolib.apply_disco_conv(params["conv"], h, buffers, stride=1,
-                                      groups=1, affine=affine)
+                                      groups=1, affine=affine,
+                                      kernels=kernels)
     else:
         h = speclib.apply_spectral_conv(params["conv"], h, buffers,
-                                        nlon=x.shape[-1])
+                                        nlon=x.shape[-1], kernels=kernels)
     h = jax.nn.gelu(h)
     h = apply_mlp(params["mlp"], h)
     return x + params["layer_scale"][:, None, None] * h

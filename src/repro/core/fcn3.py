@@ -36,6 +36,7 @@ from repro.core.sphere import grids as glib
 from repro.core.sphere import interp as interplib
 from repro.core.sphere import noise as noiselib
 from repro.core.sphere import sht as shtlib
+from repro.kernels.config import KernelConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +72,11 @@ class FCN3Config:
     layer_scale_init: float = 1e-3
     # water channels are softclamped (q at every level + tcwv)
     dtype: str = "float32"
+    # kernel substrate for the hot contractions (SHT Legendre stage,
+    # banded DISCO): "auto" compiles the Pallas kernels on TPU/GPU and
+    # keeps the reference XLA paths on CPU.  Decides both the dispatch
+    # in ``apply`` and the buffer layout built by ``make_buffers``.
+    kernels: KernelConfig = KernelConfig()
 
     # ------------------------------------------------------------------
     @property
@@ -138,21 +144,30 @@ class FCN3:
 
     # ------------------------------------------------------------------
     def make_buffers(self) -> dict:
+        """Geometry buffers in the layout ``cfg.kernels`` resolves to.
+
+        Under pallas DISCO dispatch the plans emit the banded split
+        (``psi_band`` + near-pole ``psi_wrap``) instead of the full
+        (K, H, S, W) psi -- the static-memory win that makes the Pallas
+        path viable at 721x1440.
+        """
         dt = self.cfg.jdtype
+        kc = self.cfg.kernels
         return {
-            "enc": self.enc_plan.buffers(dt),
-            "latent": self.latent_plan.buffers(dt),
-            "dec": self.dec_plan.buffers(dt),
+            "enc": self.enc_plan.buffers(dt, kc),
+            "latent": self.latent_plan.buffers(dt, kc),
+            "dec": self.dec_plan.buffers(dt, kc),
             "latent_sht": {k: v.astype(dt) if v.dtype != jnp.int32 else v
                            for k, v in self.latent_sht.buffers().items()},
         }
 
     def buffer_specs(self) -> dict:
         dt = self.cfg.jdtype
+        kc = self.cfg.kernels
         return {
-            "enc": self.enc_plan.buffer_specs(dt),
-            "latent": self.latent_plan.buffer_specs(dt),
-            "dec": self.dec_plan.buffer_specs(dt),
+            "enc": self.enc_plan.buffer_specs(dt, kc),
+            "latent": self.latent_plan.buffer_specs(dt, kc),
+            "dec": self.dec_plan.buffer_specs(dt, kc),
             "latent_sht": self.latent_sht.buffer_specs(),
         }
 
@@ -252,19 +267,23 @@ class FCN3:
         hw = atmos.shape[-2:]
         # (..., L, A, H, W): shared encoder applied per level.
         atmos = atmos.reshape(b + (nl, na) + hw)
+        kc = cfg.kernels
         za = discolib.apply_disco_conv(params["enc_atmos"], atmos,
                                        buffers["enc"], self.enc_plan.stride,
                                        groups=na,
-                                       affine=self.enc_plan.affine)
+                                       affine=self.enc_plan.affine,
+                                       kernels=kc)
         za = za.reshape(b + (nl * cfg.atmos_embed,) + za.shape[-2:])
         zs = discolib.apply_disco_conv(params["enc_surface"], surface,
                                        buffers["enc"], self.enc_plan.stride,
                                        groups=cfg.n_surface,
-                                       affine=self.enc_plan.affine)
+                                       affine=self.enc_plan.affine,
+                                       kernels=kc)
         zc = discolib.apply_disco_conv(params["enc_cond"], cond_in,
                                        buffers["enc"], self.enc_plan.stride,
                                        groups=cfg.n_cond_in,
-                                       affine=self.enc_plan.affine)
+                                       affine=self.enc_plan.affine,
+                                       kernels=kc)
         return jnp.concatenate([za, zs], axis=-3), zc
 
     def _decode(self, params: dict, buffers: dict, latent: jax.Array
@@ -277,14 +296,17 @@ class FCN3:
         b = atmos_lat.shape[:-3]
         hw = atmos_lat.shape[-2:]
         atmos_lat = atmos_lat.reshape(b + (nl, cfg.atmos_embed) + hw)
+        kc = cfg.kernels
         ua = discolib.apply_disco_conv(params["dec_atmos"], atmos_lat,
                                        buffers["dec"], 1, groups=cfg.n_atmos,
-                                       affine=self.dec_plan.affine)
+                                       affine=self.dec_plan.affine,
+                                       kernels=kc)
         ua = ua.reshape(b + (nl * cfg.n_atmos,) + hw)
         us = discolib.apply_disco_conv(params["dec_surface"], surf_lat,
                                        buffers["dec"], 1,
                                        groups=cfg.n_surface,
-                                       affine=self.dec_plan.affine)
+                                       affine=self.dec_plan.affine,
+                                       kernels=kc)
         return jnp.concatenate([ua, us], axis=-3)
 
     def apply(self, params: dict, buffers: dict, state: jax.Array,
@@ -305,7 +327,8 @@ class FCN3:
             # deeper spatial parallelism; we support both levers).
             affine = self.latent_plan.affine if spec.kind == "local" else None
             fn = (lambda pp, xx, cc, bb, _spec=spec, _aff=affine:
-                  blk.apply_block(pp, _spec, xx, cc, bb, affine=_aff))
+                  blk.apply_block(pp, _spec, xx, cc, bb, affine=_aff,
+                                  kernels=cfg.kernels))
             x = jax.checkpoint(fn)(p, x, cond, buf)
         out = self._decode(params, buffers, x)
         # Output transformation (C.8): softclamp water channels.

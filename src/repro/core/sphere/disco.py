@@ -14,13 +14,17 @@ latitudinal support is a narrow band of ``S`` rings around ``h_out``
 (wider longitudinal support near the poles is retained exactly -- psi keeps
 the full circle of offsets and is simply zero outside the geodesic cutoff).
 
-Two execution paths produce identical results:
+Two execution paths produce identical results, selected per
+``repro.kernels.config.KernelConfig`` (see docs/kernels.md):
 
 * ``disco_conv`` (this file) -- FFT-based circular correlation (exact,
-  XLA-friendly, used at configuration extremes where the support wraps the
-  whole circle near the poles);
+  XLA-friendly) over the full psi tensor;
 * ``repro.kernels.disco`` -- Pallas TPU kernel operating on the densified
   band (the analogue of the paper's custom CUDA contraction kernel).
+  ``split_psi_band`` separates psi into the narrow interior band this
+  kernel consumes and the few near-pole *wrap rows* whose support circles
+  the globe; dispatch recomputes those by the exact FFT correlation, so
+  the full (K, H, S, W) psi never needs to be materialized on device.
 
 Filter basis: Morlet-like wavelets on the cutoff disk, paper eq. (24):
 ``k_{l,m}(t', a) = cos^2(pi/2 t') * exp(i pi t' (l sin a + m cos a))``,
@@ -38,6 +42,7 @@ import numpy as np
 
 from repro.core.sphere import fourier
 from repro.core.sphere import grids as glib
+from repro.kernels.config import KernelConfig
 
 
 # ---------------------------------------------------------------------------
@@ -105,13 +110,63 @@ class DiscoPlan:
     # *replicate* the operand -- a ~100 TB/step all-gather at FCN3 scale).
     affine: tuple[int, int] | None = None
 
-    def buffers(self, dtype=jnp.float32) -> dict[str, jax.Array]:
+    def buffers(self, dtype=jnp.float32,
+                kernels: KernelConfig | None = None) -> dict[str, jax.Array]:
+        """Device buffers in the layout the resolved kernel path expects.
+
+        Reference (FFT) dispatch materializes the full ``psi`` tensor;
+        pallas dispatch materializes only the banded split (see
+        ``split_psi_band``) -- at 721x1440 that is the difference between
+        a ~200 MB and a ~10 MB static filter footprint per plan.
+        """
+        if kernels is not None and kernels.resolve("disco")[0] == "pallas":
+            return self.banded_buffers(dtype)
         return {
             "psi": jnp.asarray(self.psi, dtype),
             "lat_idx": jnp.asarray(self.lat_idx),
         }
 
-    def buffer_specs(self, dtype=jnp.float32) -> dict[str, jax.ShapeDtypeStruct]:
+    def banded_buffers(self, dtype=jnp.float32) -> dict[str, jax.Array]:
+        """Banded filter split for the Pallas DISCO kernel.
+
+        ``psi_band`` (K, H, S, D) holds the interior rows' narrow
+        longitudinal window (wrap rows zeroed); ``psi_wrap``
+        (K, H_wrap, S, W) keeps the full circle for the few near-pole
+        rows whose support wraps, which dispatch routes through the
+        exact FFT path.  The full (K, H, S, W) psi never reaches the
+        device.
+        """
+        band, wrap_rows, psi_wrap = self._banded_split()
+        return {
+            "psi_band": jnp.asarray(band, dtype),
+            "psi_wrap": jnp.asarray(psi_wrap, dtype),
+            "wrap_rows": jnp.asarray(wrap_rows, jnp.int32),
+            "lat_idx": jnp.asarray(self.lat_idx),
+        }
+
+    def _banded_split(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """``split_psi_band(self.psi)``, memoized on the (frozen) plan:
+        the split copies full-psi-sized tensors (~200 MB per plan at
+        721x1440), and make_buffers / buffer_specs / engine layout
+        adaptation must not re-pay that per call."""
+        cached = getattr(self, "_split_cache", None)
+        if cached is None:
+            cached = split_psi_band(self.psi)
+            object.__setattr__(self, "_split_cache", cached)
+        return cached
+
+    def buffer_specs(self, dtype=jnp.float32,
+                     kernels: KernelConfig | None = None
+                     ) -> dict[str, jax.ShapeDtypeStruct]:
+        if kernels is not None and kernels.resolve("disco")[0] == "pallas":
+            band, wrap_rows, psi_wrap = self._banded_split()
+            return {
+                "psi_band": jax.ShapeDtypeStruct(band.shape, dtype),
+                "psi_wrap": jax.ShapeDtypeStruct(psi_wrap.shape, dtype),
+                "wrap_rows": jax.ShapeDtypeStruct(wrap_rows.shape, jnp.int32),
+                "lat_idx": jax.ShapeDtypeStruct(self.lat_idx.shape,
+                                                jnp.int32),
+            }
         return {
             "psi": jax.ShapeDtypeStruct(self.psi.shape, dtype),
             "lat_idx": jax.ShapeDtypeStruct(self.lat_idx.shape, jnp.int32),
@@ -209,6 +264,52 @@ def _build_plan(grid_in, grid_out, ell_max, m_max, cutoff_factor) -> DiscoPlan:
     )
 
 
+def split_psi_band(psi: np.ndarray, d_max: int | None = None
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Split the full psi tensor into an interior band + wrap rows.
+
+    Pure host-side geometry (numpy): for each output row, the nonzero
+    longitudinal offsets of the quadrature-weighted filter form a
+    contiguous window around offset 0 -- narrow in the interior, wrapping
+    (a large fraction of) the whole circle for the few rows near the
+    poles where the geodesic cutoff disk contains entire latitude rings.
+
+    A row is a *wrap row* when its support half-width exceeds a quarter
+    circle (its window would cover more than half of W -- the regime
+    where the FFT correlation is the right algorithm anyway) or, with
+    ``d_max``, when it does not fit the capped band.  All other rows
+    share one symmetric band of D = 2*max_half_width + 1 taps covering
+    offsets ``-(D//2) .. D//2``; the convention is baked into dispatch
+    (``off0 = -(D // 2)``) so D is recoverable from the buffer shape.
+
+    Returns ``(psi_band, wrap_rows, psi_wrap)``:
+      psi_band: (K, H, S, D) with wrap rows zeroed;
+      wrap_rows: (H_wrap,) int32 sorted output-row indices;
+      psi_wrap: (K, H_wrap, S, W) the wrap rows' full-circle psi.
+    The split is lossless by construction: every nonzero entry of psi
+    lands in exactly one of the two tensors.
+    """
+    k, h, s, w = psi.shape
+    nz = np.abs(psi).max(axis=(0, 2))                  # (H, W)
+    j = np.arange(w)
+    off = np.where(j <= w // 2, j, j - w)              # signed offsets
+    # per-row support half-width (-1 when the row has no support at all)
+    r = np.where(nz > 0, np.abs(off)[None, :], -1).max(axis=1)  # (H,)
+    cap = max(0, (w // 2 - 1) // 2)
+    if d_max is not None:
+        cap = min(cap, max(0, (d_max - 1) // 2))
+    wrap = r > cap
+    interior = r[~wrap]
+    dh = int(interior.max()) if interior.size and interior.max() > 0 else 0
+    d = 2 * dh + 1
+    wrap_rows = np.where(wrap)[0].astype(np.int32)
+    idx = (np.arange(d) - dh) % w
+    band = psi[:, :, :, idx].copy()
+    band[:, wrap_rows] = 0.0
+    psi_wrap = psi[:, wrap_rows].copy()
+    return band.astype(np.float32), wrap_rows, psi_wrap.astype(np.float32)
+
+
 # ---------------------------------------------------------------------------
 # Convolution application (FFT path)
 # ---------------------------------------------------------------------------
@@ -290,9 +391,22 @@ def init_disco_conv(key: jax.Array, c_out: int, c_in: int, n_basis: int,
 
 def apply_disco_conv(params: dict, x: jax.Array, buffers: dict,
                      stride: int, groups: int = 1,
-                     affine: tuple[int, int] | None = None) -> jax.Array:
-    """x: (..., C_in, H_in, W_in) -> (..., C_out, H_out, W_out)."""
-    z = disco_conv(x, buffers["psi"], buffers["lat_idx"], stride, affine)
+                     affine: tuple[int, int] | None = None,
+                     kernels: KernelConfig | None = None) -> jax.Array:
+    """x: (..., C_in, H_in, W_in) -> (..., C_out, H_out, W_out).
+
+    The raw contraction dispatches on the buffer layout: banded buffers
+    (built by ``DiscoPlan.buffers`` under pallas dispatch) route through
+    the Pallas band kernel with the FFT fallback on wrap rows; full-psi
+    buffers take the reference FFT correlation.  ``kernels`` only
+    supplies the interpret flag for the Pallas call.
+    """
+    if "psi_band" in buffers:
+        from repro.kernels import dispatch as kdispatch
+        z = kdispatch.disco_conv_banded_buffers(x, buffers, stride, affine,
+                                                kernels)
+    else:
+        z = disco_conv(x, buffers["psi"], buffers["lat_idx"], stride, affine)
     # z: (..., C_in, K, H_out, W_out)
     w = params["weight"]  # (C_out, C_in/groups, K)
     c_out, cpg, k = w.shape

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sphere import sht as shtlib
+from repro.kernels.config import KernelConfig
 
 
 def init_spectral_filter(key: jax.Array, c_out: int, c_in: int, lmax: int,
@@ -38,7 +39,8 @@ def init_spectral_filter(key: jax.Array, c_out: int, c_in: int, lmax: int,
 
 
 def apply_spectral_conv(params: dict, x: jax.Array, sht_buffers: dict,
-                        nlon: int, lmax_keep: int | None = None) -> jax.Array:
+                        nlon: int, lmax_keep: int | None = None,
+                        kernels: KernelConfig | None = None) -> jax.Array:
     """x: (..., C, H, W) -> (..., C_out, H, W) through the spectral domain.
 
     Args:
@@ -47,8 +49,20 @@ def apply_spectral_conv(params: dict, x: jax.Array, sht_buffers: dict,
       sht_buffers: {"wpct": (H,L,M), "pct": (H,L,M)} Legendre tables.
       nlon: output longitude count (== W).
       lmax_keep: optional hard spectral truncation (anti-aliasing).
+      kernels: substrate selection for the two SHTs (the hot Legendre
+        GEMMs); None keeps the reference path.
     """
-    c = shtlib.sht_forward(x, sht_buffers["wpct"])  # (..., C, L, M)
+    if kernels is not None and kernels.resolve("sht")[0] == "pallas":
+        from repro.kernels import dispatch as kdispatch
+        interpret = kernels.resolve("sht")[1]
+        fwd = lambda x_: kdispatch.sht_forward_pallas(  # noqa: E731
+            x_, sht_buffers["wpct"], interpret)
+        inv = lambda c_: kdispatch.sht_inverse_pallas(  # noqa: E731
+            c_, sht_buffers["pct"], nlon, interpret)
+    else:
+        fwd = lambda x_: shtlib.sht_forward(x_, sht_buffers["wpct"])  # noqa: E731
+        inv = lambda c_: shtlib.sht_inverse(c_, sht_buffers["pct"], nlon)  # noqa: E731
+    c = fwd(x)  # (..., C, L, M)
     if lmax_keep is not None and lmax_keep < c.shape[-2]:
         keep = c[..., :lmax_keep, :]
         c = jnp.pad(keep, [(0, 0)] * (c.ndim - 2)
@@ -61,4 +75,4 @@ def apply_spectral_conv(params: dict, x: jax.Array, sht_buffers: dict,
         w = jax.lax.complex(params["w_re"].astype(jnp.float32),
                             params["w_im"].astype(jnp.float32))  # (Co,Ci,L)
         y = jnp.einsum("oil,...ilm->...olm", w, c)
-    return shtlib.sht_inverse(y, sht_buffers["pct"], nlon)
+    return inv(y)

@@ -201,6 +201,11 @@ def fcn3_buffer_specs(buffers_struct: Any, model_axis=MP) -> Any:
         nd = leaf.ndim
         if name == "psi":
             return _pad((None, model_axis, None, None), nd)
+        if name == "psi_band":
+            # banded pallas layout: same H_out sharding as the full psi;
+            # the small near-pole psi_wrap/wrap_* buffers stay replicated
+            # (every shard may need any wrap row after the scatter).
+            return _pad((None, model_axis, None, None), nd)
         if name == "lat_idx":
             return _pad((model_axis, None), nd)
         if name in ("wpct", "pct"):

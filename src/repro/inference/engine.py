@@ -68,6 +68,7 @@ from repro.core.fcn3 import FCN3
 from repro.core.sphere import noise as noiselib
 from repro.evaluation import metrics
 from repro.inference import perturbations as perturblib
+from repro.kernels.config import KernelConfig
 
 # fold_in salt separating the perturbation stream from the noise-process
 # stream (which folds in the 0-based lead index).
@@ -133,6 +134,14 @@ class EngineConfig:
                     mean; "spectrum_truth" when truth is given) to the
                     in-scan score set -- one extra SHT per member, channel
                     and lead, so opt-in.
+    kernels:        kernel substrate for the model's hot contractions
+                    (``repro.kernels.config.KernelConfig``).  ``None``
+                    inherits the model's own ``FCN3Config.kernels``;
+                    an explicit config makes the engine rebuild its
+                    model view (and its buffer layout) around that
+                    substrate.  Part of the engine identity, so the
+                    serving AOT executable-cache key distinguishes
+                    programs compiled for different substrates.
     """
 
     members: int = 4
@@ -144,6 +153,7 @@ class EngineConfig:
     static_buffers: bool = False
     perturb: perturblib.PerturbationConfig = perturblib.PerturbationConfig()
     spectra: bool = False
+    kernels: KernelConfig | None = None
 
     @property
     def jdtype(self):
@@ -213,6 +223,12 @@ class ForecastEngine:
                  diagnostics: Callable[[jax.Array], Any] | None = None,
                  perturbation: perturblib.InitialConditionPerturbation
                  | None = None):
+        # An explicit EngineConfig.kernels re-homes the model on that
+        # substrate (geometry plans and Legendre tables are lru-cached
+        # by grid, so this costs a config object, not a rebuild of the
+        # static geometry).
+        if cfg.kernels is not None and cfg.kernels != model.cfg.kernels:
+            model = FCN3(dataclasses.replace(model.cfg, kernels=cfg.kernels))
         self.model = model
         self.cfg = cfg
         self.diagnostics = diagnostics
@@ -539,9 +555,35 @@ class ForecastEngine:
     # AOT hooks: explicit lower/compile (and jax.export persistence) of
     # the chunk function, instead of relying on implicit jit.  Driven by
     # the serving layer's executable cache (repro.serving.cache).
+    def _adapt_buffers(self, buffers):
+        """Convert caller buffers to the model's kernel-dispatch layout.
+
+        Callers (serving scheduler, CLIs) hold one buffers object per
+        named config, built under that config's default substrate; an
+        engine re-homed on a different ``EngineConfig.kernels`` needs
+        the matching layout (banded psi for pallas DISCO, full psi for
+        the reference FFT path).  Geometry is deterministic from the
+        config, so rebuilding via ``make_buffers`` is exact; the result
+        is identity-cached per incoming object, like the precision
+        casts.
+        """
+        disco_bufs = buffers.get("enc") or buffers.get("latent") or {}
+        want = self.model.cfg.kernels.resolve("disco")[0] == "pallas"
+        if ("psi_band" in disco_bufs) == want:
+            return buffers
+        with self._cache_lock:
+            entry = self._cast_cache.get("layout")
+            if entry is not None and entry[0] is buffers:
+                return entry[1]
+            rebuilt = self.model.make_buffers()
+            self._cast_cache["layout"] = (buffers, rebuilt)
+            return rebuilt
+
     def _prepare_inputs(self, params, buffers) -> tuple:
-        """Apply the precision policy to params/buffers (identity-cached,
-        so warm serving loops hand back the same cast objects)."""
+        """Apply the kernel-layout and precision policies to
+        params/buffers (identity-cached, so warm serving loops hand back
+        the same prepared objects)."""
+        buffers = self._adapt_buffers(buffers)
         dt = self.cfg.jdtype
         if dt != jnp.float32:
             params = self._cast_cached("params", params, dt)

@@ -1,3 +1,14 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel substrate for the FCN3 hot path.
+
+Each compute hot spot the paper optimizes with a custom kernel has a
+``<name>.py`` (the Pallas kernel), ``ops.py`` (jitted public wrappers)
+and ``ref.py`` (pure-jnp oracle).  ``config.KernelConfig`` selects the
+substrate per op and ``dispatch`` routes the model through it; see
+docs/kernels.md for the dispatch matrix.
+"""
+
+from repro.kernels.config import (  # noqa: F401
+    KernelConfig,
+    compiled_backend,
+    default_interpret,
+)

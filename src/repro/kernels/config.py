@@ -1,0 +1,112 @@
+"""Kernel-dispatch configuration: which substrate executes each hot op.
+
+FCN3's two dominant contractions -- the Legendre stage of the SHT and the
+banded DISCO convolution (paper App. B.5 / C) -- each have two
+implementations in this repo:
+
+* ``reference`` -- pure-XLA einsum/FFT paths in ``repro.core.sphere``
+  (exact, differentiable, runs anywhere);
+* ``pallas``    -- the MXU-shaped Pallas kernels in ``repro.kernels``
+  (the TPU analogue of the paper's custom CUDA kernels).
+
+``KernelConfig`` selects the substrate per op.  It lives on
+``FCN3Config`` (so ``FCN3.make_buffers`` builds the matching buffer
+layout) and on ``EngineConfig`` (so the serving AOT executable-cache key
+distinguishes programs compiled for different substrates).
+
+This module is deliberately dependency-light (dataclasses + jax only):
+``repro.core`` imports it at module level without pulling the Pallas
+kernel implementations; those load lazily inside
+``repro.kernels.dispatch`` only when a pallas path is actually resolved.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+#: backends where a Pallas kernel compiles to real hardware.  Anything
+#: else (cpu, METAL, ...) can only run kernels in interpret mode.
+COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+_MODES = ("auto", "reference", "pallas")
+_OPS = ("sht", "disco")
+
+
+def compiled_backend() -> bool:
+    """True when ``jax.default_backend()`` compiles Pallas kernels."""
+    return jax.default_backend() in COMPILED_BACKENDS
+
+
+def default_interpret() -> bool:
+    """Backend-aware interpret default for every kernel wrapper.
+
+    False on TPU/GPU (compile the kernel -- a real accelerator must
+    never silently fall into the slow interpreter), True elsewhere
+    (interpreting is the only way a Pallas kernel runs on CPU).
+    """
+    return not compiled_backend()
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """Per-op kernel substrate selection with backend-aware defaults.
+
+    sht / disco: "auto" | "reference" | "pallas".
+      "auto" resolves to the Pallas kernel on a compiled backend
+      (TPU/GPU) and to the reference XLA path on CPU.
+    interpret: tri-state Pallas interpret flag.  ``None`` auto-detects
+      from the backend (compiled on TPU/GPU).  On CPU an explicit
+      ``interpret=True`` is the *only* way to get the Pallas kernels
+      (interpret mode exists for parity testing, not speed): a plain
+      ``sht="pallas"`` on CPU degrades to the reference path rather
+      than silently running the interpreter in production.
+
+    Frozen + hashable: nests inside ``FCN3Config`` / ``EngineConfig``
+    and therefore inside every engine-pool and AOT executable-cache key.
+    """
+
+    sht: str = "auto"
+    disco: str = "auto"
+    interpret: bool | None = None
+
+    def __post_init__(self):
+        for op in _OPS:
+            if getattr(self, op) not in _MODES:
+                raise ValueError(
+                    f"KernelConfig.{op} must be one of {_MODES}, "
+                    f"got {getattr(self, op)!r}")
+        if self.interpret not in (None, True, False):
+            raise ValueError(
+                f"KernelConfig.interpret must be None/True/False, "
+                f"got {self.interpret!r}")
+
+    def resolve(self, op: str) -> tuple[str, bool]:
+        """(path, interpret) actually used for ``op`` on this backend.
+
+        path is "reference" or "pallas"; interpret only matters for
+        "pallas".  Resolution consults ``jax.default_backend()`` so the
+        same config does the right thing on TPU, GPU and CPU CI.
+        """
+        if op not in _OPS:
+            raise ValueError(f"unknown kernel op {op!r}; expected {_OPS}")
+        mode = getattr(self, op)
+        compiled = compiled_backend()
+        interpret = (self.interpret if self.interpret is not None
+                     else not compiled)
+        if mode == "auto":
+            mode = "pallas" if compiled else "reference"
+        if mode == "pallas" and not compiled and self.interpret is not True:
+            # CPU interpret mode only on explicit request
+            mode = "reference"
+        return mode, interpret
+
+    def effective(self) -> dict[str, str]:
+        """Resolved dispatch summary (for stats endpoints / benchmarks)."""
+        out = {}
+        for op in _OPS:
+            path, interpret = self.resolve(op)
+            out[op] = ("pallas[interpret]" if path == "pallas" and interpret
+                       else path)
+        return out

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.config import default_interpret
+
 N_BLK = 1024
 
 
@@ -38,11 +40,14 @@ def _crps_kernel(ens_ref, obs_ref, o_ref, *, e: int, coeff: float):
 
 @functools.partial(jax.jit, static_argnames=("fair", "interpret"))
 def crps_fused(ens: jax.Array, obs: jax.Array, fair: bool = False,
-               interpret: bool = True) -> jax.Array:
+               interpret: bool | None = None) -> jax.Array:
     """Pointwise ensemble CRPS.
 
     ens: (E, N); obs: (N,) -> (N,) float32. ``fair`` selects eq. (47).
+    ``interpret=None`` auto-detects from the backend.
     """
+    if interpret is None:
+        interpret = default_interpret()
     e, n = ens.shape
     assert obs.shape == (n,)
     coeff = (e / (e - 1.0)) if (fair and e > 1) else 1.0

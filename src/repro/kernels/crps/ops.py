@@ -9,10 +9,11 @@ from repro.kernels.crps.crps import crps_fused
 
 
 def crps_pointwise_pallas(ens: jax.Array, obs: jax.Array, fair: bool = False,
-                          interpret: bool = True) -> jax.Array:
+                          interpret: bool | None = None) -> jax.Array:
     """Drop-in for ``repro.core.crps.crps_ensemble`` (ensemble axis 0).
 
-    ens: (E, ...); obs: (...) -> (...) float32.
+    ens: (E, ...); obs: (...) -> (...) float32.  ``interpret=None``
+    auto-detects from the backend (compiled on TPU/GPU).
     """
     e = ens.shape[0]
     flat = ens.reshape(e, -1)
@@ -22,7 +23,7 @@ def crps_pointwise_pallas(ens: jax.Array, obs: jax.Array, fair: bool = False,
 
 def nodal_crps_pallas(ens: jax.Array, obs: jax.Array,
                       area_weights: jax.Array, fair: bool = False,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool | None = None) -> jax.Array:
     """Quadrature-averaged nodal CRPS (paper eq. 50) via the Pallas kernel."""
     pt = crps_pointwise_pallas(ens, obs, fair=fair, interpret=interpret)
     return jnp.einsum("...hw,hw->...", pt, area_weights.astype(pt.dtype))

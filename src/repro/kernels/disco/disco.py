@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.config import default_interpret
+
 B_BLK = 8
 H_BLK = 8
 
@@ -69,16 +71,20 @@ def _disco_kernel(x_ref, psi_ref, o_ref, *, d: int, w_out: int, stride: int):
 
 @functools.partial(jax.jit, static_argnames=("stride", "interpret"))
 def disco_band_contract(x_gathered: jax.Array, psi_band: jax.Array,
-                        stride: int = 1, interpret: bool = True) -> jax.Array:
+                        stride: int = 1,
+                        interpret: bool | None = None) -> jax.Array:
     """Banded DISCO contraction.
 
     x_gathered: (B, H_out, S, W_in) -- input rows pre-gathered per output
       row (``x[b, lat_idx[h, s], :]``), *not* yet wrap-padded.
     psi_band: (K, H_out, S, D) banded filter values.
     stride: longitudinal output stride (W_out = W_in // stride).
+    interpret: None auto-detects from the backend (compiled on TPU/GPU).
 
     Returns (B, K, H_out, W_out) float32.
     """
+    if interpret is None:
+        interpret = default_interpret()
     b, h, s, w_in = x_gathered.shape
     k, h2, s2, d = psi_band.shape
     assert (h, s) == (h2, s2), (x_gathered.shape, psi_band.shape)

@@ -46,17 +46,23 @@ def banded_psi_from_plan(plan: DiscoPlan, d_max: int | None = None
     off0 = lo - half
     idx = (np.arange(d) + off0) % w
     band = psi[:, :, :, idx]
-    exact = bool(np.isclose(np.abs(band).sum(), np.abs(psi).sum()))
+    # exact iff NO nonzero psi entry falls outside the band columns --
+    # checked structurally (a float-sum comparison would miss truncated
+    # entries smaller than the tolerance).
+    outside = np.ones(w, bool)
+    outside[idx] = False
+    exact = not np.any(psi[:, :, :, outside])
     return band.astype(np.float32), int(off0), exact
 
 
 def disco_conv_banded(x: jax.Array, psi_band: jax.Array, lat_idx: jax.Array,
                       off0: int, stride: int = 1,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool | None = None) -> jax.Array:
     """Banded DISCO conv matching ``disco_conv`` (FFT path) semantics.
 
     x: (..., H_in, W_in); psi_band: (K, H_out, S, D); lat_idx: (H_out, S);
     off0: longitudinal offset of the first band tap (may be negative).
+    ``interpret=None`` auto-detects from the backend.
     Returns (..., K, H_out, W_out).
     """
     batch = x.shape[:-2]

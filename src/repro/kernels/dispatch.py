@@ -1,0 +1,223 @@
+"""Kernel-dispatch substrate: route SHT and DISCO contractions through
+the Pallas kernels (paper App. B.5 / C; the 8-60x inference-speedup
+lever) or the reference XLA paths, per ``repro.kernels.config.KernelConfig``.
+
+Three guarantees make the substrate safe to put on the production hot
+path:
+
+* **Numerical parity.**  Every pallas route computes the same math as
+  its reference path (asserted end-to-end in
+  ``tests/test_kernel_dispatch.py``); only the contraction engine
+  changes (MXU-tiled GEMMs instead of einsum/FFT).
+* **Differentiability.**  The Pallas kernels carry ``jax.custom_vjp``
+  rules whose backward passes run the reference oracles, so a model
+  dispatched through Pallas still trains / calibrates (the kernels
+  themselves define no transpose rules).
+* **Exact pole handling.**  The banded DISCO route uses the dense band
+  kernel for interior rows and falls back to the exact FFT correlation
+  for the few near-pole *wrap rows* whose filter support circles the
+  globe (``repro.core.sphere.disco.split_psi_band``); the union covers
+  every nonzero psi entry, so the hybrid is lossless.
+
+Layering: this module may import ``repro.core.sphere`` (pure reference
+ops) and the Pallas kernel packages; ``repro.core`` only ever imports it
+lazily, inside a function, after ``KernelConfig`` resolved a pallas
+path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sphere import disco as discolib
+from repro.core.sphere import fourier
+from repro.core.sphere import sht as shtlib
+from repro.kernels.config import KernelConfig, default_interpret
+from repro.kernels.disco.disco import disco_band_contract
+from repro.kernels.disco.ref import disco_band_contract_ref
+from repro.kernels.legendre.legendre import legendre_contract
+from repro.kernels.legendre.ref import legendre_contract_ref
+
+_DEFAULT = KernelConfig()
+
+
+# ---------------------------------------------------------------------------
+# Differentiable Pallas primitives (reference-oracle backward passes)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _legendre(x: jax.Array, table: jax.Array, interpret: bool) -> jax.Array:
+    """Pallas Legendre contraction with a reference-math VJP."""
+    return legendre_contract(x, table, interpret=interpret)
+
+
+def _legendre_fwd(x, table, interpret):
+    return _legendre(x, table, interpret), (x, table)
+
+
+def _legendre_bwd(interpret, res, g):
+    x, table = res
+    _, vjp = jax.vjp(legendre_contract_ref, x, table)
+    return vjp(g)
+
+
+_legendre.defvjp(_legendre_fwd, _legendre_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _band_contract(xg: jax.Array, psi_band: jax.Array, stride: int,
+                   interpret: bool) -> jax.Array:
+    """Pallas banded DISCO contraction with a reference-math VJP."""
+    return disco_band_contract(xg, psi_band, stride=stride,
+                               interpret=interpret)
+
+
+def _band_fwd(xg, psi_band, stride, interpret):
+    return _band_contract(xg, psi_band, stride, interpret), (xg, psi_band)
+
+
+def _band_bwd(stride, interpret, res, g):
+    xg, psi_band = res
+    _, vjp = jax.vjp(
+        lambda x_, p_: disco_band_contract_ref(x_, p_, stride=stride),
+        xg, psi_band)
+    return vjp(g)
+
+
+_band_contract.defvjp(_band_fwd, _band_bwd)
+
+
+# ---------------------------------------------------------------------------
+# SHT dispatch
+# ---------------------------------------------------------------------------
+
+def _flatten_batch(x: jax.Array, keep: int) -> tuple[jax.Array, tuple]:
+    batch = x.shape[:-keep]
+    return x.reshape((-1,) + x.shape[-keep:]), batch
+
+
+def sht_forward_pallas(x: jax.Array, wpct: jax.Array,
+                       interpret: bool | None = None) -> jax.Array:
+    """Forward SHT with the Legendre stage on the Pallas kernel.
+
+    Same contract (and same longitudinal transform, including the
+    DFT-as-GEMM ``REPRO_DFT_MODE``) as ``core.sphere.sht.sht_forward``;
+    only the (..., H, M) x (H, L, M) Legendre contraction changes
+    engine.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    h, l, m = wpct.shape
+    w = x.shape[-1]
+    xf = fourier.rfft(x.astype(jnp.float32), axis=-1)[..., :m]
+    xf = xf * (2.0 * jnp.pi / w)
+    re, batch = _flatten_batch(jnp.real(xf), 2)
+    im, _ = _flatten_batch(jnp.imag(xf), 2)
+    cre = _legendre(re, wpct, interpret)
+    cim = _legendre(im, wpct, interpret)
+    return jax.lax.complex(cre, cim).reshape(batch + (l, m))
+
+
+def sht_inverse_pallas(c: jax.Array, pct: jax.Array, nlon: int,
+                       interpret: bool | None = None) -> jax.Array:
+    """Inverse SHT with the Legendre stage on the Pallas kernel."""
+    if interpret is None:
+        interpret = default_interpret()
+    h, l, m = pct.shape
+    table = pct.transpose(1, 0, 2)  # (L, H, M): contract over degree L
+    re, batch = _flatten_batch(jnp.real(c), 2)
+    im, _ = _flatten_batch(jnp.imag(c), 2)
+    sr = _legendre(re.astype(jnp.float32), table, interpret)
+    si = _legendre(im.astype(jnp.float32), table, interpret)
+    spec = jax.lax.complex(sr, si).reshape(batch + (h, m))
+    pad = nlon // 2 + 1 - m
+    if pad < 0:
+        raise ValueError(f"mmax={m} too large for nlon={nlon}")
+    if pad:
+        spec = jnp.pad(spec, [(0, 0)] * (spec.ndim - 1) + [(0, pad)])
+    return fourier.irfft(spec, n=nlon, axis=-1) * nlon
+
+
+def sht_forward(x: jax.Array, wpct: jax.Array,
+                kernels: KernelConfig | None = None) -> jax.Array:
+    """KernelConfig-routed forward SHT (drop-in for the reference)."""
+    path, interpret = (kernels or _DEFAULT).resolve("sht")
+    if path == "pallas":
+        return sht_forward_pallas(x, wpct, interpret)
+    return shtlib.sht_forward(x, wpct)
+
+
+def sht_inverse(c: jax.Array, pct: jax.Array, nlon: int,
+                kernels: KernelConfig | None = None) -> jax.Array:
+    """KernelConfig-routed inverse SHT (drop-in for the reference)."""
+    path, interpret = (kernels or _DEFAULT).resolve("sht")
+    if path == "pallas":
+        return sht_inverse_pallas(c, pct, nlon, interpret)
+    return shtlib.sht_inverse(c, pct, nlon)
+
+
+# ---------------------------------------------------------------------------
+# DISCO dispatch
+# ---------------------------------------------------------------------------
+
+def disco_conv_banded_buffers(x: jax.Array, buffers: dict, stride: int,
+                              affine: tuple[int, int] | None = None,
+                              kernels: KernelConfig | None = None
+                              ) -> jax.Array:
+    """Banded-buffer DISCO contraction: Pallas band + FFT wrap rows.
+
+    x: (..., H_in, W_in) -> (..., K, H_out, W_out), numerically matching
+    ``core.sphere.disco.disco_conv`` on the full psi tensor.  Buffers
+    come from ``DiscoPlan.banded_buffers``; the band tap convention is
+    ``off0 = -(D // 2)`` so all statics derive from buffer shapes.
+    """
+    _, interpret = (kernels or _DEFAULT).resolve("disco")
+    psi_band = buffers["psi_band"]
+    k, h_out, s, d = psi_band.shape
+    batch = x.shape[:-2]
+    w_in = x.shape[-1]
+    off0 = -(d // 2)
+    # roll so band tap 0 sits at longitudinal offset off0
+    xr = jnp.roll(x, -off0, axis=-1) if off0 else x
+    xg = discolib._gather_band(xr, buffers["lat_idx"], affine, h_out)
+    xb = xg.reshape((-1,) + xg.shape[-3:]).astype(jnp.float32)
+    out = _band_contract(xb, psi_band.astype(jnp.float32), stride, interpret)
+    out = out.reshape(batch + (k, h_out, w_in // stride))
+    wrap_rows = buffers["wrap_rows"]
+    if wrap_rows.shape[0]:
+        # Exact FFT circular correlation on the wrap rows only; their
+        # psi keeps the full circle of offsets (zero band contribution).
+        # Reuse the already-gathered xg instead of a second gather from
+        # x: a jnp.take over x's latitude axis would make the SPMD
+        # partitioner replicate the whole operand (the failure mode
+        # _gather_band's strided slices exist to avoid).  xg carries the
+        # rolled input, which shifts the correlation by off0 -- undone
+        # by rolling the full-rate output back before striding.
+        xw = jnp.take(xg, wrap_rows, axis=-3)          # (..., Hw, S, W)
+        xf = fourier.rfft(xw.astype(jnp.float32), axis=-1)
+        pf = fourier.rfft(buffers["psi_wrap"].astype(jnp.float32), axis=-1)
+        prod = jnp.einsum("...hsf,khsf->...khf", xf, jnp.conj(pf))
+        outw = fourier.irfft(prod, n=w_in, axis=-1)
+        if off0:
+            outw = jnp.roll(outw, off0, axis=-1)
+        if stride > 1:
+            outw = outw[..., ::stride]
+        out = out.at[..., wrap_rows, :].set(outw)
+    return out
+
+
+def disco_conv(x: jax.Array, buffers: dict, stride: int,
+               affine: tuple[int, int] | None = None,
+               kernels: KernelConfig | None = None) -> jax.Array:
+    """Buffer-layout-routed raw DISCO contraction.
+
+    Banded buffers (pallas dispatch) take the hybrid band-kernel path;
+    full-psi buffers take the reference FFT correlation.
+    """
+    if "psi_band" in buffers:
+        return disco_conv_banded_buffers(x, buffers, stride, affine, kernels)
+    return discolib.disco_conv(x, buffers["psi"], buffers["lat_idx"],
+                               stride, affine)

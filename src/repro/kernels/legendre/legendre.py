@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.config import default_interpret
+
 # Block sizes: MXU-aligned 128 on the contraction/output dims; the Fourier
 # order m is a batch dimension of the GEMM and is tiled narrow.
 B_BLK = 128
@@ -58,13 +60,16 @@ def _legendre_kernel(x_ref, t_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def legendre_contract(x: jax.Array, table: jax.Array,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool | None = None) -> jax.Array:
     """out[b, n, m] = sum_k x[b, k, m] * table[k, n, m].
 
     x: (B, K, M) float32; table: (K, N, M) float32 -> (B, N, M) float32.
     Shapes are zero-padded up to block multiples; zero padding is exact for
-    this bilinear contraction.
+    this bilinear contraction.  ``interpret=None`` auto-detects from the
+    backend (compiled on TPU/GPU, interpreter elsewhere).
     """
+    if interpret is None:
+        interpret = default_interpret()
     b, k, m = x.shape
     k2, n, m2 = table.shape
     assert k == k2 and m == m2, (x.shape, table.shape)

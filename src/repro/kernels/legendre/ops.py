@@ -1,51 +1,20 @@
 """Jitted public wrappers: Pallas-backed SHT built on the Legendre kernel.
 
-``sht_forward_pallas`` / ``sht_inverse_pallas`` are drop-in replacements for
-``repro.core.sphere.sht.sht_forward/ sht_inverse`` that route the Legendre
-stage through the Pallas TPU kernel.  On CPU the kernel runs in interpret
-mode (set ``interpret=False`` on real TPU hardware).
+``sht_forward_pallas`` / ``sht_inverse_pallas`` are drop-in replacements
+for ``repro.core.sphere.sht.sht_forward / sht_inverse`` that route the
+Legendre stage through the Pallas kernel.  ``interpret=None``
+auto-detects the backend (compiled on TPU/GPU, interpreter elsewhere),
+so real-hardware callers never silently fall into interpret mode.
+
+The implementations live in ``repro.kernels.dispatch`` (the model hot
+path dispatches through the same functions, with custom-VJP backward
+passes and the shared ``fourier`` longitudinal transforms); this module
+re-exports them as the kernel package's stable public surface.
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from repro.kernels.legendre.legendre import legendre_contract
-
-
-def _flatten_batch(x: jax.Array, keep: int) -> tuple[jax.Array, tuple]:
-    batch = x.shape[:-keep]
-    return x.reshape((-1,) + x.shape[-keep:]), batch
-
-
-def sht_forward_pallas(x: jax.Array, wpct: jax.Array,
-                       interpret: bool = True) -> jax.Array:
-    """x: (..., H, W) real -> (..., L, M) complex via the Pallas kernel."""
-    h, l, m = wpct.shape
-    w = x.shape[-1]
-    xf = jnp.fft.rfft(x.astype(jnp.float32), axis=-1)[..., :m]
-    xf = xf * (2.0 * jnp.pi / w)
-    table = wpct  # (H, L, M): contract over H
-    re, batch = _flatten_batch(jnp.real(xf), 2)
-    im, _ = _flatten_batch(jnp.imag(xf), 2)
-    cre = legendre_contract(re, table, interpret=interpret)
-    cim = legendre_contract(im, table, interpret=interpret)
-    out = jax.lax.complex(cre, cim)
-    return out.reshape(batch + (l, m))
-
-
-def sht_inverse_pallas(c: jax.Array, pct: jax.Array, nlon: int,
-                       interpret: bool = True) -> jax.Array:
-    """c: (..., L, M) complex -> (..., H, nlon) real via the Pallas kernel."""
-    h, l, m = pct.shape
-    table = pct.transpose(1, 0, 2)  # (L, H, M): contract over L
-    re, batch = _flatten_batch(jnp.real(c), 2)
-    im, _ = _flatten_batch(jnp.imag(c), 2)
-    sr = legendre_contract(re, table, interpret=interpret)
-    si = legendre_contract(im, table, interpret=interpret)
-    spec = jax.lax.complex(sr, si).reshape(batch + (h, m))
-    pad = nlon // 2 + 1 - m
-    if pad:
-        spec = jnp.pad(spec, [(0, 0)] * (spec.ndim - 1) + [(0, pad)])
-    return jnp.fft.irfft(spec, n=nlon, axis=-1) * nlon
+from repro.kernels.dispatch import (  # noqa: F401
+    sht_forward_pallas,
+    sht_inverse_pallas,
+)

@@ -17,9 +17,10 @@ from repro.kernels.ssd.ssd import ssd_intra_chunk
 def ssd_chunked_pallas(x: jax.Array, da: jax.Array, b_mat: jax.Array,
                        c_mat: jax.Array, chunk: int,
                        initial_state: jax.Array | None = None,
-                       interpret: bool = True
+                       interpret: bool | None = None
                        ) -> tuple[jax.Array, jax.Array]:
-    """Same contract as repro.models.ssm.ssd_chunked."""
+    """Same contract as repro.models.ssm.ssd_chunked; ``interpret=None``
+    auto-detects from the backend (compiled on TPU/GPU)."""
     bsz, s, h, p = x.shape
     g, n = b_mat.shape[2], b_mat.shape[3]
     assert s % chunk == 0

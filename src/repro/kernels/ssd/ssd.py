@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.config import default_interpret
+
 
 def _ssd_kernel(x_ref, dacs_ref, b_ref, c_ref, y_ref, st_ref):
     """One (batch*chunk, head) tile.
@@ -60,15 +62,19 @@ def _ssd_kernel(x_ref, dacs_ref, b_ref, c_ref, y_ref, st_ref):
 @functools.partial(jax.jit, static_argnames=("n_groups", "interpret"))
 def ssd_intra_chunk(x: jax.Array, da_cs: jax.Array, b_mat: jax.Array,
                     c_mat: jax.Array, n_groups: int = 1,
-                    interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+                    interpret: bool | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
     """Fused intra-chunk SSD.
 
     x:      (BC, L, H, P)  (BC = batch * n_chunks, already dt-scaled)
     da_cs:  (BC, L, H)     inclusive cumsum of dt*A
     b_mat:  (BC, L, G, N)
     c_mat:  (BC, L, G, N)
+    ``interpret=None`` auto-detects from the backend.
     Returns (y_diag (BC, L, H, P), states (BC, H, P, N)).
     """
+    if interpret is None:
+        interpret = default_interpret()
     bc, l, h, p = x.shape
     g, n = b_mat.shape[2], b_mat.shape[3]
     rep = h // g

@@ -97,6 +97,11 @@ def main() -> None:
     ap.add_argument("--precision", default="float32",
                     choices=["float32", "bfloat16"],
                     help="model compute dtype; metrics stay fp32")
+    ap.add_argument("--kernels", default="auto",
+                    choices=["auto", "reference", "pallas"],
+                    help="kernel substrate for the SHT/DISCO hot path "
+                         "(auto: Pallas on TPU/GPU, reference on CPU); "
+                         "engine path only")
     ap.add_argument("--legacy-loop", action="store_true",
                     help="per-step-dispatch baseline instead of the "
                          "scan-compiled engine")
@@ -123,9 +128,9 @@ def main() -> None:
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
     if args.legacy_loop and (args.perturb != "none" or args.calibration
-                             or args.scores_out):
-        ap.error("--perturb/--calibration/--scores-out require the "
-                 "engine path")
+                             or args.scores_out or args.kernels != "auto"):
+        ap.error("--perturb/--calibration/--scores-out/--kernels require "
+                 "the engine path")
     # Validate member/perturbation combinations before any tracing: both
     # paths antithetically center the conditioning noise, so an odd
     # member count silently un-centers the ensemble mean.
@@ -175,11 +180,15 @@ def main() -> None:
         # stay jit arguments (shardable, not HLO constants).
         perturbation = (InitialConditionPerturbation.from_dataset(
             model.in_sht, pcfg, ds) if pcfg.active else None)
+        from repro.kernels.config import KernelConfig
+        kernels = (None if args.kernels == "auto"
+                   else KernelConfig(sht=args.kernels, disco=args.kernels))
         eng = ForecastEngine(model, EngineConfig(
             members=args.members, lead_chunk=args.lead_chunk,
             compute_dtype=args.precision,
             static_buffers=args.config != "full",
-            perturb=pcfg, spectra=args.calibration),
+            perturb=pcfg, spectra=args.calibration,
+            kernels=kernels),
             perturbation=perturbation)
         collected: dict[str, list] = {}
         for block in eng.stream(params, buffers, state0,

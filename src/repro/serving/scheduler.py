@@ -211,6 +211,9 @@ class ForecastScheduler:
                     "lead_chunk": key[1].lead_chunk,
                     "precision": key[1].compute_dtype,
                     "perturb": key[1].perturb.kind,
+                    "kernels": (key[1].kernels.effective()
+                                if key[1].kernels is not None
+                                else "inherit"),
                     "dispatch": eng.dispatch_stats()}
                    for key, eng in self._engines.snapshot().items()]
         with self._lock:

@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 
 PRECISIONS = ("float32", "bfloat16")
+KERNEL_MODES = ("auto", "reference", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -20,9 +21,16 @@ class RequestSpec:
 
     The **shape key** (``engine_key``) is every field that selects a
     different compiled program: config, members, lead_chunk, precision,
-    the perturbation settings and spectra.  ``sample``/``seed`` pick the
-    initial condition and noise stream within a warm engine;
-    ``scored``/``return_state`` select what the stream carries.
+    the perturbation settings, spectra and the kernel substrate.
+    ``sample``/``seed`` pick the initial condition and noise stream
+    within a warm engine; ``scored``/``return_state`` select what the
+    stream carries.
+
+    ``kernels`` selects the substrate for the model's hot contractions:
+    "auto" (backend default: Pallas on TPU/GPU, reference on CPU),
+    "reference" or "pallas".  It flows through ``EngineConfig.kernels``
+    into the AOT executable-cache key, so warm requests dispatch the
+    executables compiled for their substrate.
     """
 
     config: str = "smoke"
@@ -30,6 +38,7 @@ class RequestSpec:
     lead_steps: int = 4
     lead_chunk: int = 2
     precision: str = "float32"
+    kernels: str = "auto"
     perturb: str = "none"
     perturb_amplitude: float = 0.05
     bred_cycles: int = 3
@@ -66,12 +75,16 @@ class RequestSpec:
         # GB-scale and must stay jit arguments (same policy as the
         # serve CLI).
         from repro.inference import EngineConfig
+        from repro.kernels.config import KernelConfig
+        kernels = (None if self.kernels == "auto"
+                   else KernelConfig(sht=self.kernels, disco=self.kernels))
         return EngineConfig(members=self.members,
                             lead_chunk=self.lead_chunk,
                             compute_dtype=self.precision,
                             static_buffers=self.config != "full",
                             perturb=self.perturbation_config(),
-                            spectra=self.spectra)
+                            spectra=self.spectra,
+                            kernels=kernels)
 
     def engine_key(self) -> tuple:
         return (self.config, self.engine_config())
@@ -80,7 +93,7 @@ class RequestSpec:
                    "sample", "seed")
     _BOOL_FIELDS = ("ensemble_transform", "spectra", "scored",
                     "return_state")
-    _STR_FIELDS = ("config", "precision", "perturb")
+    _STR_FIELDS = ("config", "precision", "perturb", "kernels")
 
     def _type_problems(self) -> list[str]:
         """JSON is typed; the spec must be too -- members=2.0 or
@@ -123,6 +136,10 @@ class RequestSpec:
             problems.append(
                 f"precision must be one of {PRECISIONS}, "
                 f"got {self.precision!r}")
+        if self.kernels not in KERNEL_MODES:
+            problems.append(
+                f"kernels must be one of {KERNEL_MODES}, "
+                f"got {self.kernels!r}")
         try:
             pcfg = self.perturbation_config()
         except ValueError as e:

@@ -14,6 +14,7 @@ The load-bearing guarantees:
   reproduce the jit path bitwise.
 """
 
+import dataclasses
 import json
 import threading
 
@@ -130,6 +131,33 @@ class TestExecutableKeys:
                                           "perturb": "obs"}))
         assert base != key(RequestSpec(**{**SPEC.to_dict(),
                                           "spectra": True}))
+        # the kernel substrate selects a different compiled program, so
+        # it must select a different executable-cache key
+        assert base != key(RequestSpec(**{**SPEC.to_dict(),
+                                          "kernels": "pallas"}))
+        assert base != key(RequestSpec(**{**SPEC.to_dict(),
+                                          "kernels": "reference"}))
+
+    def test_kernel_config_changes_engine_and_cache_key(self, sched):
+        from repro.inference import ForecastEngine
+        from repro.kernels.config import KernelConfig
+        b = sched.pool.get("smoke")
+        eng_ref = ForecastEngine(b.model, SPEC.engine_config())
+        cfg_pal = dataclasses.replace(
+            SPEC.engine_config(),
+            kernels=KernelConfig(sht="pallas", disco="pallas",
+                                 interpret=True))
+        eng_pal = ForecastEngine(b.model, cfg_pal)
+        k_ref = ExecutableKey.for_engine("smoke", eng_ref, True, 2)
+        k_pal = ExecutableKey.for_engine("smoke", eng_pal, True, 2)
+        assert k_ref != k_pal
+        assert k_ref.token() != k_pal.token()
+        # and the engine re-homed its model on the requested substrate
+        assert eng_pal.model.cfg.kernels.disco == "pallas"
+
+    def test_invalid_kernels_value_rejected(self):
+        with pytest.raises(ValueError, match="kernels must be one of"):
+            RequestSpec(**{**SPEC.to_dict(), "kernels": "cuda"}).validate()
 
     def test_warm_hit_miss_accounting(self, pool):
         b = pool.get("smoke")
