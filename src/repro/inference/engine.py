@@ -52,12 +52,29 @@ Design points:
   ``stream`` dispatches to an installed executable whenever one matches
   the chunk length, falling back to the implicit jit path otherwise;
   both paths run the same lowering, so results are bit-identical.
+* **Coalesced request batching.**  ``stream_batched`` /
+  ``forecast_batched`` roll B same-shape requests -- a leading request
+  axis over ``(state0, key, aux, truth)`` -- through **one** batched
+  chunk program (``jax.vmap`` of the serial chunk function, so the
+  noise streams, scores and carries stay per-request and bit-identical
+  to B serial rollouts).  Batched executables join the AOT hooks via
+  ``batch=``; the serving scheduler coalesces same-shape requests onto
+  this path so N concurrent requests pay one rollout, not N.
+* **Overlapped host transfers.**  Aux/truth staging is double-buffered:
+  while chunk k computes, chunk k+1's host slices are materialized on a
+  background thread, and each (request, step) is staged exactly once
+  per rollout (the ``h2d_chunks``/``h2d_steps`` dispatch counters make
+  duplicate copies detectable).  Retired-chunk score fetches are the
+  caller's half of the overlap -- the serving scheduler moves its
+  ``device_get`` off the dispatch thread so streaming never stalls the
+  scan.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import threading
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Iterator
 
 import jax
@@ -205,6 +222,67 @@ def _cast_floats(tree, dtype):
         if jnp.issubdtype(jnp.asarray(a).dtype, jnp.floating) else a, tree)
 
 
+def _tree_nbytes(tree) -> int:
+    """Total leaf bytes of a pytree without copying any leaf."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = getattr(leaf, "nbytes", None)
+        total += int(n if n is not None else np.asarray(leaf).nbytes)
+    return total
+
+
+class _ChunkStager:
+    """Double-buffered host->device staging of per-chunk scan inputs.
+
+    ``get(i)`` hands back the staged xs for the i-th chunk boundary and
+    immediately schedules chunk i+1 on a background thread, so the host
+    slicing / ``jnp.asarray`` work (an H2D copy on accelerators)
+    overlaps chunk i's device compute instead of serializing with it.
+    Staged chunks are cached until consumed, so no (source, step) is
+    ever materialized twice in one rollout -- bred-vector init ``peek``s
+    chunk 0 for its aux fields instead of re-staging step 0, and the
+    engine's ``h2d_chunks``/``h2d_steps`` dispatch counters (ticked by
+    the stage functions) prove the no-duplicate invariant.
+    """
+
+    def __init__(self, bounds: list[tuple],
+                 stage_fn: Callable[[int, int], dict]):
+        self._bounds = bounds
+        self._stage_fn = stage_fn
+        self._ready: dict[int, dict] = {}
+        self._futures: dict[int, Future] = {}
+        self._ex = ThreadPoolExecutor(max_workers=1,
+                                      thread_name_prefix="h2d-stager")
+
+    def _materialize(self, i: int) -> dict:
+        start, k = self._bounds[i]
+        return self._stage_fn(start, k)
+
+    def _take(self, i: int) -> dict:
+        xs = self._ready.pop(i, None)
+        if xs is not None:
+            return xs
+        fut = self._futures.pop(i, None)
+        return fut.result() if fut is not None else self._materialize(i)
+
+    def peek(self, i: int) -> dict:
+        """Stage chunk i now and keep it for the coming ``get(i)``."""
+        self._ready.setdefault(i, self._take(i))
+        return self._ready[i]
+
+    def get(self, i: int) -> dict:
+        """Staged xs for chunk i; prefetches chunk i+1 in the background."""
+        xs = self._take(i)
+        j = i + 1
+        if j < len(self._bounds) and j not in self._ready \
+                and j not in self._futures:
+            self._futures[j] = self._ex.submit(self._materialize, j)
+        return xs
+
+    def close(self) -> None:
+        self._ex.shutdown(wait=False)
+
+
 class ForecastEngine:
     """Compiled autoregressive ensemble forecaster for an FCN3 model.
 
@@ -254,11 +332,16 @@ class ForecastEngine:
         self._compiled: dict[Any, Any] = {}
         self._cast_cache: dict[str, tuple] = {}
         # AOT executables installed by compile_chunk/import_chunk, keyed
-        # (scored, baked, chunk_len); dispatch_counts records which path
-        # served each chunk call ("aot" must stay exclusive on a warm
-        # serving engine -- a "jit" tick there is a recompilation).
+        # (scored, baked, chunk_len, batch); dispatch_counts records
+        # which path served each chunk call ("aot" must stay exclusive
+        # on a warm serving engine -- a "jit" tick there is a
+        # recompilation) and how much aux/truth host staging ran
+        # ("h2d_chunks"/"h2d_steps" -- exactly one tick per staged chunk
+        # and per (distinct source, step) per rollout, or staging is
+        # duplicating copies).
         self._aot: dict[Any, tuple] = {}
-        self.dispatch_counts = {"aot": 0, "jit": 0}
+        self.dispatch_counts = {"aot": 0, "jit": 0,
+                                "h2d_chunks": 0, "h2d_steps": 0}
         # chunk dispatches are one per lead_chunk, so a lock here is
         # noise next to the device work -- but it keeps the counts exact
         # when a serving scheduler runs concurrent rollouts on one engine
@@ -435,6 +518,27 @@ class ForecastEngine:
 
         return jax.lax.scan(body, (s, z_hat), xs)
 
+    def _run_chunk_batched(self, scored, params, buffers, nbufs, aw, s,
+                           z_hat, key, xs):
+        """``_run_chunk`` vmapped over a leading request axis.
+
+        ``s``/``z_hat``/``key`` carry one entry per coalesced request;
+        ``xs["aux"]``/``xs["truth"]`` a leading (B, k, ...) request axis
+        (``xs["n"]`` -- the global lead indices -- is shared, all
+        coalesced requests roll the same leads).  Params and buffers
+        broadcast.  vmap of the *same* chunk function keeps every
+        request's math element-wise identical to its serial rollout, so
+        coalescing is a pure throughput move, never a numerics one.
+        """
+        n = xs["n"]
+        per_request = {name: v for name, v in xs.items() if name != "n"}
+
+        def one(s_i, z_i, key_i, xs_i):
+            return self._run_chunk(scored, params, buffers, nbufs, aw,
+                                   s_i, z_i, key_i, {**xs_i, "n": n})
+
+        return jax.vmap(one)(s, z_hat, key, per_request)
+
     def _cast_cached(self, slot: str, tree, dt):
         """Float-cast a pytree once per input object (identity-keyed).
 
@@ -454,23 +558,33 @@ class ForecastEngine:
         with self._dispatch_lock:
             self.dispatch_counts[path] += 1
 
+    def _count_staged(self, steps: int) -> None:
+        with self._dispatch_lock:
+            self.dispatch_counts["h2d_chunks"] += 1
+            self.dispatch_counts["h2d_steps"] += steps
+
     def dispatch_stats(self) -> dict:
-        """Copy of the chunk-dispatch counters ("aot" vs "jit"); on a
-        warm serving engine "jit" staying 0 is the no-recompilation
-        invariant the tests and /v1/stats assert."""
+        """Copy of the chunk-dispatch counters ("aot" vs "jit", plus the
+        "h2d_chunks"/"h2d_steps" staging counters); on a warm serving
+        engine "jit" staying 0 is the no-recompilation invariant the
+        tests and /v1/stats assert, and "h2d_steps" growing by exactly
+        (distinct aux sources x steps) per rollout is the
+        no-duplicate-H2D one."""
         with self._dispatch_lock:
             return dict(self.dispatch_counts)
 
     def _lookup_aot(self, scored: bool, baked: bool, k: int,
-                    params, prepared_buffers) -> Callable | None:
-        """Installed executable for a k-step chunk, or None.
+                    params, prepared_buffers,
+                    batch: int | None = None) -> Callable | None:
+        """Installed executable for a k-step chunk (serial when ``batch``
+        is None, else the ``batch``-request coalesced program), or None.
 
         Entries are pinned to the params/buffers *objects* they were
         compiled against: an AOT executable hard-codes shapes and
         shardings, so a different object falls back to the (gracefully
         retracing) jit path instead of crashing mid-request.
         """
-        ent = self._aot.get((scored, baked, k))
+        ent = self._aot.get((scored, baked, k, batch))
         if ent is None:
             return None
         pin_params, pin_bufs, call = ent
@@ -479,13 +593,17 @@ class ForecastEngine:
         return call
 
     def _get_chunk_entry(self, scored: bool, buffers=None,
-                         baked_buffers=None) -> tuple:
-        """(pin, fn, jitted) for one (scored, baked) chunk variant.
+                         baked_buffers=None,
+                         batch: int | None = None) -> tuple:
+        """(pin, fn, jitted) for one (scored, baked, batch) chunk variant.
 
         ``fn(params, buffers, s, z_hat, key, xs)`` is the dispatching
         callable ``stream`` uses: it prefers an installed AOT executable
         for the chunk length and falls back to ``jitted`` (the raw
         ``jax.jit`` object the lower/compile/export hooks operate on).
+        ``batch=None`` is the serial per-request program; an integer B
+        selects the coalesced program whose carries/keys/xs carry a
+        leading B-request axis (``_run_chunk_batched``).
 
         With ``static_buffers``, ``baked_buffers`` (the possibly
         precision-cast copy) is closed over -- constant-folded into the
@@ -496,30 +614,31 @@ class ForecastEngine:
         underneath either way.
         """
         baked = baked_buffers is not None
-        cache_key = (scored, baked)
+        cache_key = (scored, baked, batch)
         with self._cache_lock:
             return self._chunk_entry_locked(scored, baked, cache_key,
-                                            buffers, baked_buffers)
+                                            buffers, baked_buffers, batch)
 
     def _chunk_entry_locked(self, scored, baked, cache_key, buffers,
-                            baked_buffers) -> tuple:
+                            baked_buffers, batch=None) -> tuple:
         entry = self._compiled.get(cache_key)
         if entry is not None and (not baked or entry[0] is buffers):
             return entry
         donate = self.cfg.donate
         nbufs, aw = self.noise_buffers, self.area_weights
+        run = self._run_chunk if batch is None else self._run_chunk_batched
 
         if baked:
             def chunk(params, s, z_hat, key, xs):
-                return self._run_chunk(scored, params, baked_buffers,
-                                       nbufs, aw, s, z_hat, key, xs)
+                return run(scored, params, baked_buffers,
+                           nbufs, aw, s, z_hat, key, xs)
 
             jitted = jax.jit(chunk, donate_argnums=(1, 2) if donate else ())
 
             def fn(params, _buffers, s, z_hat, key, xs):
                 k = int(xs["n"].shape[0])
                 aot = self._lookup_aot(scored, True, k, params,
-                                       baked_buffers)
+                                       baked_buffers, batch)
                 if aot is not None:
                     self._count_dispatch("aot")
                     return aot(params, s, z_hat, key, xs)
@@ -527,14 +646,15 @@ class ForecastEngine:
                 return jitted(params, s, z_hat, key, xs)
         else:
             def chunk(params, bufs, nb, w, s, z_hat, key, xs):
-                return self._run_chunk(scored, params, bufs, nb, w,
-                                       s, z_hat, key, xs)
+                return run(scored, params, bufs, nb, w,
+                           s, z_hat, key, xs)
 
             jitted = jax.jit(chunk, donate_argnums=(4, 5) if donate else ())
 
             def fn(params, bufs, s, z_hat, key, xs):
                 k = int(xs["n"].shape[0])
-                aot = self._lookup_aot(scored, False, k, params, bufs)
+                aot = self._lookup_aot(scored, False, k, params, bufs,
+                                       batch)
                 if aot is not None:
                     self._count_dispatch("aot")
                     return aot(params, bufs, nbufs, aw, s, z_hat, key, xs)
@@ -546,10 +666,12 @@ class ForecastEngine:
         return entry
 
     def _get_chunk_fn(self, scored: bool, buffers=None,
-                      baked_buffers=None) -> Callable:
+                      baked_buffers=None,
+                      batch: int | None = None) -> Callable:
         """The compiled scan over one chunk of lead times, as a callable
         ``fn(params, buffers, s, z_hat, key, xs)``."""
-        return self._get_chunk_entry(scored, buffers, baked_buffers)[1]
+        return self._get_chunk_entry(scored, buffers, baked_buffers,
+                                     batch)[1]
 
     # ------------------------------------------------------------------
     # AOT hooks: explicit lower/compile (and jax.export persistence) of
@@ -604,10 +726,13 @@ class ForecastEngine:
             start += k
         return lens
 
-    def _chunk_avals(self, scored: bool, k: int, params, buffers) -> tuple:
+    def _chunk_avals(self, scored: bool, k: int, params, buffers,
+                     batch: int | None = None) -> tuple:
         """Abstract arguments of the k-step chunk jit, in its calling
         convention: ``(params, s, z_hat, key, xs)`` when buffers are
         baked, else ``(params, buffers, nbufs, aw, s, z_hat, key, xs)``.
+        With ``batch`` the carries/key and per-request xs entries grow a
+        leading B-request axis (``xs["n"]`` stays shared).
         ``params``/``buffers`` must already be precision-prepared."""
         def avals(tree):
             return jax.tree.map(
@@ -616,58 +741,66 @@ class ForecastEngine:
 
         m, cfg = self.model, self.cfg
         h, w = m.grid_in.nlat, m.grid_in.nlon
-        s_av = jax.ShapeDtypeStruct((cfg.members, m.cfg.n_state, h, w),
-                                    cfg.jdtype)
+        lead = () if batch is None else (batch,)
+        s_av = jax.ShapeDtypeStruct(
+            lead + (cfg.members, m.cfg.n_state, h, w), cfg.jdtype)
         z_av = jax.ShapeDtypeStruct(
-            (cfg.members, m.noise.n_proc, m.in_sht.lmax, m.in_sht.mmax),
-            jnp.complex64)
+            lead + (cfg.members, m.noise.n_proc, m.in_sht.lmax,
+                    m.in_sht.mmax), jnp.complex64)
         k0 = jax.random.PRNGKey(0)
-        key_av = jax.ShapeDtypeStruct(k0.shape, k0.dtype)
+        key_av = jax.ShapeDtypeStruct(lead + k0.shape, k0.dtype)
         xs_av = {"n": jax.ShapeDtypeStruct((k,), jnp.int32),
-                 "aux": jax.ShapeDtypeStruct((k, m.cfg.n_aux, h, w),
-                                             jnp.float32)}
+                 "aux": jax.ShapeDtypeStruct(
+                     lead + (k, m.cfg.n_aux, h, w), jnp.float32)}
         if scored:
-            xs_av["truth"] = jax.ShapeDtypeStruct((k, m.cfg.n_state, h, w),
-                                                  jnp.float32)
+            xs_av["truth"] = jax.ShapeDtypeStruct(
+                lead + (k, m.cfg.n_state, h, w), jnp.float32)
         if cfg.static_buffers:
             return (avals(params), s_av, z_av, key_av, xs_av)
         return (avals(params), avals(buffers), avals(self.noise_buffers),
                 avals(self.area_weights), s_av, z_av, key_av, xs_av)
 
-    def _chunk_jitted_and_prepared(self, scored: bool, params, buffers
-                                   ) -> tuple:
+    def _chunk_jitted_and_prepared(self, scored: bool, params, buffers,
+                                   batch: int | None = None) -> tuple:
         pc, bc = self._prepare_inputs(params, buffers)
         entry = self._get_chunk_entry(
-            scored, buffers, bc if self.cfg.static_buffers else None)
+            scored, buffers, bc if self.cfg.static_buffers else None,
+            batch)
         return entry[2], pc, bc
 
-    def lower_chunk(self, scored: bool, k: int, params, buffers
-                    ) -> jax.stages.Lowered:
+    def lower_chunk(self, scored: bool, k: int, params, buffers,
+                    batch: int | None = None) -> jax.stages.Lowered:
         """Explicitly lower the k-step chunk function (``jax.jit(...)
-        .lower``) against this engine's shapes.  ``.compile()`` on the
-        result is what ``compile_chunk`` installs."""
+        .lower``) against this engine's shapes (``batch`` selects the
+        coalesced B-request program).  ``.compile()`` on the result is
+        what ``compile_chunk`` installs."""
         jitted, pc, bc = self._chunk_jitted_and_prepared(scored, params,
-                                                         buffers)
-        return jitted.lower(*self._chunk_avals(scored, k, pc, bc))
+                                                         buffers, batch)
+        return jitted.lower(*self._chunk_avals(scored, k, pc, bc, batch))
 
-    def compile_chunk(self, scored: bool, k: int, params, buffers):
+    def compile_chunk(self, scored: bool, k: int, params, buffers,
+                      batch: int | None = None):
         """AOT-compile the k-step chunk and install it so ``stream``
-        dispatches to it (bit-identical to the implicit jit path -- same
-        lowering, same compiler).  Returns the ``jax.stages.Compiled``."""
-        compiled = self.lower_chunk(scored, k, params, buffers).compile()
+        (or ``stream_batched`` when ``batch`` is set) dispatches to it
+        (bit-identical to the implicit jit path -- same lowering, same
+        compiler).  Returns the ``jax.stages.Compiled``."""
+        compiled = self.lower_chunk(scored, k, params, buffers,
+                                    batch).compile()
         pc, bc = self._prepare_inputs(params, buffers)
-        self._aot[(scored, self.cfg.static_buffers, k)] = (pc, bc, compiled)
+        self._aot[(scored, self.cfg.static_buffers, k, batch)] = (
+            pc, bc, compiled)
         return compiled
 
-    def has_chunk_executable(self, scored: bool, k: int, params, buffers
-                             ) -> bool:
+    def has_chunk_executable(self, scored: bool, k: int, params, buffers,
+                             batch: int | None = None) -> bool:
         """True when a warm executable is installed for this chunk length
         and would actually be dispatched for these params/buffers."""
         pc, bc = self._prepare_inputs(params, buffers)
         return self._lookup_aot(scored, self.cfg.static_buffers, k, pc,
-                                bc) is not None
+                                bc, batch) is not None
 
-    def export_chunk(self, scored: bool, k: int, params, buffers) -> bytes:
+    def export_chunk(self, scored: bool, k: int, params, buffers,
+                     batch: int | None = None) -> bytes:
         """Serialize the lowered k-step chunk program via ``jax.export``
         (StableHLO).  A fresh process imports the blob with
         ``import_chunk`` and skips Python tracing/lowering entirely; the
@@ -675,12 +808,13 @@ class ForecastEngine:
         with a persistent XLA compilation cache to also skip that)."""
         from jax import export as jexport
         jitted, pc, bc = self._chunk_jitted_and_prepared(scored, params,
-                                                         buffers)
-        exp = jexport.export(jitted)(*self._chunk_avals(scored, k, pc, bc))
+                                                         buffers, batch)
+        exp = jexport.export(jitted)(*self._chunk_avals(scored, k, pc, bc,
+                                                        batch))
         return bytes(exp.serialize())
 
     def import_chunk(self, scored: bool, k: int, blob: bytes, params,
-                     buffers) -> None:
+                     buffers, batch: int | None = None) -> None:
         """Deserialize an ``export_chunk`` blob, compile it eagerly and
         install it like ``compile_chunk``.  Carry donation is not
         re-declared on imported programs (jax.export drops it); the jit
@@ -688,9 +822,57 @@ class ForecastEngine:
         from jax import export as jexport
         exp = jexport.deserialize(bytearray(blob))
         pc, bc = self._prepare_inputs(params, buffers)
-        avals = self._chunk_avals(scored, k, pc, bc)
+        avals = self._chunk_avals(scored, k, pc, bc, batch)
         compiled = jax.jit(exp.call).lower(*avals).compile()
-        self._aot[(scored, self.cfg.static_buffers, k)] = (pc, bc, compiled)
+        self._aot[(scored, self.cfg.static_buffers, k, batch)] = (
+            pc, bc, compiled)
+
+    def estimated_bytes(self) -> int:
+        """Estimated device-memory footprint of this engine's warm state.
+
+        Per installed executable, prefers XLA's compiled-memory analysis
+        (temp + output + generated code); on backends whose analysis
+        reports zeros for those (CPU), falls back to an analytic
+        estimate from the chunk calling convention -- double-buffered
+        carries, staged per-step inputs, and (with ``static_buffers``)
+        the geometry constants folded into each executable.  Engine-held
+        buffers (noise tables, area weights, precision/layout cast
+        copies) are counted once; bundle params/buffers are shared
+        across engines and are not.  The serving scheduler's engine-pool
+        budget evicts least-recently-used engines on this number.
+        """
+        total = _tree_nbytes(self.noise_buffers) + int(
+            self.area_weights.nbytes)
+        with self._cache_lock:
+            casts = [entry[1] for entry in self._cast_cache.values()]
+            aot = dict(self._aot)
+        for cast in casts:
+            total += _tree_nbytes(cast)
+        m, cfg = self.model, self.cfg
+        h, w = m.grid_in.nlat, m.grid_in.nlon
+        for (scored, baked, k, batch), (_pp, bb, call) in aot.items():
+            try:
+                ma = call.memory_analysis()
+                est = int((getattr(ma, "temp_size_in_bytes", 0) or 0)
+                          + (getattr(ma, "output_size_in_bytes", 0) or 0)
+                          + (getattr(ma, "generated_code_size_in_bytes", 0)
+                             or 0))
+            except Exception:  # noqa: BLE001 -- analysis is best-effort
+                est = 0
+            if est <= 0:
+                b = batch or 1
+                state = (b * cfg.members * m.cfg.n_state * h * w
+                         * cfg.jdtype.itemsize)
+                noise = (b * cfg.members * m.noise.n_proc * m.in_sht.lmax
+                         * m.in_sht.mmax * 8)
+                xs = (b * k * (m.cfg.n_aux
+                               + (m.cfg.n_state if scored else 0))
+                      * h * w * 4)
+                est = 2 * (state + noise) + xs
+                if baked:
+                    est += _tree_nbytes(bb)
+            total += est
+        return int(total)
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -700,6 +882,21 @@ class ForecastEngine:
             return jnp.stack(
                 [jnp.asarray(src(n)) for n in range(start, start + k)])
         return jnp.asarray(src[start:start + k])
+
+    def _chunk_bounds(self, steps: int) -> list[tuple]:
+        """(start, k) boundaries of a ``steps``-long rollout, after
+        validating the rollout/chunk lengths."""
+        if steps < 1:
+            raise ValueError(f"need at least one lead step, got {steps}")
+        if self.cfg.lead_chunk < 1:
+            raise ValueError(
+                f"lead_chunk must be >= 1, got {self.cfg.lead_chunk}")
+        bounds, start = [], 0
+        while start < steps:
+            k = min(self.cfg.lead_chunk, steps - start)
+            bounds.append((start, k))
+            start += k
+        return bounds
 
     def stream(self, params, buffers, state0: jax.Array, aux, key: jax.Array,
                steps: int | None = None, truth=None
@@ -711,44 +908,54 @@ class ForecastEngine:
                giving the verifying state for lead ``step``; enables
                in-scan scoring.
         steps: total lead steps; required when ``aux`` is a callable.
+
+        Host staging is double-buffered through ``_ChunkStager``: chunk
+        k+1's aux/truth materialize on a background thread while chunk k
+        computes, and no step is staged twice per rollout.
         """
         if steps is None:
             if callable(aux):
                 raise ValueError("steps= is required when aux is a callable")
             steps = len(aux)
-        if steps < 1:
-            raise ValueError(f"need at least one lead step, got {steps}")
-        if self.cfg.lead_chunk < 1:
-            raise ValueError(
-                f"lead_chunk must be >= 1, got {self.cfg.lead_chunk}")
+        bounds = self._chunk_bounds(steps)
         orig_buffers = buffers
         params, buffers = self._prepare_inputs(params, buffers)
         scored = truth is not None
         fn = self._get_chunk_fn(
             scored, orig_buffers,
             buffers if self.cfg.static_buffers else None)
-        # Bred vectors cycle the model at init time: freeze the first
-        # lead's conditioning fields for the breeding rollouts.
-        aux0 = (jnp.asarray(self._stage(aux, 0, 1)[0], jnp.float32)
-                if self._perturb_cfg.kind == "bred" else None)
-        s, z_hat = self.init_carry(jnp.asarray(state0), key,
-                                   params=params, buffers=buffers, aux0=aux0)
-        start = 0
-        while start < steps:
-            k = min(self.cfg.lead_chunk, steps - start)
+
+        def stage(start: int, k: int) -> dict:
             xs = {"n": jnp.arange(start, start + k, dtype=jnp.int32),
                   "aux": self._stage(aux, start, k)}
             if scored:
                 xs["truth"] = self._stage(truth, start, k)
-            (s, z_hat), out = fn(params, buffers, s, z_hat, key, xs)
-            last = start + k >= steps
-            yield ForecastResult(
-                lead_steps=np.arange(start, start + k),
-                scores={n: out[n] for n in SCORE_NAMES if n in out},
-                diagnostics=out.get("diag"),
-                final_state=s if last else None,
-                final_noise=z_hat if last else None)
-            start += k
+            self._count_staged(k)
+            return xs
+
+        stager = _ChunkStager(bounds, stage)
+        try:
+            # Bred vectors cycle the model at init time: freeze the
+            # first lead's conditioning fields for the breeding rollouts
+            # -- taken from the already-staged first chunk, never a
+            # second H2D copy of step 0.
+            aux0 = (jnp.asarray(stager.peek(0)["aux"][0], jnp.float32)
+                    if self._perturb_cfg.kind == "bred" else None)
+            s, z_hat = self.init_carry(jnp.asarray(state0), key,
+                                       params=params, buffers=buffers,
+                                       aux0=aux0)
+            for i, (start, k) in enumerate(bounds):
+                xs = stager.get(i)
+                (s, z_hat), out = fn(params, buffers, s, z_hat, key, xs)
+                last = i + 1 == len(bounds)
+                yield ForecastResult(
+                    lead_steps=np.arange(start, start + k),
+                    scores={n: out[n] for n in SCORE_NAMES if n in out},
+                    diagnostics=out.get("diag"),
+                    final_state=s if last else None,
+                    final_noise=z_hat if last else None)
+        finally:
+            stager.close()
 
     def forecast(self, params, buffers, state0: jax.Array, aux,
                  key: jax.Array, steps: int | None = None, truth=None
@@ -757,3 +964,114 @@ class ForecastEngine:
         parts = list(self.stream(params, buffers, state0, aux, key,
                                  steps=steps, truth=truth))
         return _concat_results(parts)
+
+    # ------------------------------------------------------------------
+    # Coalesced request batching: B same-shape requests, one rollout.
+    def stream_batched(self, params, buffers, state0s, auxs, keys,
+                       steps: int | None = None, truths=None
+                       ) -> Iterator[list[ForecastResult]]:
+        """Roll B same-shape requests through one batched chunk program.
+
+        state0s / auxs / keys (and truths when scoring): one entry per
+        request, each in the exact form ``stream`` accepts.  Yields one
+        ``list[ForecastResult]`` (request-ordered) per chunk.  Because
+        the batched program is ``jax.vmap`` of the serial chunk function
+        and member init runs per request, every request's scores and
+        final state are **bit-identical** to its own serial ``stream``
+        rollout -- coalescing buys throughput (one compiled dispatch, one
+        set of params reads for B requests), never changed numerics.
+
+        All requests share the engine's shape (members, chunk, scores)
+        and the rollout length; per-request initial conditions, noise
+        keys, aux/truth sources may differ freely.
+        """
+        b = len(state0s)
+        if b < 1:
+            raise ValueError("need at least one request to batch")
+        if len(auxs) != b or len(keys) != b or (
+                truths is not None and len(truths) != b):
+            raise ValueError(
+                f"state0s/auxs/keys{'/truths' if truths is not None else ''} "
+                f"must all have one entry per request (got {b} states, "
+                f"{len(auxs)} aux, {len(keys)} keys)")
+        if steps is None:
+            if any(callable(a) for a in auxs):
+                raise ValueError("steps= is required when aux is a callable")
+            steps = len(auxs[0])
+        bounds = self._chunk_bounds(steps)
+        orig_buffers = buffers
+        params, buffers = self._prepare_inputs(params, buffers)
+        scored = truths is not None
+        fn = self._get_chunk_fn(
+            scored, orig_buffers,
+            buffers if self.cfg.static_buffers else None, batch=b)
+
+        def stage(start: int, k: int) -> dict:
+            # Coalesced requests often share sources (the scheduler
+            # hands every member the same aux callable): stage each
+            # *distinct* source once and let jnp.stack broadcast it
+            # device-side, instead of recomputing and re-copying B
+            # identical host chunks.
+            staged: dict[int, jax.Array] = {}
+
+            def once(src):
+                out = staged.get(id(src))
+                if out is None:
+                    out = self._stage(src, start, k)
+                    staged[id(src)] = out
+                return out
+
+            xs = {"n": jnp.arange(start, start + k, dtype=jnp.int32),
+                  "aux": jnp.stack([once(a) for a in auxs])}
+            if scored:
+                xs["truth"] = jnp.stack([once(t) for t in truths])
+            self._count_staged(k * len({id(a) for a in auxs}))
+            return xs
+
+        stager = _ChunkStager(bounds, stage)
+        try:
+            aux0s = [None] * b
+            if self._perturb_cfg.kind == "bred":
+                xs0 = stager.peek(0)
+                aux0s = [jnp.asarray(xs0["aux"][i, 0], jnp.float32)
+                         for i in range(b)]
+            # Member init runs per request through the same compiled
+            # sampler as the serial path (once per forecast -- cheap next
+            # to the rollout), which keeps perturbed members bitwise
+            # equal to serial by construction.
+            carries = [self.init_carry(jnp.asarray(s0), k_i, params=params,
+                                       buffers=buffers, aux0=a0)
+                       for s0, k_i, a0 in zip(state0s, keys, aux0s)]
+            s = jnp.stack([c[0] for c in carries])
+            z_hat = jnp.stack([c[1] for c in carries])
+            key_b = jnp.stack([jnp.asarray(k_i) for k_i in keys])
+            diag = self.diagnostics
+            for i, (start, k) in enumerate(bounds):
+                xs = stager.get(i)
+                (s, z_hat), out = fn(params, buffers, s, z_hat, key_b, xs)
+                last = i + 1 == len(bounds)
+                yield [ForecastResult(
+                    lead_steps=np.arange(start, start + k),
+                    scores={n: out[n][j] for n in SCORE_NAMES if n in out},
+                    diagnostics=(jax.tree.map(lambda a, j=j: a[j],
+                                              out["diag"])
+                                 if diag is not None else None),
+                    final_state=s[j] if last else None,
+                    final_noise=z_hat[j] if last else None)
+                    for j in range(b)]
+        finally:
+            stager.close()
+
+    def forecast_batched(self, params, buffers, state0s, auxs, keys,
+                         steps: int | None = None, truths=None
+                         ) -> list[ForecastResult]:
+        """Run the whole coalesced rollout; one concatenated
+        ``ForecastResult`` per request, in request order."""
+        per_request: list[list[ForecastResult]] = None
+        for block in self.stream_batched(params, buffers, state0s, auxs,
+                                         keys, steps=steps, truths=truths):
+            if per_request is None:
+                per_request = [[] for _ in block]
+            for parts, res in zip(per_request, block):
+                parts.append(res)
+        return [_concat_results(parts) for parts in per_request]

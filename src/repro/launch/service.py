@@ -1,8 +1,11 @@
 """Launch the forecast service (paper Section 5, served).
 
 Starts the HTTP front end over the async scheduler: requests queue,
-engines stay warm per shape key, executables are cached (optionally
-persisted), and every response streams scores chunk-by-chunk as NDJSON.
+engines stay warm per shape key (LRU-evicted under
+``--engine-budget-mb``), executables are cached (optionally persisted),
+same-shape requests coalesce into one batched rollout
+(``--max-batch``/``--batch-window-ms``), and every response streams
+scores chunk-by-chunk as NDJSON.
 
   PYTHONPATH=src python -m repro.launch.service --config smoke --port 8771
 
@@ -56,6 +59,19 @@ def main(argv=None) -> None:
                     help="worker threads running device work")
     ap.add_argument("--queue-size", type=int, default=64,
                     help="pending requests before 503")
+    ap.add_argument("--max-batch", type=int, default=1,
+                    help="coalesce up to this many queued same-shape "
+                         "requests into one batched rollout dispatch "
+                         "(1 disables coalescing)")
+    ap.add_argument("--batch-window-ms", type=float, default=0.0,
+                    help="how long a picked request waits for same-shape "
+                         "companions before rolling (latency spent to "
+                         "fill batches; 0 coalesces only what is "
+                         "already queued)")
+    ap.add_argument("--engine-budget-mb", type=float, default=None,
+                    help="LRU-evict cold engines when the pool's "
+                         "estimated bytes exceed this budget "
+                         "(default: unbounded)")
     ap.add_argument("--persist-dir", default=None,
                     help="persist compiled chunk programs (jax.export "
                          "blobs + XLA compilation cache) here")
@@ -87,7 +103,11 @@ def main(argv=None) -> None:
     pool = ModelPool({args.config[0]: args.ckpt} if args.ckpt else None)
     scheduler = ForecastScheduler(
         pool=pool, cache=ExecutableCache(args.persist_dir),
-        max_concurrency=args.max_concurrency, queue_size=args.queue_size)
+        max_concurrency=args.max_concurrency, queue_size=args.queue_size,
+        max_batch=args.max_batch, batch_window_ms=args.batch_window_ms,
+        engine_budget_bytes=(int(args.engine_budget_mb * 2**20)
+                             if args.engine_budget_mb is not None
+                             else None))
     for name in args.config:
         print(f"[service] preloading config {name!r} ...", flush=True)
         pool.get(name)
@@ -96,6 +116,14 @@ def main(argv=None) -> None:
         print(f"[service] warmed {spec.to_dict()}: "
               f"compile_s={out['compile_s']:.2f} "
               f"({[o['source'] for o in out['outcomes']]})", flush=True)
+        if args.max_batch > 1:
+            # also warm the full-batch coalesced program, so the first
+            # burst of same-shape traffic pays zero compile
+            outb = scheduler.warmup(spec, batch=args.max_batch)
+            print(f"[service] warmed batch={args.max_batch}: "
+                  f"compile_s={outb['compile_s']:.2f} "
+                  f"({[o['source'] for o in outb['outcomes']]})",
+                  flush=True)
 
     service = ForecastService(scheduler=scheduler)
     server = service.make_server(args.host, args.port)

@@ -8,7 +8,9 @@ Three pillars:
                    (config, chunk_len, scored, the full EngineConfig),
                    optionally persisted via ``jax.export``;
 * ``scheduler`` -- async request scheduler: FIFO queue, warm engines per
-                   shape key, bounded device concurrency, per-request
+                   shape key (LRU-evicted under a byte budget), bounded
+                   device concurrency, same-shape request coalescing
+                   onto one batched rollout, per-request
                    queue/compile/run timings;
 * ``transport`` / ``service`` / ``client``
                 -- chunk-streamed delivery: ``ForecastEngine.stream``

@@ -20,7 +20,11 @@ Keys follow the ISSUE/ROADMAP contract -- ``(config, members,
 lead_chunk, precision, perturb, scored)`` -- extended by the fields that
 also select a distinct executable: the concrete ``chunk_len`` (an uneven
 final chunk is its own program), ``spectra`` (changes the in-scan score
-set) and ``static_buffers`` (changes the calling convention).
+set), ``static_buffers`` (changes the calling convention) and ``batch``
+(``None`` for the serial per-request program; an integer B for the
+coalesced program that rolls B same-shape requests through one batched
+dispatch -- a different compiled module, so a different key, persisted
+like any other).
 """
 
 from __future__ import annotations
@@ -80,12 +84,15 @@ class ExecutableKey:
     chunk_len: int
     scored: bool
     engine: tuple
+    #: coalesced-request batch size; None selects the serial program
+    batch: int | None = None
 
     @classmethod
     def for_engine(cls, config: str, engine, scored: bool,
-                   chunk_len: int) -> "ExecutableKey":
+                   chunk_len: int, batch: int | None = None
+                   ) -> "ExecutableKey":
         return cls(config=config, chunk_len=chunk_len, scored=scored,
-                   engine=dataclasses.astuple(engine.cfg))
+                   engine=dataclasses.astuple(engine.cfg), batch=batch)
 
     def token(self) -> str:
         """Stable filename stem for on-disk persistence.
@@ -132,7 +139,8 @@ class ExecutableCache:
     def _installed(self, key: ExecutableKey, engine, params, buffers
                    ) -> bool:
         return engine.has_chunk_executable(key.scored, key.chunk_len,
-                                           params, buffers)
+                                           params, buffers,
+                                           batch=key.batch)
 
     def _from_disk(self, key: ExecutableKey, path: str, engine, params,
                    buffers) -> bool:
@@ -142,7 +150,7 @@ class ExecutableCache:
             with open(path, "rb") as f:
                 blob = f.read()
             engine.import_chunk(key.scored, key.chunk_len, blob,
-                                params, buffers)
+                                params, buffers, batch=key.batch)
             return True
         except Exception as e:  # noqa: BLE001 -- any load failure => recompile
             try:
@@ -188,16 +196,17 @@ class ExecutableCache:
                 # The imported program drops carry donation (documented
                 # on import_chunk) -- the explicit persistence trade.
                 blob = engine.export_chunk(key.scored, key.chunk_len,
-                                           params, buffers)
+                                           params, buffers,
+                                           batch=key.batch)
                 tmp = f"{path}.tmp.{os.getpid()}"
                 with open(tmp, "wb") as f:
                     f.write(blob)
                 os.replace(tmp, path)
                 engine.import_chunk(key.scored, key.chunk_len, blob,
-                                    params, buffers)
+                                    params, buffers, batch=key.batch)
             else:
                 engine.compile_chunk(key.scored, key.chunk_len, params,
-                                     buffers)
+                                     buffers, batch=key.batch)
             dt = time.perf_counter() - t0
             with self._lock:
                 self.misses += 1
@@ -206,15 +215,17 @@ class ExecutableCache:
             return {"hit": False, "source": "compiled", "compile_s": dt}
 
     def warm_engine(self, config: str, engine, scored: bool, steps: int,
-                    params, buffers) -> dict:
-        """Warm every chunk length a ``steps``-long rollout dispatches.
+                    params, buffers, batch: int | None = None) -> dict:
+        """Warm every chunk length a ``steps``-long rollout dispatches
+        (the coalesced ``batch``-request programs when ``batch`` is set).
 
         Returns the per-request summary the scheduler reports: total
         ``compile_s`` plus one outcome entry per distinct chunk length.
         """
         outcomes = []
         for k in engine.chunk_lengths(steps):
-            key = ExecutableKey.for_engine(config, engine, scored, k)
+            key = ExecutableKey.for_engine(config, engine, scored, k,
+                                           batch=batch)
             out = self.warm(key, engine, params, buffers)
             outcomes.append({"chunk_len": k, **out})
         return {

@@ -104,7 +104,8 @@ def _spec_from_args(args: argparse.Namespace) -> RequestSpec:
         ensemble_transform=args.ensemble_transform,
         spectra=args.calibration, scored=not args.unscored,
         sample=args.sample, seed=args.seed,
-        return_state=args.return_state)
+        return_state=args.return_state,
+        coalesce=not args.no_coalesce)
 
 
 def main(argv=None) -> None:
@@ -132,6 +133,9 @@ def main(argv=None) -> None:
     ap.add_argument("--seed", type=int, default=7)
     ap.add_argument("--return-state", action="store_true",
                     help="include the final ensemble state (base64 fp32)")
+    ap.add_argument("--no-coalesce", action="store_true",
+                    help="opt this request out of server-side batching "
+                         "with queued same-shape requests")
     ap.add_argument("--timing-out", default=None,
                     help="save the timing/chunk report to this JSON file")
     args = ap.parse_args(argv)
@@ -155,6 +159,7 @@ def main(argv=None) -> None:
                   f"queue={ev['queue_s']:.3f}s "
                   f"setup={ev.get('setup_s', 0.0):.3f}s "
                   f"compile={ev['compile_s']:.3f}s "
+                  f"batch={ev.get('batch_size', 1)} "
                   f"cache={[o['source'] for o in ev['cache']]}")
         elif kind == "chunk":
             entry = {"index": ev["index"], "lead_steps": ev["lead_steps"],
@@ -180,6 +185,7 @@ def main(argv=None) -> None:
     report["cache"] = done.get("cache", {})
     print(f"[client] done: run={report['timing'].get('run_s', 0):.3f}s "
           f"total={report['timing'].get('total_s', 0):.3f}s "
+          f"batch={report['timing'].get('batch_size', 1)} "
           f"cache_misses={report['cache'].get('misses')}")
     if args.timing_out:
         with open(args.timing_out, "w") as f:

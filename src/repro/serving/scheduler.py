@@ -9,24 +9,37 @@ service core:
 * device work is bounded by ``max_concurrency`` worker threads (JAX
   dispatch releases the GIL while the device runs, so a small pool
   overlaps host staging with device compute without oversubscribing);
+* **coalescing**: with ``max_batch`` > 1 a worker batches the picked
+  request with queued requests sharing its ``batch_key`` -- same
+  compiled program, rollout length and score set -- waiting up to
+  ``batch_window_ms`` for companions, and rolls all of them through
+  **one** batched chunk dispatch (``ForecastEngine.stream_batched``,
+  a vmap of the serial program: per-request results bit-identical to
+  serial, throughput paid once).  Each member keeps its own NDJSON
+  stream, demuxed from the shared rollout; a member cancelled
+  mid-batch is masked out of further events while the others finish;
 * engines are warm per **shape key** -- the spec fields that force a
-  different compiled program -- and shared across requests, so the
-  second request with a seen shape pays no tracing;
+  different compiled program -- shared across requests, and LRU-evicted
+  under ``engine_budget_bytes`` (``EnginePool``), so heavy multi-shape
+  traffic cannot grow device memory without bound;
 * executables are warmed through the ``ExecutableCache`` before the
   rollout starts, splitting every request's latency into the
   ``queue_s`` / ``compile_s`` / ``run_s`` it reports;
 * results leave as transport events chunk-by-chunk
-  (``ForecastStream``), so consumers see scores as each ``lead_chunk``
-  retires rather than at rollout end.
+  (``ForecastStream``); the retired chunk's device->host score fetch
+  runs on a dedicated thread, so the dispatch thread is already
+  enqueueing chunk k+1 while chunk k's scores download and encode.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 import queue
 import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 import jax
 import numpy as np
@@ -48,11 +61,11 @@ class QueueFull(RuntimeError):
 class KeyedBuilds:
     """Build-once-per-key registry with per-key build locks.
 
-    The one double-checked-locking implementation shared by the model
-    pool and the engine pool (the executable cache's ``warm`` keeps its
-    own variant -- its critical section has disk/compile branches, not a
-    single build): lookups touch only the global lock, and a cold build
-    for one key never blocks a hit -- or a build -- for another.
+    The double-checked-locking implementation shared with the model
+    pool (the executable cache's ``warm`` keeps its own variant -- its
+    critical section has disk/compile branches, not a single build):
+    lookups touch only the global lock, and a cold build for one key
+    never blocks a hit -- or a build -- for another.
     """
 
     def __init__(self):
@@ -78,6 +91,89 @@ class KeyedBuilds:
     def snapshot(self) -> dict:
         with self._lock:
             return dict(self._items)
+
+
+class EnginePool:
+    """Warm engines per shape key, LRU-evicted under a byte budget.
+
+    ``get_or_build`` keeps ``KeyedBuilds``' per-key build-lock semantics
+    (a cold engine build for one shape never blocks a warm hit for
+    another) and additionally touches the key for LRU ordering.
+    ``enforce_budget`` evicts least-recently-used engines until the
+    pool's ``ForecastEngine.estimated_bytes`` total fits
+    ``budget_bytes``; the most recently used engine always survives (a
+    budget smaller than one engine must still serve that engine).
+    Eviction only drops the pool's reference -- an in-flight rollout on
+    an evicted engine holds its own reference and finishes normally;
+    the next request for that key rebuilds and recompiles, reported as
+    an honest cache miss.
+    """
+
+    def __init__(self, budget_bytes: int | None = None):
+        self.budget_bytes = budget_bytes
+        self._lock = threading.Lock()
+        self._engines: collections.OrderedDict = collections.OrderedDict()
+        self._build_locks: dict = {}
+        self._evictions = 0
+
+    def get_or_build(self, key, build):
+        with self._lock:
+            eng = self._engines.get(key)
+            if eng is not None:
+                self._engines.move_to_end(key)
+                return eng
+            build_lock = self._build_locks.setdefault(key, threading.Lock())
+        with build_lock:
+            with self._lock:
+                eng = self._engines.get(key)
+                if eng is not None:
+                    self._engines.move_to_end(key)
+                    return eng
+            eng = build()
+            with self._lock:
+                self._engines[key] = eng
+                self._engines.move_to_end(key)
+            return eng
+
+    def enforce_budget(self) -> int:
+        """Evict LRU engines until the pool fits the budget.  Returns
+        how many were evicted by this call."""
+        if self.budget_bytes is None:
+            return 0
+        evicted = 0
+        with self._lock:
+            # size every engine once; evictions subtract instead of
+            # re-running the (memory-analysis-backed) estimate per turn
+            sizes = {key: eng.estimated_bytes()
+                     for key, eng in self._engines.items()}
+            total = sum(sizes.values())
+            while len(self._engines) > 1 and total > self.budget_bytes:
+                key = next(iter(self._engines))  # least recently used
+                total -= sizes[key]
+                del self._engines[key]
+                self._build_locks.pop(key, None)
+                self._evictions += 1
+                evicted += 1
+        return evicted
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return dict(self._engines)
+
+    def stats(self, engine_bytes: int | None = None) -> dict:
+        """Pool statistics; pass ``engine_bytes`` when the caller has
+        already sized the engines (the scheduler's stats() does, for its
+        per-engine rows) to avoid re-running the estimates."""
+        with self._lock:
+            if engine_bytes is None:
+                engine_bytes = sum(e.estimated_bytes()
+                                   for e in self._engines.values())
+            return {
+                "engines": len(self._engines),
+                "engine_bytes": engine_bytes,
+                "engine_budget_bytes": self.budget_bytes,
+                "evictions": self._evictions,
+            }
 
 
 @dataclasses.dataclass
@@ -136,8 +232,9 @@ class ForecastStream:
         self._q.put(ev)
 
     def cancel(self) -> None:
-        """Consumer went away: the worker stops at the next chunk
-        boundary instead of finishing the rollout."""
+        """Consumer went away: a solo rollout stops at the next chunk
+        boundary; a coalesced member is masked out of further chunk
+        events while its batch companions finish."""
         self._cancelled.set()
 
     @property
@@ -157,20 +254,31 @@ class ForecastStream:
 
 
 class ForecastScheduler:
-    """Bounded worker pool over a FIFO queue of ``RequestSpec``s."""
+    """Bounded worker pool over a FIFO queue of ``RequestSpec``s, with
+    same-shape request coalescing and engine-pool memory budgeting."""
 
     def __init__(self, pool: ModelPool | None = None,
                  cache: ExecutableCache | None = None,
-                 max_concurrency: int = 1, queue_size: int = 64):
+                 max_concurrency: int = 1, queue_size: int = 64,
+                 max_batch: int = 1, batch_window_ms: float = 0.0,
+                 engine_budget_bytes: int | None = None):
         self.pool = pool if pool is not None else ModelPool()
         self.cache = cache if cache is not None else ExecutableCache()
-        self._queue: queue.Queue = queue.Queue(maxsize=queue_size)
-        self._engines = KeyedBuilds()
+        self.max_batch = max(1, max_batch)
+        self.batch_window_ms = max(0.0, batch_window_ms)
+        self._queue_size = queue_size
+        # pending requests + close sentinels (None), FIFO; guarded by
+        # _cond's lock so coalescing workers can scoop matching streams
+        # out of the middle (queue.Queue cannot express that)
+        self._pending: collections.deque = collections.deque()
+        self._cond = threading.Condition()
+        self._engines = EnginePool(engine_budget_bytes)
         self._lock = threading.Lock()
         self._ids = itertools.count()
         self._closed = False
         self._served = 0
         self._failed = 0
+        self._batch_sizes: collections.Counter = collections.Counter()
         self._workers = [
             threading.Thread(target=self._worker, daemon=True,
                              name=f"forecast-worker-{i}")
@@ -186,26 +294,32 @@ class ForecastScheduler:
         # closed-check and enqueue are one atomic step against close():
         # a stream enqueued behind the shutdown sentinels would never be
         # popped and its consumer would block forever.
-        with self._lock:
+        with self._cond:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
-            try:
-                self._queue.put_nowait(stream)
-            except queue.Full:
+            if sum(1 for s in self._pending
+                   if s is not None) >= self._queue_size:
                 raise QueueFull(
-                    f"request queue full ({self._queue.maxsize} pending)")
+                    f"request queue full ({self._queue_size} pending)")
+            self._pending.append(stream)
+            self._cond.notify_all()
         return stream
 
-    def warmup(self, spec: RequestSpec) -> dict:
+    def warmup(self, spec: RequestSpec, batch: int | None = None) -> dict:
         """Build the engine and compile its executables without running a
-        rollout (the service CLI's --warm)."""
+        rollout (the service CLI's --warm); ``batch`` additionally warms
+        the coalesced B-request programs."""
         spec.validate()
         engine, bundle = self._get_engine(spec)
-        return self.cache.warm_engine(spec.config, engine, spec.scored,
-                                      spec.lead_steps, bundle.params,
-                                      bundle.buffers)
+        out = self.cache.warm_engine(spec.config, engine, spec.scored,
+                                     spec.lead_steps, bundle.params,
+                                     bundle.buffers, batch=batch)
+        self._engines.enforce_budget()
+        return out
 
     def stats(self) -> dict:
+        snap = self._engines.snapshot()
+        sizes = {key: eng.estimated_bytes() for key, eng in snap.items()}
         engines = [{"config": key[0],
                     "members": key[1].members,
                     "lead_chunk": key[1].lead_chunk,
@@ -214,24 +328,36 @@ class ForecastScheduler:
                     "kernels": (key[1].kernels.effective()
                                 if key[1].kernels is not None
                                 else "inherit"),
+                    "estimated_bytes": sizes[key],
                     "dispatch": eng.dispatch_stats()}
-                   for key, eng in self._engines.snapshot().items()]
+                   for key, eng in snap.items()]
         with self._lock:
             served, failed = self._served, self._failed
-        return {"queued": self._queue.qsize(), "served": served,
+            batches = {str(k): v
+                       for k, v in sorted(self._batch_sizes.items())}
+        with self._cond:
+            queued = sum(1 for s in self._pending if s is not None)
+        return {"queued": queued, "served": served,
                 "failed": failed, "workers": len(self._workers),
-                "engines": engines, "cache": self.cache.stats()}
+                "max_batch": self.max_batch,
+                "batch_window_ms": self.batch_window_ms,
+                "batches": batches,
+                "engines": engines,
+                "pool": self._engines.stats(
+                    engine_bytes=sum(sizes.values())),
+                "cache": self.cache.stats()}
 
     def close(self, timeout: float = 30.0) -> None:
         """Stop accepting requests, drain pending ones, join workers."""
-        with self._lock:
+        with self._cond:
             if self._closed:
                 return
             self._closed = True
-        # sentinels go behind any already-queued streams, so pending
-        # requests are served before the workers exit
-        for _ in self._workers:
-            self._queue.put(None)
+            # sentinels go behind any already-queued streams, so pending
+            # requests are served before the workers exit
+            for _ in self._workers:
+                self._pending.append(None)
+            self._cond.notify_all()
         for w in self._workers:
             w.join(timeout=timeout)
         stuck = [w.name for w in self._workers if w.is_alive()]
@@ -245,9 +371,10 @@ class ForecastScheduler:
     # ------------------------------------------------------------------
     def _get_engine(self, spec: RequestSpec
                     ) -> tuple[ForecastEngine, ModelBundle]:
-        """Warm engine for the spec's shape key, built on first use
-        (per-key build locks via KeyedBuilds: a cold engine build for
-        one shape never blocks warm requests or the stats endpoint)."""
+        """Warm engine for the spec's shape key, built on first use and
+        LRU-touched on every hit (per-key build locks via EnginePool: a
+        cold engine build for one shape never blocks warm requests or
+        the stats endpoint)."""
         bundle = self.pool.get(spec.config)
 
         def build() -> ForecastEngine:
@@ -260,26 +387,63 @@ class ForecastScheduler:
 
         return self._engines.get_or_build(spec.engine_key(), build), bundle
 
+    def _take_matching(self, batch: list[ForecastStream], key) -> None:
+        """Move queued streams sharing ``key`` into ``batch`` (caller
+        holds ``_cond``; close sentinels and non-matching streams keep
+        their queue positions)."""
+        matching = [s for s in self._pending
+                    if s is not None and s.spec.coalesce
+                    and s.spec.batch_key() == key]
+        for s in matching[:self.max_batch - len(batch)]:
+            self._pending.remove(s)
+            batch.append(s)
+
+    def _next_batch(self) -> list[ForecastStream] | None:
+        """Block for the next request; coalesce queued same-shape
+        requests behind it (waiting up to ``batch_window_ms`` for the
+        batch to fill).  None means shutdown."""
+        with self._cond:
+            while not self._pending:
+                self._cond.wait()
+            head = self._pending.popleft()
+            if head is None:
+                return None
+            batch = [head]
+            if self.max_batch > 1 and head.spec.coalesce:
+                key = head.spec.batch_key()
+                self._take_matching(batch, key)
+                deadline = time.monotonic() + self.batch_window_ms / 1e3
+                while len(batch) < self.max_batch:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        break
+                    self._cond.wait(timeout=remaining)
+                    self._take_matching(batch, key)
+            return batch
+
     def _worker(self) -> None:
         while True:
-            stream = self._queue.get()
-            if stream is None:
+            batch = self._next_batch()
+            if batch is None:
                 return
             try:
-                self._serve(stream)
+                self._serve_batch(batch)
                 with self._lock:
-                    self._served += 1
+                    self._served += len(batch)
             except Exception as e:  # noqa: BLE001 -- report, keep serving
                 with self._lock:
-                    self._failed += 1
-                stream.put({"event": "error",
-                            "request_id": stream.request_id,
-                            "message": f"{type(e).__name__}: {e}"})
+                    self._failed += len(batch)
+                for stream in batch:
+                    stream.put({"event": "error",
+                                "request_id": stream.request_id,
+                                "message": f"{type(e).__name__}: {e}"})
 
-    def _serve(self, stream: ForecastStream) -> None:
-        spec = stream.spec
+    def _serve_batch(self, streams: list[ForecastStream]) -> None:
+        """Serve one coalesced batch (possibly of size 1) through a
+        single rollout, demuxing per-request events onto each stream."""
+        spec = streams[0].spec
+        b = len(streams)
         t_start = time.perf_counter()
-        queue_s = t_start - stream.submitted_at
         # setup_s is everything between worker pickup and rollout start
         # that is NOT compilation proper: model-bundle / engine builds on
         # a cold config and time spent waiting on another request's
@@ -289,48 +453,98 @@ class ForecastScheduler:
         engine, bundle = self._get_engine(spec)
         warm = self.cache.warm_engine(spec.config, engine, spec.scored,
                                       spec.lead_steps, bundle.params,
-                                      bundle.buffers)
+                                      bundle.buffers,
+                                      batch=b if b > 1 else None)
+        # warming may have installed new executables: re-check the pool
+        # budget now, so cold shapes evict cold engines, not the tests
+        self._engines.enforce_budget()
+        with self._lock:
+            self._batch_sizes[b] += 1
         setup_s = (time.perf_counter() - t_start) - warm["compile_s"]
-        stream.put({"event": "start", "request_id": stream.request_id,
-                    "spec": spec.to_dict(), "queue_s": queue_s,
-                    "setup_s": setup_s,
-                    "compile_s": warm["compile_s"],
-                    "cache": warm["outcomes"]})
+        for i, stream in enumerate(streams):
+            stream.put({"event": "start", "request_id": stream.request_id,
+                        "spec": stream.spec.to_dict(),
+                        "queue_s": t_start - stream.submitted_at,
+                        "setup_s": setup_s,
+                        "compile_s": warm["compile_s"],
+                        "batch_size": b, "batch_index": i,
+                        "cache": warm["outcomes"]})
         ds = bundle.ds
-        truth = ((lambda n: ds.state(spec.sample, n + 1))
-                 if spec.scored else None)
-        state0 = ds.state(spec.sample, 0)
-        key = jax.random.PRNGKey(spec.seed)
+        state0s = [ds.state(s.spec.sample, 0) for s in streams]
+        keys = [jax.random.PRNGKey(s.spec.seed) for s in streams]
+        # one shared aux source (and one truth source per distinct
+        # sample): the batched stager stages each distinct source once
+        # and broadcasts device-side, so B coalesced members cost one
+        # aux staging, not B identical ones
+        aux = (lambda n: ds.aux_fields(6.0 * (n + 1)))
+        auxs = [aux] * b
+        truths = None
+        if spec.scored:
+            by_sample = {s.spec.sample: (lambda sm: (
+                lambda n: ds.state(sm, n + 1)))(s.spec.sample)
+                for s in streams}
+            truths = [by_sample[s.spec.sample] for s in streams]
         run_t0 = time.perf_counter()
-        chunk_s: list[float] = []
-        final_state = None
-        last = run_t0
-        for i, block in enumerate(engine.stream(
-                bundle.params, bundle.buffers, state0,
-                lambda n: ds.aux_fields(6.0 * (n + 1)), key,
-                steps=spec.lead_steps, truth=truth)):
+        if b == 1:
+            blocks = ([blk] for blk in engine.stream(
+                bundle.params, bundle.buffers, state0s[0], auxs[0],
+                keys[0], steps=spec.lead_steps,
+                truth=truths[0] if truths is not None else None))
+        else:
+            blocks = engine.stream_batched(
+                bundle.params, bundle.buffers, state0s, auxs, keys,
+                steps=spec.lead_steps, truths=truths)
+
+        chunk_s: list[list[float]] = [[] for _ in streams]
+        finals: list = [None] * b
+        last_ready = [run_t0]
+
+        def fetch_and_emit(index: int, block_list) -> None:
+            # Runs on the dedicated fetch thread, in chunk order: the
+            # device->host score download (np.asarray inside
+            # chunk_event) happens here, so the dispatch thread is
+            # already staging and enqueueing chunk k+1 while chunk k's
+            # scores stream out.
+            evs = []
+            for j, (stream, blk) in enumerate(zip(streams, block_list)):
+                if stream.cancelled:
+                    continue
+                ev = transport.chunk_event(stream.request_id, index, blk)
+                if blk.final_state is not None and stream.spec.return_state:
+                    finals[j] = np.asarray(jax.device_get(blk.final_state))
+                evs.append((j, stream, ev))
             now = time.perf_counter()
-            ev = transport.chunk_event(stream.request_id, i, block)
-            ev["chunk_s"] = now - last
-            chunk_s.append(now - last)
-            last = now
-            if block.final_state is not None and spec.return_state:
-                final_state = np.asarray(
-                    jax.device_get(block.final_state))
-            stream.put(ev)
-            if stream.cancelled:
-                break
-        done = {
-            "event": "done", "request_id": stream.request_id,
-            "cancelled": stream.cancelled,
-            "timing": {"queue_s": queue_s,
-                       "setup_s": setup_s,
-                       "compile_s": warm["compile_s"],
-                       "run_s": time.perf_counter() - run_t0,
-                       "total_s": time.perf_counter() - stream.submitted_at,
-                       "chunk_s": chunk_s},
-            "cache": {"hits": warm["hits"], "misses": warm["misses"]},
-        }
-        if final_state is not None:
-            done["final_state"] = transport.encode_array(final_state)
-        stream.put(done)
+            dt = now - last_ready[0]
+            last_ready[0] = now
+            for j, stream, ev in evs:
+                ev["chunk_s"] = dt
+                chunk_s[j].append(dt)
+                stream.put(ev)
+
+        futures = []
+        with ThreadPoolExecutor(max_workers=1,
+                                thread_name_prefix="d2h-fetch") as ex:
+            for index, block_list in enumerate(blocks):
+                futures.append(ex.submit(fetch_and_emit, index, block_list))
+                if all(s.cancelled for s in streams):
+                    break
+            for f in futures:
+                f.result()  # propagate fetch/encode failures
+        run_s = time.perf_counter() - run_t0
+        for j, stream in enumerate(streams):
+            done = {
+                "event": "done", "request_id": stream.request_id,
+                "cancelled": stream.cancelled,
+                "timing": {"queue_s": t_start - stream.submitted_at,
+                           "setup_s": setup_s,
+                           "compile_s": warm["compile_s"],
+                           "run_s": run_s,
+                           "total_s": (time.perf_counter()
+                                       - stream.submitted_at),
+                           "batch_size": b,
+                           "chunk_s": chunk_s[j]},
+                "cache": {"hits": warm["hits"], "misses": warm["misses"]},
+            }
+            if finals[j] is not None:
+                done["final_state"] = transport.encode_array(finals[j])
+            stream.put(done)

@@ -14,7 +14,11 @@ them, the handler stays small, and chunk latency is dominated by device
 work, not transfer encoding.  ``ThreadingHTTPServer`` gives each
 connection its own thread; actual device work stays bounded by the
 scheduler's worker pool, so N slow clients cannot oversubscribe the
-accelerator.
+accelerator.  N concurrent *same-shape* requests additionally coalesce
+into one batched rollout inside the scheduler (when it runs with
+``max_batch`` > 1) -- each connection still streams its own demuxed
+NDJSON events, and a client that disconnects mid-batch is masked out of
+further chunks while its companions finish.
 """
 
 from __future__ import annotations

@@ -31,6 +31,14 @@ class RequestSpec:
     "reference" or "pallas".  It flows through ``EngineConfig.kernels``
     into the AOT executable-cache key, so warm requests dispatch the
     executables compiled for their substrate.
+
+    ``coalesce`` (default True) lets the scheduler batch this request
+    with queued same-shape requests into one shared rollout dispatch
+    (``batch_key``: the compiled program plus rollout length and score
+    set).  Coalescing never changes results -- the batched program is a
+    vmap of the serial one, bit-identical per request -- but a member
+    does wait up to the server's ``batch_window_ms`` for companions;
+    ``coalesce: false`` opts a latency-critical request out.
     """
 
     config: str = "smoke"
@@ -48,6 +56,7 @@ class RequestSpec:
     sample: int = 0
     seed: int = 7
     return_state: bool = False
+    coalesce: bool = True
 
     @classmethod
     def from_dict(cls, d: dict) -> "RequestSpec":
@@ -89,10 +98,17 @@ class RequestSpec:
     def engine_key(self) -> tuple:
         return (self.config, self.engine_config())
 
+    def batch_key(self) -> tuple:
+        """Requests that may share one coalesced rollout dispatch: same
+        warm engine (compiled program), same rollout length, same score
+        set.  ``sample``/``seed``/``return_state`` stay free -- they are
+        per-member inputs of the shared batched program."""
+        return (self.engine_key(), self.lead_steps, self.scored)
+
     _INT_FIELDS = ("members", "lead_steps", "lead_chunk", "bred_cycles",
                    "sample", "seed")
     _BOOL_FIELDS = ("ensemble_transform", "spectra", "scored",
-                    "return_state")
+                    "return_state", "coalesce")
     _STR_FIELDS = ("config", "precision", "perturb", "kernels")
 
     def _type_problems(self) -> list[str]:

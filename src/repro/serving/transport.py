@@ -6,7 +6,9 @@ line, emitted in order:
 * ``start`` -- request accepted and executables warm: echoed ``spec``,
   ``queue_s`` (time spent waiting for a worker), ``compile_s`` (time
   spent lowering/compiling executables for this request; 0.0 on a warm
-  cache hit) and the per-chunk-length ``cache`` outcomes.
+  cache hit), ``batch_size``/``batch_index`` (how many coalesced
+  requests share this rollout and this request's slot in it) and the
+  per-chunk-length ``cache`` outcomes.
 * ``chunk`` -- one retired ``lead_chunk``: global ``lead_steps``, the
   in-scan ``scores`` for those leads and ``chunk_s`` wall time.  Chunks
   arrive as the scan retires them, not at rollout end.
@@ -126,6 +128,10 @@ class ServedForecast:
     #: True when the rollout was cancelled mid-stream -- the scores then
     #: cover fewer leads than requested (not a completed forecast)
     cancelled: bool = False
+    #: how many coalesced requests shared this forecast's rollout (1 =
+    #: served solo) and this request's slot in that batch
+    batch_size: int = 1
+    batch_index: int = 0
 
 
 def collect(events: Iterable[dict]) -> ServedForecast:
@@ -146,11 +152,14 @@ def collect(events: Iterable[dict]) -> ServedForecast:
     final_state = None
     done = False
     cancelled = False
+    batch_size, batch_index = 1, 0
     for ev in events:
         kind = ev.get("event")
         if kind == "start":
             request_id = ev.get("request_id", "")
             spec = ev.get("spec", {})
+            batch_size = int(ev.get("batch_size", 1))
+            batch_index = int(ev.get("batch_index", 0))
         elif kind == "chunk":
             leads.extend(ev["lead_steps"])
             for name, rows in ev["scores"].items():
@@ -175,4 +184,5 @@ def collect(events: Iterable[dict]) -> ServedForecast:
     return ServedForecast(request_id=request_id, spec=spec,
                           lead_steps=np.asarray(leads), scores=scores,
                           timing=timing, cache=cache, chunks=chunks,
-                          final_state=final_state, cancelled=cancelled)
+                          final_state=final_state, cancelled=cancelled,
+                          batch_size=batch_size, batch_index=batch_index)

@@ -237,7 +237,8 @@ class TestAOTHooks:
         res = eng.forecast(params, buffers, state0, _aux_fn(ds), KEY,
                            steps=STEPS,
                            truth=lambda n: ds.state(SAMPLE, n + 1))
-        assert eng.dispatch_counts == {"aot": 2, "jit": 0}
+        assert eng.dispatch_counts["aot"] == 2
+        assert eng.dispatch_counts["jit"] == 0
         np.testing.assert_array_equal(np.asarray(res.final_state),
                                       np.asarray(ref.final_state))
         for name in ref.scores:
@@ -267,6 +268,166 @@ class TestAOTHooks:
         lowered = eng.lower_chunk(True, 2, params, buffers)
         assert isinstance(lowered, jax.stages.Lowered)
         assert hasattr(lowered.compile(), "__call__")
+
+
+class TestBatchedRollout:
+    """Coalesced-request batching: B same-shape requests through one
+    vmapped chunk program must be bit-identical, per request, to B
+    serial rollouts (the serving scheduler's coalescing relies on
+    this being a pure throughput move)."""
+
+    SAMPLES = (11, 3, 5, 2)
+    SEEDS = (7, 9, 1, 4)
+
+    def _serial(self, setup, eng, sm, sd, scored=True):
+        cfg, model, ds, buffers, params, state0 = setup
+        return eng.forecast(params, buffers, ds.state(sm, 0), _aux_fn(ds),
+                            jax.random.PRNGKey(sd), steps=STEPS,
+                            truth=(lambda n: ds.state(sm, n + 1))
+                            if scored else None)
+
+    def _batched(self, setup, eng, scored=True):
+        cfg, model, ds, buffers, params, state0 = setup
+        return eng.forecast_batched(
+            params, buffers, [ds.state(sm, 0) for sm in self.SAMPLES],
+            [_aux_fn(ds) for _ in self.SAMPLES],
+            [jax.random.PRNGKey(sd) for sd in self.SEEDS], steps=STEPS,
+            truths=[(lambda sm=sm: lambda n: ds.state(sm, n + 1))()
+                    for sm in self.SAMPLES] if scored else None)
+
+    def test_batched_bit_identical_to_serial(self, setup):
+        cfg, model, ds, buffers, params, state0 = setup
+        eng = ForecastEngine(model, EngineConfig(members=MEMBERS,
+                                                 lead_chunk=2))
+        refs = [self._serial(setup, eng, sm, sd)
+                for sm, sd in zip(self.SAMPLES, self.SEEDS)]
+        results = self._batched(setup, eng)
+        assert len(results) == len(self.SAMPLES)
+        for res, ref in zip(results, refs):
+            np.testing.assert_array_equal(np.asarray(res.final_state),
+                                          np.asarray(ref.final_state))
+            np.testing.assert_array_equal(res.lead_steps, ref.lead_steps)
+            assert set(res.scores) == set(ref.scores)
+            for name in ref.scores:
+                np.testing.assert_array_equal(
+                    np.asarray(res.scores[name]),
+                    np.asarray(ref.scores[name]), err_msg=name)
+
+    def test_batched_perturbed_members_match_serial(self, setup):
+        # perturbed member init runs per request inside the batched
+        # path, so obs-error members stay bitwise equal to serial too
+        from repro.inference import PerturbationConfig
+        cfg, model, ds, buffers, params, state0 = setup
+        eng = ForecastEngine(model, EngineConfig(
+            members=MEMBERS, lead_chunk=2,
+            perturb=PerturbationConfig(kind="obs", amplitude=0.05)))
+        refs = [self._serial(setup, eng, sm, sd)
+                for sm, sd in zip(self.SAMPLES[:2], self.SEEDS[:2])]
+        results = eng.forecast_batched(
+            params, buffers, [ds.state(sm, 0) for sm in self.SAMPLES[:2]],
+            [_aux_fn(ds) for _ in range(2)],
+            [jax.random.PRNGKey(sd) for sd in self.SEEDS[:2]], steps=STEPS,
+            truths=[(lambda sm=sm: lambda n: ds.state(sm, n + 1))()
+                    for sm in self.SAMPLES[:2]])
+        for res, ref in zip(results, refs):
+            np.testing.assert_array_equal(np.asarray(res.final_state),
+                                          np.asarray(ref.final_state))
+            np.testing.assert_array_equal(np.asarray(res.scores["crps"]),
+                                          np.asarray(ref.scores["crps"]))
+
+    def test_batched_aot_executables_dispatch(self, setup):
+        cfg, model, ds, buffers, params, state0 = setup
+        b = len(self.SAMPLES)
+        eng = ForecastEngine(model, EngineConfig(members=MEMBERS,
+                                                 lead_chunk=2))
+        for k in eng.chunk_lengths(STEPS):
+            eng.compile_chunk(True, k, params, buffers, batch=b)
+            assert eng.has_chunk_executable(True, k, params, buffers,
+                                            batch=b)
+        # the serial programs are NOT installed: batch is its own key
+        assert not eng.has_chunk_executable(True, 2, params, buffers)
+        self._batched(setup, eng)
+        assert eng.dispatch_counts["aot"] == 2
+        assert eng.dispatch_counts["jit"] == 0
+
+    def test_batched_input_length_mismatch_rejected(self, setup):
+        cfg, model, ds, buffers, params, state0 = setup
+        eng = ForecastEngine(model, EngineConfig(members=MEMBERS,
+                                                 lead_chunk=2))
+        with pytest.raises(ValueError, match="one entry per request"):
+            list(eng.stream_batched(params, buffers,
+                                    [state0, state0], [_aux_fn(ds)],
+                                    [KEY, KEY], steps=STEPS))
+
+
+class TestHostStaging:
+    """The chunk stager must stage every (request, step) exactly once
+    per rollout (no re-materialized jnp.asarray chunks) while
+    prefetching chunk k+1 during chunk k."""
+
+    def test_each_step_staged_exactly_once(self, setup):
+        cfg, model, ds, buffers, params, state0 = setup
+        eng = ForecastEngine(model, EngineConfig(members=MEMBERS,
+                                                 lead_chunk=2))
+        calls: list[int] = []
+
+        def aux(n):
+            calls.append(n)
+            return ds.aux_fields(6.0 * (n + 1))
+
+        eng.forecast(params, buffers, state0, aux, KEY, steps=STEPS)
+        assert sorted(calls) == list(range(STEPS))  # once per step
+        d = eng.dispatch_stats()
+        assert d["h2d_chunks"] == 2  # chunks [0,1] and [2]
+        assert d["h2d_steps"] == STEPS
+
+    def test_bred_init_reuses_first_chunk(self, setup):
+        # bred-vector init needs step 0's aux before the rollout; it
+        # must come from the already-staged first chunk, not a second
+        # H2D copy of step 0
+        from repro.inference import PerturbationConfig
+        cfg, model, ds, buffers, params, state0 = setup
+        eng = ForecastEngine(model, EngineConfig(
+            members=2, lead_chunk=2,
+            perturb=PerturbationConfig(kind="bred", bred_cycles=1)))
+        calls: list[int] = []
+
+        def aux(n):
+            calls.append(n)
+            return ds.aux_fields(6.0 * (n + 1))
+
+        eng.forecast(params, buffers, state0, aux, KEY, steps=STEPS)
+        assert sorted(calls) == list(range(STEPS))
+        assert eng.dispatch_stats()["h2d_steps"] == STEPS
+
+    def test_batched_staging_counts_distinct_sources(self, setup):
+        cfg, model, ds, buffers, params, state0 = setup
+        eng = ForecastEngine(model, EngineConfig(members=MEMBERS,
+                                                 lead_chunk=2))
+        eng.forecast_batched(params, buffers, [state0, state0],
+                             [_aux_fn(ds), _aux_fn(ds)],
+                             [KEY, jax.random.PRNGKey(3)], steps=STEPS)
+        d = eng.dispatch_stats()
+        assert d["h2d_chunks"] == 2
+        assert d["h2d_steps"] == 2 * STEPS  # 2 distinct sources x 3 steps
+
+    def test_batched_staging_dedupes_shared_sources(self, setup):
+        # the scheduler hands every coalesced member the same aux
+        # callable: one staging for the whole batch, not B identical
+        cfg, model, ds, buffers, params, state0 = setup
+        eng = ForecastEngine(model, EngineConfig(members=MEMBERS,
+                                                 lead_chunk=2))
+        calls: list[int] = []
+
+        def aux(n):
+            calls.append(n)
+            return ds.aux_fields(6.0 * (n + 1))
+
+        eng.forecast_batched(params, buffers, [state0, state0],
+                             [aux, aux], [KEY, jax.random.PRNGKey(3)],
+                             steps=STEPS)
+        assert sorted(calls) == list(range(STEPS))  # staged once, shared
+        assert eng.dispatch_stats()["h2d_steps"] == STEPS
 
 
 class TestStreaming:

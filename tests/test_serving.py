@@ -211,9 +211,10 @@ class TestScheduler:
         res = sched.submit(SPEC).result()
         t = res.timing
         assert set(t) == {"queue_s", "setup_s", "compile_s", "run_s",
-                          "total_s", "chunk_s"}
+                          "total_s", "chunk_s", "batch_size"}
         assert len(t["chunk_s"]) == 2
         assert t["total_s"] >= t["run_s"] > 0
+        assert t["batch_size"] == 1 and res.batch_size == 1
 
     def test_runtime_error_reaches_stream_as_error_event(self, sched,
                                                          monkeypatch):
@@ -223,6 +224,202 @@ class TestScheduler:
             lambda *a, **k: (_ for _ in ()).throw(RuntimeError("boom")))
         with pytest.raises(transport.ServingError, match="boom"):
             sched.submit(spec).result()
+
+
+class TestCoalescing:
+    """Same-shape requests batch into one rollout: bit-identical
+    per-request streams, one batched compile, shape-key boundaries and
+    mid-batch cancellation."""
+
+    SAMPLES = (0, 3, 5, 2)
+    SEEDS = (7, 9, 1, 4)
+
+    def _specs(self, **overrides):
+        return [RequestSpec(**{**SPEC.to_dict(), "sample": sm, "seed": sd,
+                               **overrides})
+                for sm, sd in zip(self.SAMPLES, self.SEEDS)]
+
+    @pytest.fixture(scope="class")
+    def coal(self, pool):
+        s = ForecastScheduler(pool=pool, cache=ExecutableCache(),
+                              max_concurrency=1, max_batch=4,
+                              batch_window_ms=2000.0)
+        yield s
+        s.close()
+
+    def test_four_coalesced_bit_identical_to_four_serial(self, pool, coal):
+        # THE acceptance criterion: 4 coalesced same-shape requests,
+        # NDJSON round-tripped, vs 4 serial ForecastEngine.forecast
+        # runs -- bitwise equal, served by exactly one batched compile.
+        misses_before = coal.cache.stats()["misses"]
+        streams = [coal.submit(s) for s in self._specs()]
+        results = []
+        for st in streams:
+            events = [json.loads(transport.dump_event(ev))
+                      for ev in st.events()]
+            results.append(transport.collect(iter(events)))
+        stats = coal.stats()
+        assert stats["batches"].get("4") == 1
+        # one batched compile per distinct chunk length (2 and 1) --
+        # NOT one per request
+        assert coal.cache.stats()["misses"] - misses_before == 2
+        eng = coal._engines.snapshot()[SPEC.engine_key()]
+        assert eng.dispatch_counts["jit"] == 0
+        assert eng.dispatch_counts["aot"] == 2
+
+        b = pool.get("smoke")
+        direct_eng = ForecastEngine(b.model, SPEC.engine_config())
+        for spec, res in zip(self._specs(), results):
+            ref = direct_eng.forecast(
+                b.params, b.buffers, b.ds.state(spec.sample, 0),
+                lambda n: b.ds.aux_fields(6.0 * (n + 1)),
+                jax.random.PRNGKey(spec.seed), steps=spec.lead_steps,
+                truth=lambda n: b.ds.state(spec.sample, n + 1))
+            assert res.batch_size == 4
+            assert res.timing["batch_size"] == 4
+            for name, arr in ref.scores.items():
+                np.testing.assert_array_equal(
+                    res.scores[name], np.asarray(arr),
+                    err_msg=f"sample={spec.sample} {name}")
+            np.testing.assert_array_equal(res.final_state,
+                                          np.asarray(ref.final_state))
+
+    def test_warm_batch_zero_compile(self, coal):
+        streams = [coal.submit(s) for s in self._specs()]
+        results = [st.result() for st in streams]
+        assert all(r.timing["compile_s"] == 0.0 for r in results)
+        assert all(r.cache["misses"] == 0 for r in results)
+        eng = coal._engines.snapshot()[SPEC.engine_key()]
+        assert eng.dispatch_counts["jit"] == 0
+
+    def test_max_batch_splits_overflow(self, pool):
+        sched = ForecastScheduler(pool=pool, cache=ExecutableCache(),
+                                  max_concurrency=1, max_batch=2,
+                                  batch_window_ms=2000.0)
+        try:
+            streams = [sched.submit(s) for s in self._specs()]
+            for st in streams:
+                st.result()
+            assert sched.stats()["batches"] == {"2": 2}
+        finally:
+            sched.close()
+
+    def test_shape_key_boundary_not_coalesced(self, pool):
+        sched = ForecastScheduler(pool=pool, cache=ExecutableCache(),
+                                  max_concurrency=1, max_batch=4,
+                                  batch_window_ms=500.0)
+        try:
+            a = RequestSpec(**{**SPEC.to_dict(), "seed": 1})
+            b = RequestSpec(**{**SPEC.to_dict(), "lead_steps": 2,
+                               "seed": 2})  # different rollout length
+            streams = [sched.submit(a), sched.submit(b)]
+            for st in streams:
+                st.result()
+            assert sched.stats()["batches"] == {"1": 2}
+        finally:
+            sched.close()
+
+    def test_coalesce_opt_out(self, pool):
+        sched = ForecastScheduler(pool=pool, cache=ExecutableCache(),
+                                  max_concurrency=1, max_batch=4,
+                                  batch_window_ms=500.0)
+        try:
+            specs = self._specs()[:2]
+            solo = RequestSpec(**{**specs[0].to_dict(), "coalesce": False})
+            streams = [sched.submit(solo), sched.submit(specs[1])]
+            for st in streams:
+                st.result()
+            assert sched.stats()["batches"] == {"1": 2}
+        finally:
+            sched.close()
+
+    def test_mid_batch_cancellation_masks_member(self, pool):
+        sched = ForecastScheduler(pool=pool, cache=ExecutableCache(),
+                                  max_concurrency=1, max_batch=2,
+                                  batch_window_ms=2000.0)
+        try:
+            specs = self._specs()[:2]
+            streams = [sched.submit(s) for s in specs]
+            # cancel member 0 while the batch is still forming/serving:
+            # it is masked out of chunk events; member 1 finishes whole
+            streams[0].cancel()
+            cancelled = streams[0].result()
+            survivor = streams[1].result()
+            assert cancelled.cancelled
+            assert not survivor.cancelled
+            assert survivor.lead_steps.tolist() == [0, 1, 2]
+            assert len(cancelled.chunks) < len(survivor.chunks) or \
+                cancelled.chunks == []
+            b = pool.get("smoke")
+            ref = ForecastEngine(b.model, specs[1].engine_config()).forecast(
+                b.params, b.buffers, b.ds.state(specs[1].sample, 0),
+                lambda n: b.ds.aux_fields(6.0 * (n + 1)),
+                jax.random.PRNGKey(specs[1].seed),
+                steps=specs[1].lead_steps,
+                truth=lambda n: b.ds.state(specs[1].sample, n + 1))
+            np.testing.assert_array_equal(survivor.scores["crps"],
+                                          np.asarray(ref.scores["crps"]))
+        finally:
+            sched.close()
+
+
+class TestEnginePoolBudget:
+    """LRU eviction keeps the engine pool under its byte budget while
+    warm keys survive."""
+
+    def _spec(self, **overrides):
+        return RequestSpec(**{**SPEC.to_dict(), **overrides})
+
+    def test_lru_eviction_under_budget(self, pool):
+        spec_a = self._spec()
+        spec_b = self._spec(lead_chunk=3)
+        spec_c = self._spec(members=4)
+        # measure each warm engine's footprint on an unbudgeted pool,
+        # then budget for exactly {A, C}: warming C must evict only the
+        # LRU engine (B), never the warm one (A)
+        probe = ForecastScheduler(pool=pool, cache=ExecutableCache(),
+                                  max_concurrency=1)
+        try:
+            sizes = {}
+            for name, spec in (("a", spec_a), ("b", spec_b),
+                               ("c", spec_c)):
+                probe.warmup(spec)
+                snap = probe._engines.snapshot()
+                sizes[name] = snap[spec.engine_key()].estimated_bytes()
+        finally:
+            probe.close()
+        assert all(v > 0 for v in sizes.values())
+        budget = sizes["a"] + sizes["c"] + (1 << 20)
+        assert budget < sizes["a"] + sizes["b"] + sizes["c"]
+        sched = ForecastScheduler(pool=pool, cache=ExecutableCache(),
+                                  max_concurrency=1,
+                                  engine_budget_bytes=budget)
+        try:
+            sched.warmup(spec_a)
+            sched.warmup(spec_b)
+            assert sched.stats()["pool"]["evictions"] == 0
+            # touch A so B is the LRU victim when C overflows the pool
+            sched.submit(spec_a).result()
+            sched.warmup(spec_c)
+            stats = sched.stats()["pool"]
+            assert stats["engine_bytes"] <= budget
+            assert stats["evictions"] == 1
+            keys = set(sched._engines.snapshot())
+            assert spec_a.engine_key() in keys  # warm key survived
+            assert spec_c.engine_key() in keys
+            assert spec_b.engine_key() not in keys  # LRU victim
+        finally:
+            sched.close()
+
+    def test_stats_report_bytes_and_evictions(self, sched):
+        stats = sched.stats()
+        assert stats["pool"]["engine_budget_bytes"] is None
+        assert stats["pool"]["evictions"] == 0
+        assert stats["pool"]["engine_bytes"] > 0
+        for eng in stats["engines"]:
+            assert eng["estimated_bytes"] > 0
+            assert {"aot", "jit", "h2d_chunks",
+                    "h2d_steps"} <= set(eng["dispatch"])
 
 
 class TestHTTPService:
@@ -292,7 +489,8 @@ class TestPersistedExecutables:
                             jax.random.PRNGKey(SPEC.seed),
                             steps=SPEC.lead_steps,
                             truth=lambda n: b.ds.state(SPEC.sample, n + 1))
-        assert eng2.dispatch_counts == {"aot": 2, "jit": 0}
+        assert eng2.dispatch_counts["aot"] == 2
+        assert eng2.dispatch_counts["jit"] == 0
         np.testing.assert_array_equal(np.asarray(res.final_state),
                                       np.asarray(direct.final_state))
         np.testing.assert_array_equal(np.asarray(res.scores["crps"]),
