@@ -1,6 +1,13 @@
 """Render dryrun_results.jsonl into the EXPERIMENTS.md roofline tables.
 
-Usage: PYTHONPATH=src python -m benchmarks.roofline_report [results.jsonl]
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [results.jsonl] \
+        [--json-out corrected.json]
+
+``--json-out`` writes the scan-trip-corrected rows as JSON (the same
+correction ``benchmarks/run.py --only secG_dryrun_rooflines`` reuses),
+for CI artifacts.
 """
 
 from __future__ import annotations
@@ -66,9 +73,18 @@ def fmt_b(x: float) -> str:
 
 
 def main() -> None:
-    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.jsonl"
+    argv = sys.argv[1:]
+    json_out = None
+    if "--json-out" in argv:
+        i = argv.index("--json-out")
+        json_out = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+    path = argv[0] if argv else "dryrun_results.jsonl"
     rows = [corrected(json.loads(l)) for l in open(path)]
     rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump({"rows": rows}, f, indent=2)
 
     print("### Single-pod (16x16 = 256 chips) baselines\n")
     print("(terms are scan-trip-corrected; see ``scan_trips`` docstring)\n")

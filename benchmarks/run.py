@@ -413,16 +413,22 @@ def bench_sec5_kernels() -> None:
 
 def bench_dist_roofline() -> None:
     """Appendix G: reads the dry-run results if present and reports the
-    roofline bottleneck histogram of the production-mesh baselines."""
+    roofline bottleneck histogram of the production-mesh baselines,
+    scan-trip-corrected through ``benchmarks.roofline_report`` (one
+    correction implementation, not two drifting copies)."""
     import json
     import os
+    try:
+        from roofline_report import corrected  # python benchmarks/run.py
+    except ImportError:
+        from benchmarks.roofline_report import corrected  # -m / pytest
     path = os.path.join(os.path.dirname(__file__), "..",
                         "dryrun_results.jsonl")
     if not os.path.exists(path):
         _row("secG_dryrun_rooflines", 0.0, "dryrun_results.jsonl missing")
         return
     t0 = time.perf_counter()
-    rows = [json.loads(line) for line in open(path)]
+    rows = [corrected(json.loads(line)) for line in open(path)]
     us = (time.perf_counter() - t0) * 1e6
     single = [r for r in rows if r["mesh"] == "16x16"]
     from collections import Counter
@@ -431,12 +437,85 @@ def bench_dist_roofline() -> None:
          f"cases={len(single)} bottlenecks={dict(c)}".replace(",", ";"))
 
 
+def bench_bundle(members: int = 2, steps: int = 4) -> None:
+    """docs/deployment.md: replica cold boot vs warm-start-bundle boot.
+
+    Rows (microseconds, boot-to-first-forecast):
+      * sec5_bundle_cold_boot -- fresh scheduler with cleared geometry
+        caches and an empty XLA cache: full plan build + trace + compile
+        + first request (what every replica pays without a bundle)
+      * sec5_bundle_warm_boot -- ``boot_scheduler`` over a packed bundle
+        with the same caches cleared: verify + install plans + import
+        StableHLO blobs, then the first request.  Zero compiles, proven
+        by the engine's jit dispatch counter staying 0.
+    """
+    import os
+    import shutil
+    import tempfile
+    from repro.core.sphere import disco as discolib
+    from repro.core.sphere import legendre as leg
+    from repro.serving.bundle import boot_scheduler, pack, set_xla_cache_dir
+    from repro.serving.cache import ExecutableCache
+    from repro.serving.scheduler import (ForecastScheduler, ModelPool,
+                                         RequestSpec)
+    spec = RequestSpec(config="smoke", members=members, lead_steps=steps,
+                       lead_chunk=max(1, steps // 2), scored=True)
+
+    def clear_geometry_caches() -> None:
+        discolib._cached_plan.cache_clear()
+        discolib._PLAN_OVERRIDES.clear()
+        leg._cached_table.cache_clear()
+        leg._TABLE_OVERRIDES.clear()
+
+    tmp = tempfile.mkdtemp(prefix="fcn3-bench-bundle-")
+    try:
+        bundle_path = pack([spec], out=os.path.join(tmp, "bundle"))
+
+        # cold boot: nothing warm anywhere -- the full pipeline runs
+        clear_geometry_caches()
+        set_xla_cache_dir(os.path.join(tmp, "cold-xla"))
+        t0 = time.perf_counter()
+        cold_sched = ForecastScheduler(pool=ModelPool(),
+                                       cache=ExecutableCache(),
+                                       max_concurrency=1)
+        try:
+            res = cold_sched.submit(spec).result()
+            cold_s = time.perf_counter() - t0
+            _row("sec5_bundle_cold_boot", cold_s * 1e6,
+                 f"compile_s={res.timing['compile_s']:.2f};"
+                 f"setup_s={res.timing['setup_s']:.2f}")
+        finally:
+            cold_sched.close()
+
+        # bundle boot: same cleared caches, everything from the bundle
+        clear_geometry_caches()
+        t0 = time.perf_counter()
+        sched = boot_scheduler(bundle_path, max_concurrency=1)
+        try:
+            res = sched.submit(spec).result()
+            warm_s = time.perf_counter() - t0
+            assert res.timing["compile_s"] == 0.0, "bundle boot compiled"
+            eng = sched._engines.snapshot()[spec.engine_key()]
+            assert eng.dispatch_counts["jit"] == 0, "bundle boot jitted"
+            info = sched.bundle_info
+            _row("sec5_bundle_warm_boot", warm_s * 1e6,
+                 f"boot_s={info['boot_s']};"
+                 f"disk_hits={info['disk_hits']};"
+                 f"programs={info['programs']};"
+                 f"cold_vs_bundle={cold_s / warm_s:.1f}x")
+        finally:
+            sched.close()
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 BENCHES = {
     "fig3_probabilistic_skill": lambda a: bench_probabilistic_skill(),
     "fig5_spectral_fidelity": lambda a: bench_spectral_fidelity(),
     "sec5_inference_speed": lambda a: bench_inference_speed(a.members,
                                                             a.steps),
     "sec5_serving": lambda a: bench_serving(a.members, a.steps),
+    "sec5_bundle": lambda a: bench_bundle(a.members, a.steps),
     "sec5_kernels": lambda a: bench_sec5_kernels(),
     "table3_train_step": lambda a: bench_train_step(),
     "kernel_pallas": lambda a: bench_kernels(),

@@ -109,6 +109,19 @@ class DiscoPlan:
     # (jnp.take over the latitude axis makes the SPMD partitioner
     # *replicate* the operand -- a ~100 TB/step all-gather at FCN3 scale).
     affine: tuple[int, int] | None = None
+    # filter hyperparameters the plan was built with: together with the
+    # two grids they form the plan's full cache identity (plan_key), so
+    # a serialized plan carries everything needed to re-register itself
+    # in a fresh process (repro.serving.bundle warm start).
+    ell_max: int = 2
+    m_max: int = 2
+    cutoff_factor: float = 3.0
+
+    def plan_key(self) -> tuple:
+        """The 9-tuple cache identity ``_cached_plan`` is keyed by."""
+        return (self.grid_in.nlat, self.grid_in.nlon, self.grid_in.kind,
+                self.grid_out.nlat, self.grid_out.nlon, self.grid_out.kind,
+                self.ell_max, self.m_max, self.cutoff_factor)
 
     def buffers(self, dtype=jnp.float32,
                 kernels: KernelConfig | None = None) -> dict[str, jax.Array]:
@@ -181,6 +194,68 @@ def _cached_plan(nlat_in, nlon_in, kind_in, nlat_out, nlon_out, kind_out,
     return _build_plan(gi, go, ell_max, m_max, cutoff_factor)
 
 
+# Plans installed from a warm-start bundle (see repro.serving.bundle):
+# keyed like _cached_plan and consulted before it, so a fresh replica
+# skips the psi-tensor construction (and, via the seeded _split_cache,
+# the banded split) entirely.  install_plan only ever seeds values that
+# _build_plan would reproduce bit-for-bit from the same key.
+_PLAN_OVERRIDES: dict[tuple, DiscoPlan] = {}
+
+
+def export_plan(plan: DiscoPlan) -> dict:
+    """Serializable payload for one plan: its cache key plus every
+    precomputed tensor, including the memoized banded split (so a warm
+    replica never re-pays ``split_psi_band``'s full-psi-sized copies).
+
+    ``install_plan`` is the inverse; the payload is plain scalars +
+    numpy arrays (npz/JSON-friendly, no jax types).
+    """
+    band, wrap_rows, psi_wrap = plan._banded_split()
+    return {
+        "key": plan.plan_key(),
+        "n_basis": plan.n_basis,
+        "theta_cutoff": plan.theta_cutoff,
+        "stride": plan.stride,
+        "affine": plan.affine,
+        "psi": plan.psi,
+        "lat_idx": plan.lat_idx,
+        "psi_band": band,
+        "wrap_rows": wrap_rows,
+        "psi_wrap": psi_wrap,
+    }
+
+
+def install_plan(payload: dict) -> DiscoPlan:
+    """Reconstruct a plan from an ``export_plan`` payload and register it
+    so ``make_disco_plan`` returns it for the matching key.
+
+    The grids are rebuilt from the key (grid construction is cheap and
+    deterministic); the psi tensor and its banded split come from the
+    payload, seeded into the plan's ``_split_cache`` memo.
+    """
+    (nlat_in, nlon_in, kind_in, nlat_out, nlon_out, kind_out,
+     ell_max, m_max, cutoff_factor) = payload["key"]
+    gi = glib.make_grid(int(nlat_in), int(nlon_in), str(kind_in))
+    go = glib.make_grid(int(nlat_out), int(nlon_out), str(kind_out))
+    affine = payload["affine"]
+    plan = DiscoPlan(
+        grid_in=gi, grid_out=go, n_basis=int(payload["n_basis"]),
+        theta_cutoff=float(payload["theta_cutoff"]),
+        lat_idx=np.asarray(payload["lat_idx"], np.int32),
+        psi=np.asarray(payload["psi"], np.float32),
+        stride=int(payload["stride"]),
+        affine=tuple(int(a) for a in affine) if affine is not None else None,
+        ell_max=int(ell_max), m_max=int(m_max),
+        cutoff_factor=float(cutoff_factor),
+    )
+    object.__setattr__(plan, "_split_cache", (
+        np.asarray(payload["psi_band"], np.float32),
+        np.asarray(payload["wrap_rows"], np.int32),
+        np.asarray(payload["psi_wrap"], np.float32)))
+    _PLAN_OVERRIDES[plan.plan_key()] = plan
+    return plan
+
+
 def make_disco_plan(grid_in: glib.SphereGrid, grid_out: glib.SphereGrid,
                     ell_max: int = 2, m_max: int = 2,
                     cutoff_factor: float = 3.0) -> DiscoPlan:
@@ -188,12 +263,18 @@ def make_disco_plan(grid_in: glib.SphereGrid, grid_out: glib.SphereGrid,
 
     theta_cutoff = cutoff_factor * (pi / nlat_out): the filter radius scales
     with the *output* resolution, mirroring torch-harmonics' convention.
+    Plans installed from a warm-start bundle (``install_plan``) are
+    returned without any construction work.
     """
     if grid_in.nlon % grid_out.nlon:
         raise ValueError("W_out must divide W_in for strided DISCO")
-    return _cached_plan(grid_in.nlat, grid_in.nlon, grid_in.kind,
-                        grid_out.nlat, grid_out.nlon, grid_out.kind,
-                        ell_max, m_max, cutoff_factor)
+    key = (grid_in.nlat, grid_in.nlon, grid_in.kind,
+           grid_out.nlat, grid_out.nlon, grid_out.kind,
+           ell_max, m_max, cutoff_factor)
+    hit = _PLAN_OVERRIDES.get(key)
+    if hit is not None:
+        return hit
+    return _cached_plan(*key)
 
 
 def _build_plan(grid_in, grid_out, ell_max, m_max, cutoff_factor) -> DiscoPlan:
@@ -260,7 +341,8 @@ def _build_plan(grid_in, grid_out, ell_max, m_max, cutoff_factor) -> DiscoPlan:
         grid_in=grid_in, grid_out=grid_out, n_basis=k,
         theta_cutoff=float(cutoff), lat_idx=lat_idx.astype(np.int32),
         psi=psi.astype(np.float32), stride=w_in // grid_out.nlon,
-        affine=affine,
+        affine=affine, ell_max=int(ell_max), m_max=int(m_max),
+        cutoff_factor=float(cutoff_factor),
     )
 
 

@@ -65,5 +65,40 @@ def _cached_table(lmax: int, mmax: int, colat_key: bytes, nlat: int) -> np.ndarr
     return legendre_table(lmax, mmax, colat)
 
 
+# Precomputed tables installed from a warm-start bundle (see
+# repro.serving.bundle): keyed exactly like _cached_table, consulted
+# before it, so a fresh replica skips the O(nlat * lmax * mmax) float64
+# recurrences entirely.  Installed tables are exact copies of what
+# legendre_table would produce -- install_legendre_table is a cache
+# seed, never an approximation.
+_TABLE_OVERRIDES: dict[tuple, np.ndarray] = {}
+
+
+def table_key(lmax: int, mmax: int, colat: np.ndarray) -> tuple:
+    """Cache key identifying one Legendre table: (lmax, mmax, colat)."""
+    colat = np.ascontiguousarray(colat, np.float64)
+    return (int(lmax), int(mmax), colat.tobytes(), colat.shape[0])
+
+
+def install_legendre_table(lmax: int, mmax: int, colat: np.ndarray,
+                           table: np.ndarray) -> None:
+    """Seed the table cache with a precomputed table (bundle warm start).
+
+    ``table`` must be the (nlat, lmax, mmax) float64 array
+    ``legendre_table`` would compute for these arguments; shape is
+    validated here, values are the caller's contract.
+    """
+    expect = (colat.shape[0], lmax, mmax)
+    if tuple(table.shape) != expect:
+        raise ValueError(f"legendre table shape {table.shape} does not "
+                         f"match key (expected {expect})")
+    _TABLE_OVERRIDES[table_key(lmax, mmax, colat)] = np.ascontiguousarray(
+        table, np.float64)
+
+
 def cached_legendre_table(lmax: int, mmax: int, colat: np.ndarray) -> np.ndarray:
-    return _cached_table(lmax, mmax, np.ascontiguousarray(colat, np.float64).tobytes(), colat.shape[0])
+    key = table_key(lmax, mmax, colat)
+    hit = _TABLE_OVERRIDES.get(key)
+    if hit is not None:
+        return hit
+    return _cached_table(*key)

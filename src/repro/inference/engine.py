@@ -874,6 +874,44 @@ class ForecastEngine:
             total += est
         return int(total)
 
+    def plan_exports(self) -> list[dict]:
+        """Serializable geometry-plan payloads for warm-start bundles.
+
+        One payload per distinct precomputed plan this engine's model
+        dispatches: the three DISCO plans (encoder, latent, decoder --
+        deduplicated by ``DiscoPlan.plan_key``, the 9-tuple grid +
+        filter-hyperparameter identity) and the Legendre tables of the
+        IO and latent SHTs (keyed (lmax, mmax, colat)).  A fresh replica
+        installs these via ``repro.core.sphere.disco.install_plan`` /
+        ``legendre.install_legendre_table`` and skips the psi-tensor and
+        Legendre-recurrence construction entirely (seconds at smoke
+        scale, minutes at 721x1440).  Payloads are plain scalars + numpy
+        arrays, written to npz files by ``repro.serving.bundle``.
+        """
+        from repro.core.sphere import disco as discolib
+        from repro.core.sphere import legendre as leg
+        m = self.model
+        payloads: list[dict] = []
+        seen: set = set()
+        for plan in (m.enc_plan, m.latent_plan, m.dec_plan):
+            key = ("disco",) + plan.plan_key()
+            if key in seen:
+                continue
+            seen.add(key)
+            payloads.append({"kind": "disco", **discolib.export_plan(plan)})
+        for sht in (m.in_sht, m.latent_sht):
+            colat = np.ascontiguousarray(sht.grid.colat, np.float64)
+            key = ("legendre", sht.lmax, sht.mmax, colat.tobytes())
+            if key in seen:
+                continue
+            seen.add(key)
+            payloads.append({
+                "kind": "legendre", "lmax": sht.lmax, "mmax": sht.mmax,
+                "colat": colat,
+                "table": leg.cached_legendre_table(sht.lmax, sht.mmax,
+                                                   colat)})
+        return payloads
+
     # ------------------------------------------------------------------
     @staticmethod
     def _stage(src, start: int, k: int) -> jax.Array:

@@ -1,0 +1,126 @@
+"""Build, inspect and verify warm-start bundles (docs/deployment.md).
+
+A bundle turns replica boot from a minutes-scale trace+compile into a
+seconds-scale artifact fetch: it packs the ``jax.export`` StableHLO
+blobs, the XLA compilation cache, the precomputed SHT/DISCO geometry
+plans and the engine-pool manifest for a declared set of request shapes
+(see ``repro.serving.bundle``).
+
+Build (on a machine with the exact jax version / backend / source tree
+the replicas will run)::
+
+  PYTHONPATH=src python -m repro.launch.bundle build \\
+      --spec '{"members": 2, "lead_steps": 4, "lead_chunk": 2}' \\
+      --max-batch 4 --out bundles/smoke
+
+Boot a replica from it (refuses on any mismatch instead of recompiling)::
+
+  PYTHONPATH=src python -m repro.launch.service --bundle bundles/smoke
+
+Inspect / verify a published bundle::
+
+  PYTHONPATH=src python -m repro.launch.bundle inspect bundles/smoke
+  PYTHONPATH=src python -m repro.launch.bundle verify bundles/smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def _cmd_build(args: argparse.Namespace) -> int:
+    # bundle.pack configures the XLA compilation cache before anything
+    # compiles -- nothing jax-heavy may be imported before this call
+    from repro.serving.bundle import pack
+    from repro.serving.spec import RequestSpec
+    specs = []
+    for raw in args.spec:
+        spec = RequestSpec.from_dict(json.loads(raw))
+        spec.validate()
+        specs.append(spec)
+    ckpts = {specs[0].config: args.ckpt} if args.ckpt else None
+    out = pack(specs, out=args.out, max_batch=args.max_batch,
+               ckpts=ckpts, tar=args.tar, out_dir=args.out_dir,
+               verbose=True)
+    from repro.serving.bundle import WarmStartBundle
+    b = WarmStartBundle.load(out)
+    print(f"[bundle] built {b.bundle_id} at {out} "
+          f"({len(b.manifest['engines'])} engine(s), "
+          f"{len(b.manifest['files'])} file(s))")
+    print(out)
+    return 0
+
+
+def _cmd_inspect(args: argparse.Namespace) -> int:
+    from repro.serving.bundle import WarmStartBundle
+    b = WarmStartBundle.load(args.bundle)
+    m = b.manifest
+    total = sum(f["bytes"] for f in m["files"].values())
+    print(json.dumps({
+        "bundle_id": m.get("bundle_id"),
+        "format": m.get("format"),
+        "environment": m.get("environment"),
+        "engines": m.get("engines"),
+        "plans": m.get("plans"),
+        "files": len(m.get("files", {})),
+        "total_bytes": total,
+    }, indent=2))
+    return 0
+
+
+def _cmd_verify(args: argparse.Namespace) -> int:
+    from repro.serving.bundle import BundleError, WarmStartBundle
+    b = WarmStartBundle.load(args.bundle)
+    try:
+        b.verify(deep=not args.shallow)
+    except BundleError as e:
+        print(f"[bundle] REFUSED: {e}")
+        return 1
+    print(f"[bundle] OK: {b.bundle_id} is servable by this process "
+          f"({len(b.manifest['engines'])} engine(s))")
+    return 0
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    b = sub.add_parser("build", help="compile + pack a warm-start bundle")
+    b.add_argument("--spec", action="append", required=True,
+                   metavar="SPEC_JSON",
+                   help="RequestSpec JSON to bundle executables for "
+                        "(repeatable)")
+    b.add_argument("--max-batch", type=int, default=1,
+                   help="also bundle the coalesced B-request programs "
+                        "(match the service's --max-batch)")
+    b.add_argument("--ckpt", default=None,
+                   help="checkpoint for the first spec's config")
+    b.add_argument("--out", default=None,
+                   help="exact output path (default: content-addressed "
+                        "name under --out-dir)")
+    b.add_argument("--out-dir", default="bundles",
+                   help="directory for content-addressed bundle names")
+    b.add_argument("--tar", action="store_true",
+                   help="produce a single .tar archive instead of a "
+                        "directory")
+    b.set_defaults(fn=_cmd_build)
+
+    i = sub.add_parser("inspect", help="print a bundle's manifest summary")
+    i.add_argument("bundle")
+    i.set_defaults(fn=_cmd_inspect)
+
+    v = sub.add_parser("verify",
+                       help="check the bundle against this environment "
+                            "(exit 1 on refusal)")
+    v.add_argument("bundle")
+    v.add_argument("--shallow", action="store_true",
+                   help="skip per-file sha256 checks")
+    v.set_defaults(fn=_cmd_verify)
+
+    args = ap.parse_args(argv)
+    raise SystemExit(args.fn(args))
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,15 @@ then, from anywhere::
 restarted service warm-starts from disk.  ``--warm SPEC_JSON`` compiles
 executables for a request shape before the server accepts traffic.
 
+``--bundle PATH`` boots a zero-cold-start replica from a warm-start
+bundle built by ``python -m repro.launch.bundle build``: the manifest
+is verified against this process (jax version, backend, source
+fingerprint, file hashes -- any mismatch refuses with a diagnostic
+instead of silently recompiling), the packed geometry plans are
+installed, and every bundled engine is pre-warmed from the StableHLO
+blobs over a *readonly* executable cache before the server accepts
+traffic.  See docs/deployment.md for the bundle lifecycle.
+
 See docs/serving.md for the API and the NDJSON event grammar.
 """
 
@@ -75,12 +84,21 @@ def main(argv=None) -> None:
     ap.add_argument("--persist-dir", default=None,
                     help="persist compiled chunk programs (jax.export "
                          "blobs + XLA compilation cache) here")
+    ap.add_argument("--bundle", default=None, metavar="PATH",
+                    help="boot from a warm-start bundle (dir or .tar "
+                         "built by repro.launch.bundle): verify, "
+                         "install plans, pre-warm every bundled engine "
+                         "from its StableHLO blobs; refuses on any "
+                         "mismatch instead of recompiling")
     ap.add_argument("--warm", action="append", default=[],
                     metavar="SPEC_JSON",
                     help="RequestSpec JSON to precompile before serving "
                          "(repeatable), e.g. "
                          "'{\"members\": 4, \"lead_steps\": 8}'")
     args = ap.parse_args(argv)
+    if args.bundle and args.persist_dir:
+        ap.error("--bundle and --persist-dir are mutually exclusive: a "
+                 "bundle replica serves a readonly executable set")
 
     if args.persist_dir:
         _enable_xla_cache(args.persist_dir)
@@ -101,13 +119,30 @@ def main(argv=None) -> None:
         warm_specs.append(spec)
 
     pool = ModelPool({args.config[0]: args.ckpt} if args.ckpt else None)
-    scheduler = ForecastScheduler(
-        pool=pool, cache=ExecutableCache(args.persist_dir),
+    sched_kwargs = dict(
         max_concurrency=args.max_concurrency, queue_size=args.queue_size,
         max_batch=args.max_batch, batch_window_ms=args.batch_window_ms,
         engine_budget_bytes=(int(args.engine_budget_mb * 2**20)
                              if args.engine_budget_mb is not None
                              else None))
+    if args.bundle:
+        # Zero-cold-start boot: verify + install plans + pre-warm every
+        # bundled engine from StableHLO blobs (readonly cache -- any
+        # shape the bundle lacks refuses instead of compiling).
+        from repro.serving.bundle import WarmStartBundle, boot_scheduler
+        b = WarmStartBundle.load(args.bundle)
+        print(f"[service] booting from bundle {b.bundle_id[:12]} "
+              f"({args.bundle}) ...", flush=True)
+        scheduler = boot_scheduler(b, pool=pool, **sched_kwargs)
+        info = scheduler.bundle_info
+        print(f"[service] bundle boot OK: {info['engines']} engine(s), "
+              f"{info['programs']} program(s), "
+              f"{info['disk_hits']} from blobs, "
+              f"boot_s={info['boot_s']}", flush=True)
+    else:
+        scheduler = ForecastScheduler(
+            pool=pool, cache=ExecutableCache(args.persist_dir),
+            **sched_kwargs)
     for name in args.config:
         print(f"[service] preloading config {name!r} ...", flush=True)
         pool.get(name)

@@ -16,9 +16,14 @@ Three pillars:
                 -- chunk-streamed delivery: ``ForecastEngine.stream``
                    blocks serialized as NDJSON over stdlib HTTP, so
                    clients see CRPS/rank-histogram/spectra scores as
-                   each lead chunk retires.
+                   each lead chunk retires;
+* ``bundle``    -- content-addressed warm-start bundles: pack the
+                   StableHLO blobs, XLA compilation cache and geometry
+                   plans so a fresh replica boots with zero compiles
+                   (``--bundle`` on the launcher; refuses on mismatch).
 
-Launch with ``python -m repro.launch.service``; see docs/serving.md.
+Launch with ``python -m repro.launch.service``; see docs/serving.md and
+docs/deployment.md (docs/README.md is the index).
 
 The client side (``spec``/``transport``/``client``) must stay importable
 without jax or the model stack, so the heavy server-side modules are
@@ -28,7 +33,15 @@ entry point, and a package-level import would re-execute it under runpy.
 Import it from ``repro.serving.client`` directly.
 """
 
-from repro.serving.cache import ExecutableCache, ExecutableKey  # noqa: F401
+from repro.serving.bundle import (  # noqa: F401
+    BundleError,
+    WarmStartBundle,
+)
+from repro.serving.cache import (  # noqa: F401
+    ExecutableCache,
+    ExecutableKey,
+    ReadOnlyCacheMiss,
+)
 from repro.serving.spec import RequestSpec  # noqa: F401
 from repro.serving.transport import (  # noqa: F401
     ServedForecast,
@@ -42,10 +55,15 @@ _LAZY = {
     "QueueFull": "repro.serving.scheduler",
     "build_bundle": "repro.serving.scheduler",
     "ForecastService": "repro.serving.service",
+    # pack/boot compile through the scheduler stack (jax); the manifest
+    # types above stay importable in a light client process
+    "boot_scheduler": "repro.serving.bundle",
+    "pack": "repro.serving.bundle",
 }
 
 
 def __getattr__(name: str):
+    """PEP 562 lazy re-export of the jax-heavy server-side symbols."""
     module = _LAZY.get(name)
     if module is None:
         raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

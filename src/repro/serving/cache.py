@@ -91,6 +91,7 @@ class ExecutableKey:
     def for_engine(cls, config: str, engine, scored: bool,
                    chunk_len: int, batch: int | None = None
                    ) -> "ExecutableKey":
+        """The key for one chunk program of a live ``ForecastEngine``."""
         return cls(config=config, chunk_len=chunk_len, scored=scored,
                    engine=dataclasses.astuple(engine.cfg), batch=batch)
 
@@ -110,6 +111,16 @@ class ExecutableKey:
         return hashlib.sha1(tag.encode("utf-8")).hexdigest()[:16]
 
 
+class ReadOnlyCacheMiss(RuntimeError):
+    """A readonly cache was asked for a key it cannot serve from disk.
+
+    Raised instead of compiling: a replica booted from a warm-start
+    bundle (``repro.serving.bundle``) must refuse -- with the key and
+    the blob path it looked for -- rather than silently pay the
+    trace+compile the bundle exists to eliminate.
+    """
+
+
 class ExecutableCache:
     """Thread-safe warm/hit/miss bookkeeping over engine AOT hooks.
 
@@ -117,11 +128,21 @@ class ExecutableCache:
     same shape trace it once, while a cold compile for one shape never
     blocks a warm hit (or a compile) for another.  The global lock is
     only held for lookups and stats updates.
+
+    ``readonly=True`` (bundle-boot mode) turns every would-be compile
+    into a ``ReadOnlyCacheMiss``: keys must be served from memory or
+    from an existing ``persist_dir`` blob, nothing is ever written, and
+    a stale blob raises instead of being deleted and recompiled.
     """
 
-    def __init__(self, persist_dir: str | None = None):
+    def __init__(self, persist_dir: str | None = None,
+                 readonly: bool = False):
+        if readonly and not persist_dir:
+            raise ValueError("readonly cache needs a persist_dir to "
+                             "serve blobs from")
         self.persist_dir = persist_dir
-        if persist_dir:
+        self.readonly = readonly
+        if persist_dir and not readonly:
             os.makedirs(persist_dir, exist_ok=True)
         self._lock = threading.Lock()
         self._key_locks: dict[ExecutableKey, threading.Lock] = {}
@@ -145,7 +166,10 @@ class ExecutableCache:
     def _from_disk(self, key: ExecutableKey, path: str, engine, params,
                    buffers) -> bool:
         """Try installing a persisted blob; a stale/incompatible file is
-        removed and reported as a miss (recompile), never a poisoned key."""
+        removed and reported as a miss (recompile), never a poisoned key.
+        A readonly cache instead raises ``ReadOnlyCacheMiss`` on a load
+        failure -- the blob came from a bundle and must not be deleted
+        or silently recompiled around."""
         try:
             with open(path, "rb") as f:
                 blob = f.read()
@@ -153,6 +177,12 @@ class ExecutableCache:
                                 params, buffers, batch=key.batch)
             return True
         except Exception as e:  # noqa: BLE001 -- any load failure => recompile
+            if self.readonly:
+                raise ReadOnlyCacheMiss(
+                    f"bundle executable {path} for key {key!r} failed to "
+                    f"load ({type(e).__name__}: {e}); refusing to "
+                    f"recompile -- the bundle does not match this "
+                    f"process") from e
             try:
                 os.remove(path)
             except OSError:
@@ -189,6 +219,11 @@ class ExecutableCache:
                     self.compile_s += dt
                     self._known.add(key)
                 return {"hit": True, "source": "disk", "compile_s": dt}
+            if self.readonly:
+                raise ReadOnlyCacheMiss(
+                    f"no bundle executable for key {key!r} "
+                    f"(looked for {path}); refusing to compile -- the "
+                    f"bundle was not built for this engine/request shape")
             if path:
                 # Persisting anyway: trace/lower once through jax.export
                 # and install from the exported module, instead of
@@ -236,8 +271,11 @@ class ExecutableCache:
         }
 
     def stats(self) -> dict:
+        """Counters snapshot: distinct keys seen, hit/miss/disk-hit
+        totals, cumulative compile seconds and the persistence config."""
         with self._lock:
             return {"keys": len(self._known), "hits": self.hits,
                     "misses": self.misses, "disk_hits": self.disk_hits,
                     "compile_s": self.compile_s,
-                    "persist_dir": self.persist_dir}
+                    "persist_dir": self.persist_dir,
+                    "readonly": self.readonly}

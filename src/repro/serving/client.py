@@ -32,6 +32,8 @@ from repro.serving.spec import RequestSpec
 
 
 class ForecastClient:
+    """Stdlib-only HTTP client: one connection per call, no jax import."""
+
     def __init__(self, host: str = "127.0.0.1", port: int = 8771,
                  timeout: float = 600.0):
         self.host = host
@@ -66,6 +68,7 @@ class ForecastClient:
                 time.sleep(delay)
 
     def stats(self) -> dict:
+        """The server's scheduler/cache/bundle statistics block."""
         return self._get_json("/v1/stats")
 
     def stream(self, spec: RequestSpec | dict):
@@ -109,6 +112,8 @@ def _spec_from_args(args: argparse.Namespace) -> RequestSpec:
 
 
 def main(argv=None) -> None:
+    """CLI entry point: stream one forecast, print per-lead score lines,
+    optionally save the timing report (``--timing-out``)."""
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8771)

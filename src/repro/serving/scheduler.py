@@ -74,6 +74,7 @@ class KeyedBuilds:
         self._build_locks: dict = {}
 
     def get_or_build(self, key, build):
+        """The item for ``key``, calling ``build()`` at most once."""
         with self._lock:
             item = self._items.get(key)
             if item is not None:
@@ -89,6 +90,7 @@ class KeyedBuilds:
             return item
 
     def snapshot(self) -> dict:
+        """A point-in-time copy of the built items."""
         with self._lock:
             return dict(self._items)
 
@@ -117,6 +119,7 @@ class EnginePool:
         self._evictions = 0
 
     def get_or_build(self, key, build):
+        """The engine for ``key`` (built at most once), LRU-touched."""
         with self._lock:
             eng = self._engines.get(key)
             if eng is not None:
@@ -157,6 +160,7 @@ class EnginePool:
         return evicted
 
     def snapshot(self) -> dict:
+        """A point-in-time copy of the warm engines by shape key."""
         with self._lock:
             return dict(self._engines)
 
@@ -213,6 +217,7 @@ class ModelPool:
         self._bundles = KeyedBuilds()
 
     def get(self, name: str) -> ModelBundle:
+        """The shared ``ModelBundle`` for a named config (built once)."""
         return self._bundles.get_or_build(
             name, lambda: build_bundle(name, self._ckpts.get(name)))
 
@@ -229,6 +234,7 @@ class ForecastStream:
         self._cancelled = threading.Event()
 
     def put(self, ev: dict) -> None:
+        """Enqueue one transport event (called by the serving worker)."""
         self._q.put(ev)
 
     def cancel(self) -> None:
@@ -239,9 +245,11 @@ class ForecastStream:
 
     @property
     def cancelled(self) -> bool:
+        """Whether the consumer cancelled this stream."""
         return self._cancelled.is_set()
 
     def events(self):
+        """Yield transport events until a terminal one (blocking)."""
         while True:
             ev = self._q.get()
             yield ev
@@ -279,6 +287,9 @@ class ForecastScheduler:
         self._served = 0
         self._failed = 0
         self._batch_sizes: collections.Counter = collections.Counter()
+        # warm-start provenance: set by WarmStartBundle.boot on a replica
+        # booted from a bundle, surfaced as the "bundle" stats block
+        self._bundle_info: dict | None = None
         self._workers = [
             threading.Thread(target=self._worker, daemon=True,
                              name=f"forecast-worker-{i}")
@@ -317,7 +328,34 @@ class ForecastScheduler:
         self._engines.enforce_budget()
         return out
 
+    def engine_for(self, spec: RequestSpec) -> tuple:
+        """The warm ``(ForecastEngine, ModelBundle)`` pair serving this
+        spec's shape key (``RequestSpec.engine_key``), built on first
+        use.  Public for introspection -- the warm-start bundle packer
+        reads ``chunk_lengths``/``estimated_bytes``/``plan_exports``
+        off the engine that ``warmup`` compiled."""
+        return self._get_engine(spec)
+
+    def set_bundle_info(self, info: dict) -> None:
+        """Record warm-start-bundle provenance (bundle id, programs
+        warmed, boot seconds); reported as the ``bundle`` stats block so
+        ``/v1/stats`` proves where a replica's executables came from."""
+        with self._lock:
+            self._bundle_info = dict(info)
+
+    @property
+    def bundle_info(self) -> dict | None:
+        """The ``set_bundle_info`` block, or None on a cold-booted
+        (non-bundle) scheduler."""
+        with self._lock:
+            return (dict(self._bundle_info)
+                    if self._bundle_info is not None else None)
+
     def stats(self) -> dict:
+        """The ``/v1/stats`` payload: queue/served/failed counters, the
+        coalesced-batch histogram, per-engine rows with dispatch counts,
+        pool and cache statistics, and the ``bundle`` provenance block
+        (None unless the replica booted from a warm-start bundle)."""
         snap = self._engines.snapshot()
         sizes = {key: eng.estimated_bytes() for key, eng in snap.items()}
         engines = [{"config": key[0],
@@ -335,6 +373,8 @@ class ForecastScheduler:
             served, failed = self._served, self._failed
             batches = {str(k): v
                        for k, v in sorted(self._batch_sizes.items())}
+            bundle_info = (dict(self._bundle_info)
+                           if self._bundle_info is not None else None)
         with self._cond:
             queued = sum(1 for s in self._pending if s is not None)
         return {"queued": queued, "served": served,
@@ -345,7 +385,8 @@ class ForecastScheduler:
                 "engines": engines,
                 "pool": self._engines.stats(
                     engine_bytes=sum(sizes.values())),
-                "cache": self.cache.stats()}
+                "cache": self.cache.stats(),
+                "bundle": bundle_info}
 
     def close(self, timeout: float = 30.0) -> None:
         """Stop accepting requests, drain pending ones, join workers."""

@@ -6,8 +6,11 @@ Routes:
   Responds 200 with an ``application/x-ndjson`` stream (see
   ``repro.serving.transport`` for the event grammar), 400 on an invalid
   spec, 503 when the request queue is full.
-* ``GET /v1/stats``     -- scheduler + executable-cache statistics.
-* ``GET /healthz``      -- liveness.
+* ``GET /v1/stats``     -- scheduler + executable-cache statistics,
+  including the ``bundle`` block (warm-start provenance) on replicas
+  booted from a warm-start bundle (see ``repro.serving.bundle``).
+* ``GET /healthz``      -- liveness; includes ``bundle_id`` when the
+  replica booted from a bundle.
 
 Framing: HTTP/1.0 close-delimited bodies.  Every stdlib client handles
 them, the handler stays small, and chunk latency is dominated by device
@@ -46,12 +49,13 @@ class ForecastService:
         service = self
 
         class Handler(_ForecastHandler):
-            pass
+            """Per-server handler subclass carrying the service ref."""
 
         Handler.service = service
         return ThreadingHTTPServer((host, port), Handler)
 
     def close(self) -> None:
+        """Drain and stop the underlying scheduler."""
         self.scheduler.close()
 
 
@@ -71,14 +75,23 @@ class _ForecastHandler(BaseHTTPRequestHandler):
         self.wfile.write(body)
 
     def do_GET(self):  # noqa: N802 - stdlib naming
+        """Route GET: liveness (with warm-start provenance when the
+        replica booted from a bundle) and the scheduler stats block."""
         if self.path == "/healthz":
-            self._json(200, {"ok": True})
+            ok: dict = {"ok": True}
+            info = self.service.scheduler.bundle_info
+            if info is not None:
+                # autoscaler-friendly: a replica advertises which warm
+                # bundle it serves, so a rollout can check content ids
+                ok["bundle_id"] = info.get("bundle_id")
+            self._json(200, ok)
         elif self.path == "/v1/stats":
             self._json(200, self.service.scheduler.stats())
         else:
             self._json(404, {"error": f"no route {self.path}"})
 
     def do_POST(self):  # noqa: N802 - stdlib naming
+        """POST /v1/forecast: validate, submit, stream NDJSON events."""
         if self.path != "/v1/forecast":
             return self._json(404, {"error": f"no route {self.path}"})
         try:

@@ -60,6 +60,8 @@ class RequestSpec:
 
     @classmethod
     def from_dict(cls, d: dict) -> "RequestSpec":
+        """Build a spec from a JSON object, rejecting unknown fields by
+        name (a typo must 400, not silently take a default)."""
         names = {f.name for f in dataclasses.fields(cls)}
         unknown = sorted(set(d) - names)
         if unknown:
@@ -69,9 +71,11 @@ class RequestSpec:
         return cls(**d)
 
     def to_dict(self) -> dict:
+        """The spec as a JSON-ready dict (the POST body, exactly)."""
         return dataclasses.asdict(self)
 
     def perturbation_config(self):
+        """The ``PerturbationConfig`` this spec's perturb fields select."""
         from repro.inference import PerturbationConfig
         return PerturbationConfig(kind=self.perturb,
                                   amplitude=self.perturb_amplitude,
@@ -79,6 +83,7 @@ class RequestSpec:
                                   ensemble_transform=self.ensemble_transform)
 
     def engine_config(self):
+        """The ``EngineConfig`` a warm engine for this spec runs with."""
         # Single-host service: bake the geometry into the executable
         # except at full resolution, where the Legendre tables are
         # GB-scale and must stay jit arguments (same policy as the
@@ -96,6 +101,8 @@ class RequestSpec:
                             kernels=kernels)
 
     def engine_key(self) -> tuple:
+        """The warm-engine (shape) key: every field that selects a
+        different compiled program."""
         return (self.config, self.engine_config())
 
     def batch_key(self) -> tuple:

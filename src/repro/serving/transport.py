@@ -65,6 +65,7 @@ def _np_dtype(name: str) -> np.dtype:
 
 
 def decode_array(d: dict) -> np.ndarray:
+    """Exact inverse of ``encode_array`` (returns a writable copy)."""
     return np.frombuffer(base64.b64decode(d["b64"]),
                          dtype=_np_dtype(d["dtype"])
                          ).reshape(d["shape"]).copy()
