@@ -10,6 +10,9 @@ EXPERIMENTS.md (dry-run roofline terms for the production mesh).
   sec5_serving                            -- served-request latency: cold vs
                                              warm executable cache, 1 vs N
                                              concurrent requests
+  sec5_serving_qos                        -- pickup-policy A/B under overload:
+                                             FIFO vs priority-then-FIFO with
+                                             deadline shedding
   sec5_kernels                            -- op-level SHT/DISCO dispatch A/B
                                              (reference vs Pallas substrate)
                                              + banded-psi buffer footprint
@@ -300,6 +303,90 @@ def bench_serving(members: int = 2, steps: int = 4) -> None:
         sched.close()
 
 
+def bench_serving_qos(members: int = 2, steps: int = 4) -> None:
+    """docs/serving.md QoS section: pickup-policy A/B under overload.
+
+    One warm single-worker scheduler per arm, same 9-request burst (6
+    batch then 3 interactive -- a human arriving behind a sweep):
+      * FIFO arm  -- ``aging_ms=0`` promotes everything, restoring pure
+        FIFO pickup (the QoS fields ride along but cannot reorder);
+      * QoS arm   -- priority-then-FIFO: interactive requests jump the
+        batch backlog; two extra already-expired requests prove the
+        deadline shed path (terminal error, zero rollouts burned).
+
+    The row's value is the QoS arm's mean interactive total_s; derived
+    carries per-arm interactive p95 queue_s and the shed count.
+    """
+    from repro.serving import transport
+    from repro.serving.cache import ExecutableCache
+    from repro.serving.scheduler import (ForecastScheduler, ModelPool,
+                                         RequestSpec)
+    pool = ModelPool()
+    spec = RequestSpec(config="smoke", members=members, lead_steps=steps,
+                       lead_chunk=max(1, steps // 2), scored=True)
+
+    def burst(s, with_shed: bool) -> dict:
+        streams = []
+        for i in range(6):
+            streams.append(("batch", s.submit(RequestSpec(
+                **{**spec.to_dict(), "sample": i, "seed": i}))))
+        shed_streams = []
+        if with_shed:
+            for i in range(2):
+                shed_streams.append(s.submit(RequestSpec(
+                    **{**spec.to_dict(), "seed": 50 + i,
+                       "deadline_ms": 0.001})))
+        for i in range(3):
+            streams.append(("interactive", s.submit(RequestSpec(
+                **{**spec.to_dict(), "sample": i, "seed": 20 + i,
+                   "priority": "interactive"}))))
+        out = {"batch": [], "interactive": []}
+        for cls, st in streams:
+            res = st.result()
+            out[cls].append((res.timing["queue_s"],
+                             res.timing["total_s"]))
+        shed = 0
+        for st in shed_streams:
+            try:
+                st.result()
+            except transport.ServingError as e:
+                assert e.reason == "deadline", e
+                shed += 1
+        out["shed"] = shed
+        return out
+
+    arms = {}
+    for name, aging_ms in (("fifo", 0.0), ("qos", 60000.0)):
+        sched = ForecastScheduler(pool=pool, cache=ExecutableCache(),
+                                  max_concurrency=1, aging_ms=aging_ms)
+        try:
+            sched.warmup(spec)
+            arms[name] = burst(sched, with_shed=(name == "qos"))
+            stats = sched.stats()
+            # shed requests never reached a worker: every dispatched
+            # rollout is accounted to a served request
+            assert sum(int(k) * v
+                       for k, v in stats["batches"].items()) == \
+                stats["served"], stats
+            arms[name]["stats"] = stats
+        finally:
+            sched.close()
+
+    def p95(samples, idx):
+        return float(np.percentile([s[idx] for s in samples], 95))
+
+    qos_int = arms["qos"]["interactive"]
+    fifo_q, qos_q = (p95(arms[a]["interactive"], 0)
+                     for a in ("fifo", "qos"))
+    mean_total = sum(t for _, t in qos_int) / len(qos_int)
+    _row("sec5_serving_qos", mean_total * 1e6,
+         f"fifo_interactive_p95_queue_s={fifo_q:.3f};"
+         f"qos_interactive_p95_queue_s={qos_q:.3f};"
+         f"speedup={fifo_q / max(qos_q, 1e-9):.1f}x;"
+         f"qos_batch_p95_queue_s={p95(arms['qos']['batch'], 0):.3f};"
+         f"shed={arms['qos']['shed']}")
+
+
 def bench_train_step() -> None:
     """Table 3: one ensemble-CRPS training step (stage-1 recipe, reduced)."""
     from repro.configs import fcn3 as fcn3cfg
@@ -515,6 +602,7 @@ BENCHES = {
     "sec5_inference_speed": lambda a: bench_inference_speed(a.members,
                                                             a.steps),
     "sec5_serving": lambda a: bench_serving(a.members, a.steps),
+    "sec5_serving_qos": lambda a: bench_serving_qos(a.members, a.steps),
     "sec5_bundle": lambda a: bench_bundle(a.members, a.steps),
     "sec5_kernels": lambda a: bench_sec5_kernels(),
     "table3_train_step": lambda a: bench_train_step(),

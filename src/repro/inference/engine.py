@@ -341,7 +341,8 @@ class ForecastEngine:
         # duplicating copies).
         self._aot: dict[Any, tuple] = {}
         self.dispatch_counts = {"aot": 0, "jit": 0,
-                                "h2d_chunks": 0, "h2d_steps": 0}
+                                "h2d_chunks": 0, "h2d_steps": 0,
+                                "shrinks": 0}
         # chunk dispatches are one per lead_chunk, so a lock here is
         # noise next to the device work -- but it keeps the counts exact
         # when a serving scheduler runs concurrent rollouts on one engine
@@ -1006,7 +1007,8 @@ class ForecastEngine:
     # ------------------------------------------------------------------
     # Coalesced request batching: B same-shape requests, one rollout.
     def stream_batched(self, params, buffers, state0s, auxs, keys,
-                       steps: int | None = None, truths=None
+                       steps: int | None = None, truths=None,
+                       survivors: Callable[[], list[int]] | None = None
                        ) -> Iterator[list[ForecastResult]]:
         """Roll B same-shape requests through one batched chunk program.
 
@@ -1022,6 +1024,21 @@ class ForecastEngine:
         All requests share the engine's shape (members, chunk, scores)
         and the rollout length; per-request initial conditions, noise
         keys, aux/truth sources may differ freely.
+
+        ``survivors`` (optional) is polled at every chunk boundary with
+        no arguments and returns the original request indices that still
+        want results (the scheduler passes the non-cancelled members of
+        a coalesced batch).  When it reports a strict non-empty subset
+        AND warm executables are already installed for every remaining
+        chunk length at the smaller batch size (serial when one request
+        survives), the rollout **shrinks**: surviving carries are sliced
+        out and remaining chunks dispatch through the already-compiled
+        smaller program -- no new compile, per-request numerics unchanged
+        (the batched program is a vmap of the serial one).  Without a
+        warm smaller program the rollout continues masked at full width,
+        exactly as before.  After a shrink the yielded lists keep length
+        B with ``None`` in dropped slots; ``dispatch_counts["shrinks"]``
+        ticks once per shrink.
         """
         b = len(state0s)
         if b < 1:
@@ -1037,7 +1054,7 @@ class ForecastEngine:
                 raise ValueError("steps= is required when aux is a callable")
             steps = len(auxs[0])
         bounds = self._chunk_bounds(steps)
-        orig_buffers = buffers
+        orig_params, orig_buffers = params, buffers
         params, buffers = self._prepare_inputs(params, buffers)
         scored = truths is not None
         fn = self._get_chunk_fn(
@@ -1084,19 +1101,63 @@ class ForecastEngine:
             z_hat = jnp.stack([c[1] for c in carries])
             key_b = jnp.stack([jnp.asarray(k_i) for k_i in keys])
             diag = self.diagnostics
+            # original request indices the rollout still carries, in
+            # submit order; ``serial`` flips once a shrink lands on the
+            # un-vmapped serial program (one survivor, no leading axis)
+            active = list(range(b))
+            serial = False
             for i, (start, k) in enumerate(bounds):
+                if survivors is not None and not serial:
+                    want = set(survivors())
+                    alive = [j for j in active if j in want]
+                    if alive and len(alive) < len(active):
+                        nb = len(alive) if len(alive) > 1 else None
+                        rem = {kk for (_s2, kk) in bounds[i:]}
+                        if all(self.has_chunk_executable(
+                                scored, kk, orig_params, orig_buffers,
+                                batch=nb) for kk in rem):
+                            pos = [active.index(j) for j in alive]
+                            if nb is None:
+                                s, z_hat = s[pos[0]], z_hat[pos[0]]
+                                key_b = key_b[pos[0]]
+                                serial = True
+                            else:
+                                idx = jnp.asarray(pos)
+                                s, z_hat = s[idx], z_hat[idx]
+                                key_b = key_b[idx]
+                            fn = self._get_chunk_fn(
+                                scored, orig_buffers,
+                                (buffers if self.cfg.static_buffers
+                                 else None), batch=nb)
+                            active = alive
+                            self._count_dispatch("shrinks")
                 xs = stager.get(i)
+                if len(active) < b:
+                    # staging always materializes the full-B chunk (the
+                    # stager may have pre-staged it before the shrink);
+                    # slice the survivors out device-side
+                    if serial:
+                        sel = (lambda a: a[active[0]])
+                    else:
+                        idx = jnp.asarray(active)
+                        sel = (lambda a: a[idx])
+                    xs = {kk: (v if kk == "n" else sel(v))
+                          for kk, v in xs.items()}
                 (s, z_hat), out = fn(params, buffers, s, z_hat, key_b, xs)
                 last = i + 1 == len(bounds)
-                yield [ForecastResult(
-                    lead_steps=np.arange(start, start + k),
-                    scores={n: out[n][j] for n in SCORE_NAMES if n in out},
-                    diagnostics=(jax.tree.map(lambda a, j=j: a[j],
-                                              out["diag"])
-                                 if diag is not None else None),
-                    final_state=s[j] if last else None,
-                    final_noise=z_hat[j] if last else None)
-                    for j in range(b)]
+                block: list = [None] * b
+                for p, j in enumerate(active):
+                    pick = ((lambda a: a) if serial
+                            else (lambda a, p=p: a[p]))
+                    block[j] = ForecastResult(
+                        lead_steps=np.arange(start, start + k),
+                        scores={n: pick(out[n])
+                                for n in SCORE_NAMES if n in out},
+                        diagnostics=(jax.tree.map(pick, out["diag"])
+                                     if diag is not None else None),
+                        final_state=pick(s) if last else None,
+                        final_noise=pick(z_hat) if last else None)
+                yield block
         finally:
             stager.close()
 

@@ -4,8 +4,11 @@ Starts the HTTP front end over the async scheduler: requests queue,
 engines stay warm per shape key (LRU-evicted under
 ``--engine-budget-mb``), executables are cached (optionally persisted),
 same-shape requests coalesce into one batched rollout
-(``--max-batch``/``--batch-window-ms``), and every response streams
-scores chunk-by-chunk as NDJSON.
+(``--max-batch``/``--batch-window-ms``), pickup is QoS-aware
+(request ``priority``/``deadline_ms``/``degrade`` fields;
+``--aging-ms``/``--degrade-margin-ms`` tune the policy -- see
+docs/serving.md#qos), and every response streams scores
+chunk-by-chunk as NDJSON.
 
   PYTHONPATH=src python -m repro.launch.service --config smoke --port 8771
 
@@ -81,6 +84,15 @@ def main(argv=None) -> None:
                     help="LRU-evict cold engines when the pool's "
                          "estimated bytes exceed this budget "
                          "(default: unbounded)")
+    ap.add_argument("--aging-ms", type=float, default=2000.0,
+                    help="a batch-priority request waiting this long is "
+                         "promoted to interactive at pickup "
+                         "(anti-starvation; 0 restores pure FIFO)")
+    ap.add_argument("--degrade-margin-ms", type=float, default=None,
+                    help="opted-in requests within this margin of their "
+                         "deadline serve the validated member-count "
+                         "floor instead of missing (default: within "
+                         "25%% of the total deadline budget)")
     ap.add_argument("--persist-dir", default=None,
                     help="persist compiled chunk programs (jax.export "
                          "blobs + XLA compilation cache) here")
@@ -124,7 +136,9 @@ def main(argv=None) -> None:
         max_batch=args.max_batch, batch_window_ms=args.batch_window_ms,
         engine_budget_bytes=(int(args.engine_budget_mb * 2**20)
                              if args.engine_budget_mb is not None
-                             else None))
+                             else None),
+        aging_ms=args.aging_ms,
+        degrade_margin_ms=args.degrade_margin_ms)
     if args.bundle:
         # Zero-cold-start boot: verify + install plans + pre-warm every
         # bundled engine from StableHLO blobs (readonly cache -- any

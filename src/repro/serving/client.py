@@ -108,7 +108,9 @@ def _spec_from_args(args: argparse.Namespace) -> RequestSpec:
         spectra=args.calibration, scored=not args.unscored,
         sample=args.sample, seed=args.seed,
         return_state=args.return_state,
-        coalesce=not args.no_coalesce)
+        coalesce=not args.no_coalesce,
+        priority=args.priority, deadline_ms=args.deadline_ms,
+        degrade=args.degrade)
 
 
 def main(argv=None) -> None:
@@ -141,6 +143,19 @@ def main(argv=None) -> None:
     ap.add_argument("--no-coalesce", action="store_true",
                     help="opt this request out of server-side batching "
                          "with queued same-shape requests")
+    ap.add_argument("--priority", default="batch",
+                    choices=["interactive", "batch"],
+                    help="QoS class: interactive requests are picked "
+                         "before batch ones (batch ages up, so it "
+                         "cannot starve)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="wall-clock budget from submit; the server "
+                         "sheds the request (error, reason=deadline) "
+                         "if it expires before pickup")
+    ap.add_argument("--degrade", action="store_true",
+                    help="opt in to graceful degradation: near the "
+                         "deadline the server may serve the validated "
+                         "member-count floor instead of missing")
     ap.add_argument("--timing-out", default=None,
                     help="save the timing/chunk report to this JSON file")
     args = ap.parse_args(argv)
@@ -160,12 +175,15 @@ def main(argv=None) -> None:
         if kind == "done":
             done = ev
         if kind == "start":
+            degraded = ("" if ev.get("degraded_members") is None else
+                        f" degraded_members={ev['degraded_members']}")
             print(f"[client] {ev['request_id']} accepted: "
                   f"queue={ev['queue_s']:.3f}s "
                   f"setup={ev.get('setup_s', 0.0):.3f}s "
                   f"compile={ev['compile_s']:.3f}s "
                   f"batch={ev.get('batch_size', 1)} "
-                  f"cache={[o['source'] for o in ev['cache']]}")
+                  f"cache={[o['source'] for o in ev['cache']]}"
+                  f"{degraded}")
         elif kind == "chunk":
             entry = {"index": ev["index"], "lead_steps": ev["lead_steps"],
                      "chunk_s": ev["chunk_s"],
@@ -179,7 +197,8 @@ def main(argv=None) -> None:
                         line += f"  {name}={v:.4f}"
                 print(f"{line}  ({time.time() - t0:.1f}s)")
         elif kind == "error":
-            raise transport.ServingError(ev["message"])
+            raise transport.ServingError(ev["message"],
+                                         reason=ev.get("reason"))
     if done is None:
         # close-delimited framing: a dead server is just EOF -- refuse
         # to write a bogus "success" timing report

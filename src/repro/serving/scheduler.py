@@ -58,6 +58,22 @@ class QueueFull(RuntimeError):
     """The scheduler's request queue is at capacity (HTTP 503)."""
 
 
+_SHUTDOWN = object()  # _pick_locked's "a close sentinel was consumed"
+
+
+def _latency_stats(samples) -> dict:
+    """p50/p95 of (queue_s, total_s) samples over the sliding window."""
+    if not samples:
+        return {"count": 0}
+    qs = np.asarray([s[0] for s in samples], dtype=np.float64)
+    ts = np.asarray([s[1] for s in samples], dtype=np.float64)
+    return {"count": len(samples),
+            "queue_s": {"p50": float(np.percentile(qs, 50)),
+                        "p95": float(np.percentile(qs, 95))},
+            "total_s": {"p50": float(np.percentile(ts, 50)),
+                        "p95": float(np.percentile(ts, 95))}}
+
+
 class KeyedBuilds:
     """Build-once-per-key registry with per-key build locks.
 
@@ -108,7 +124,11 @@ class EnginePool:
     Eviction only drops the pool's reference -- an in-flight rollout on
     an evicted engine holds its own reference and finishes normally;
     the next request for that key rebuilds and recompiles, reported as
-    an honest cache miss.
+    an honest cache miss.  Build locks are **stable across eviction**:
+    popping a key's lock while a builder holds it would let the next
+    request mint a fresh lock and build the same engine twice
+    concurrently.  A lock is a few hundred bytes against a GB-scale
+    engine, so the registry never shrinks.
     """
 
     def __init__(self, budget_bytes: int | None = None):
@@ -154,7 +174,11 @@ class EnginePool:
                 key = next(iter(self._engines))  # least recently used
                 total -= sizes[key]
                 del self._engines[key]
-                self._build_locks.pop(key, None)
+                # NOT popping _build_locks[key]: a thread inside
+                # get_or_build's critical section still holds that lock
+                # object, and dropping the registry entry would hand the
+                # next requester a fresh lock -- two concurrent builds
+                # (and compiles) of one engine.
                 self._evictions += 1
                 evicted += 1
         return evicted
@@ -224,18 +248,45 @@ class ModelPool:
 
 class ForecastStream:
     """Handle for one submitted request: a blocking iterator of
-    transport events, fed by the worker as chunks retire."""
+    transport events, fed by the worker as chunks retire.
+
+    QoS bookkeeping lives here too: ``deadline_at`` (absolute
+    ``perf_counter`` deadline, or None), ``serve_spec`` (what the
+    scheduler actually serves -- the submitted spec, unless the degrade
+    policy latched a smaller member count), ``degraded_members`` (set
+    iff degraded) and ``requeued`` (parked once to join the next batch
+    of its shape instead of rolling solo)."""
 
     def __init__(self, request_id: str, spec: RequestSpec):
         self.request_id = request_id
         self.spec = spec
+        self.serve_spec = spec
+        self.degraded_members: int | None = None
+        self.requeued = False
         self.submitted_at = time.perf_counter()
+        self.deadline_at = (self.submitted_at + spec.deadline_ms / 1e3
+                            if spec.deadline_ms is not None else None)
         self._q: queue.Queue = queue.Queue()
         self._cancelled = threading.Event()
+        self._terminal = False
+        self._term_lock = threading.Lock()
 
     def put(self, ev: dict) -> None:
         """Enqueue one transport event (called by the serving worker)."""
         self._q.put(ev)
+
+    def put_terminal(self, ev: dict) -> bool:
+        """Enqueue a terminal event at most once per stream: the first
+        caller wins (worker done/error, deadline shed, cancel-at-pickup
+        and shutdown unblocking all funnel through here), later callers
+        get False.  Guarantees ``events()``/``result()`` always unblock
+        and never see two terminals."""
+        with self._term_lock:
+            if self._terminal:
+                return False
+            self._terminal = True
+        self._q.put(ev)
+        return True
 
     def cancel(self) -> None:
         """Consumer went away: a solo rollout stops at the next chunk
@@ -262,18 +313,53 @@ class ForecastStream:
 
 
 class ForecastScheduler:
-    """Bounded worker pool over a FIFO queue of ``RequestSpec``s, with
-    same-shape request coalescing and engine-pool memory budgeting."""
+    """Bounded worker pool over a QoS-aware queue of ``RequestSpec``s,
+    with same-shape request coalescing and engine-pool memory budgeting.
+
+    The pickup policy (the QoS tier on top of PR 5's coalescing):
+
+    * **priority then FIFO** -- "interactive" requests are picked before
+      "batch" ones, FIFO within a class; a batch request that has waited
+      ``aging_ms`` is promoted, so batch traffic cannot starve;
+    * **deadline shed** -- a request whose ``deadline_ms`` expired while
+      queued is dropped at pickup with a terminal ``error`` event
+      (``reason: "deadline"``) instead of burning engine build, compile
+      and a full rollout;
+    * **graceful degradation** (opt-in via ``spec.degrade``) -- a
+      near-deadline request is re-aimed at ``spec.degraded_members()``
+      members (the validated floor) instead of missing; the served
+      member count is reported honestly in start/done events.  "Near"
+      means within ``degrade_margin_ms`` of the deadline, or within 25%
+      of the total budget when the margin is None;
+    * **batch re-forming** -- a coalescible straggler whose window ended
+      solo while a batch of its shape key is in flight parks once and
+      joins the *next* batch of that key instead of rolling alone;
+    * **cancellation shrink** -- when members of an in-flight batch
+      cancel and smaller-batch executables are already warm, remaining
+      chunks re-dispatch through the compiled smaller program
+      (``ForecastEngine.stream_batched(survivors=...)``); otherwise the
+      batch continues masked at full width, exactly as before.
+
+    None of this touches ``engine_key``/``batch_key``: QoS routes and
+    sheds traffic, it never fragments the compiled-program cache, and a
+    request served without shed/degrade is bit-identical to the pure
+    FIFO scheduler.
+    """
 
     def __init__(self, pool: ModelPool | None = None,
                  cache: ExecutableCache | None = None,
                  max_concurrency: int = 1, queue_size: int = 64,
                  max_batch: int = 1, batch_window_ms: float = 0.0,
-                 engine_budget_bytes: int | None = None):
+                 engine_budget_bytes: int | None = None,
+                 aging_ms: float = 2000.0,
+                 degrade_margin_ms: float | None = None,
+                 latency_window: int = 512):
         self.pool = pool if pool is not None else ModelPool()
         self.cache = cache if cache is not None else ExecutableCache()
         self.max_batch = max(1, max_batch)
         self.batch_window_ms = max(0.0, batch_window_ms)
+        self.aging_ms = max(0.0, aging_ms)
+        self.degrade_margin_ms = degrade_margin_ms
         self._queue_size = queue_size
         # pending requests + close sentinels (None), FIFO; guarded by
         # _cond's lock so coalescing workers can scoop matching streams
@@ -284,9 +370,26 @@ class ForecastScheduler:
         self._lock = threading.Lock()
         self._ids = itertools.count()
         self._closed = False
+        self._drained = False
         self._served = 0
         self._failed = 0
         self._batch_sizes: collections.Counter = collections.Counter()
+        # --- QoS accounting (all guarded by _lock) ---
+        # per-priority-class counters of admission-control outcomes
+        self._shed: collections.Counter = collections.Counter()
+        self._degraded: collections.Counter = collections.Counter()
+        self._requeued: collections.Counter = collections.Counter()
+        self._cancelled_queued: collections.Counter = collections.Counter()
+        self._batch_shrinks = 0
+        # sliding per-class latency window: (queue_s, total_s) samples
+        self._latency = {p: collections.deque(maxlen=max(1, latency_window))
+                         for p in ("interactive", "batch")}
+        # streams submitted but not yet terminal -- what a timed-out
+        # close() must unblock so no consumer hangs forever
+        self._open: set = set()
+        # in-flight coalesced batches per batch_key, for straggler
+        # re-forming (guarded by _cond: pick decisions read it)
+        self._inflight_keys: collections.Counter = collections.Counter()
         # warm-start provenance: set by WarmStartBundle.boot on a replica
         # booted from a bundle, surfaced as the "bundle" stats block
         self._bundle_info: dict | None = None
@@ -307,14 +410,29 @@ class ForecastScheduler:
         # popped and its consumer would block forever.
         with self._cond:
             if self._closed:
-                raise RuntimeError("scheduler is closed")
+                # distinct messages: mid-drain is "try again on another
+                # replica", fully closed is "this replica is gone" --
+                # both map to HTTP 503 in service.py
+                raise RuntimeError(
+                    "scheduler is closed" if self._drained else
+                    "scheduler is draining; not accepting new requests")
             if sum(1 for s in self._pending
                    if s is not None) >= self._queue_size:
                 raise QueueFull(
                     f"request queue full ({self._queue_size} pending)")
             self._pending.append(stream)
+            with self._lock:
+                self._open.add(stream)
             self._cond.notify_all()
         return stream
+
+    def _finish(self, stream: ForecastStream, ev: dict) -> bool:
+        """Push a terminal event (at most once per stream) and retire
+        the stream from the open-streams registry."""
+        delivered = stream.put_terminal(ev)
+        with self._lock:
+            self._open.discard(stream)
+        return delivered
 
     def warmup(self, spec: RequestSpec, batch: int | None = None) -> dict:
         """Build the engine and compile its executables without running a
@@ -375,13 +493,30 @@ class ForecastScheduler:
                        for k, v in sorted(self._batch_sizes.items())}
             bundle_info = (dict(self._bundle_info)
                            if self._bundle_info is not None else None)
+            qos = {
+                "shed": dict(self._shed),
+                "degraded": dict(self._degraded),
+                "requeued": dict(self._requeued),
+                "cancelled_queued": dict(self._cancelled_queued),
+                "batch_shrinks": self._batch_shrinks,
+                "aging_ms": self.aging_ms,
+                "degrade_margin_ms": self.degrade_margin_ms,
+                "latency": {p: _latency_stats(d)
+                            for p, d in self._latency.items()},
+            }
         with self._cond:
             queued = sum(1 for s in self._pending if s is not None)
+            depth = {"interactive": 0, "batch": 0}
+            for s in self._pending:
+                if s is not None:
+                    depth[s.spec.priority] += 1
+        qos["queue_depth"] = depth
         return {"queued": queued, "served": served,
                 "failed": failed, "workers": len(self._workers),
                 "max_batch": self.max_batch,
                 "batch_window_ms": self.batch_window_ms,
                 "batches": batches,
+                "qos": qos,
                 "engines": engines,
                 "pool": self._engines.stats(
                     engine_bytes=sum(sizes.values())),
@@ -389,7 +524,12 @@ class ForecastScheduler:
                 "bundle": bundle_info}
 
     def close(self, timeout: float = 30.0) -> None:
-        """Stop accepting requests, drain pending ones, join workers."""
+        """Stop accepting requests, drain pending ones, join workers.
+
+        On a drain timeout every still-open stream gets a terminal
+        ``error`` event (``reason: "shutdown"``) so blocked
+        ``events()``/``result()`` consumers always unblock -- a stuck
+        worker must never strand its clients."""
         with self._cond:
             if self._closed:
                 return
@@ -403,11 +543,22 @@ class ForecastScheduler:
             w.join(timeout=timeout)
         stuck = [w.name for w in self._workers if w.is_alive()]
         if stuck:
-            # daemon threads die with the process; say so instead of
-            # pretending the drain completed
+            # daemon threads die with the process; say so -- and unblock
+            # every consumer still waiting on a terminal event
             print(f"[scheduler] close() timed out after {timeout}s with "
-                  f"{len(stuck)} request(s) still running ({stuck}); "
-                  f"their streams will end without a terminal event")
+                  f"{len(stuck)} worker(s) still running ({stuck}); "
+                  f"terminating open streams with a shutdown error")
+            with self._lock:
+                open_streams = list(self._open)
+            for s in open_streams:
+                self._finish(s, {
+                    "event": "error", "request_id": s.request_id,
+                    "reason": "shutdown",
+                    "message": (f"scheduler close() timed out after "
+                                f"{timeout}s; stream terminated before "
+                                f"completion")})
+        with self._cond:
+            self._drained = True
 
     # ------------------------------------------------------------------
     def _get_engine(self, spec: RequestSpec
@@ -430,59 +581,212 @@ class ForecastScheduler:
 
     def _take_matching(self, batch: list[ForecastStream], key) -> None:
         """Move queued streams sharing ``key`` into ``batch`` (caller
-        holds ``_cond``; close sentinels and non-matching streams keep
-        their queue positions)."""
+        holds ``_cond``; close sentinels, cancelled streams and
+        non-matching streams keep their queue positions).  Parked
+        (re-queued) stragglers of the same key ARE takeable -- joining
+        the next batch of their shape is exactly why they parked."""
         matching = [s for s in self._pending
                     if s is not None and s.spec.coalesce
-                    and s.spec.batch_key() == key]
+                    and not s.cancelled
+                    and s.serve_spec.batch_key() == key]
         for s in matching[:self.max_batch - len(batch)]:
             self._pending.remove(s)
             batch.append(s)
 
-    def _next_batch(self) -> list[ForecastStream] | None:
-        """Block for the next request; coalesce queued same-shape
-        requests behind it (waiting up to ``batch_window_ms`` for the
-        batch to fill).  None means shutdown."""
+    # -- QoS admission control (all helpers assume _cond is held) ------
+    def _drop_cancelled_locked(self, s: ForecastStream) -> None:
+        """Satellite-1 fix: a consumer that went away while queued gets
+        a terminal done (cancelled, zero chunks) and **no rollout**."""
+        with self._lock:
+            self._cancelled_queued[s.spec.priority] += 1
+        self._finish(s, {"event": "done", "request_id": s.request_id,
+                         "cancelled": True})
+
+    def _shed_locked(self, s: ForecastStream) -> None:
+        """Deadline expired before pickup: terminal error with a
+        machine-readable reason, zero engine/compile/rollout work."""
+        with self._lock:
+            self._shed[s.spec.priority] += 1
+        self._finish(s, {
+            "event": "error", "request_id": s.request_id,
+            "reason": "deadline", "priority": s.spec.priority,
+            "message": (f"deadline_ms={s.spec.deadline_ms} expired "
+                        f"after {(time.perf_counter() - s.submitted_at) * 1e3:.0f}ms "
+                        f"in queue; request shed before rollout")})
+
+    def _degrade_at(self, s: ForecastStream) -> float | None:
+        """Absolute time at which the degrade policy latches for this
+        stream, or None when it never will."""
+        if not (s.spec.degrade and s.deadline_at is not None):
+            return None
+        if self.degrade_margin_ms is not None:
+            return s.deadline_at - self.degrade_margin_ms / 1e3
+        return s.deadline_at - 0.25 * (s.spec.deadline_ms / 1e3)
+
+    def _sweep_locked(self) -> None:
+        """Apply admission control to the queue: drop cancelled streams,
+        shed expired deadlines, latch degrades near deadlines."""
+        now = time.perf_counter()
+        for s in list(self._pending):
+            if s is None:
+                continue
+            if s.cancelled:
+                self._pending.remove(s)
+                self._drop_cancelled_locked(s)
+                continue
+            if s.deadline_at is not None and now >= s.deadline_at:
+                self._pending.remove(s)
+                self._shed_locked(s)
+                continue
+            da = self._degrade_at(s)
+            if (da is not None and s.degraded_members is None
+                    and now >= da):
+                dm = s.spec.degraded_members()
+                if dm < s.spec.members:
+                    s.degraded_members = dm
+                    s.serve_spec = dataclasses.replace(s.spec, members=dm)
+                    with self._lock:
+                        self._degraded[s.spec.priority] += 1
+
+    def _pick_locked(self):
+        """Priority-then-FIFO pick with aging.  Class 0 is interactive
+        plus any batch request that has waited >= ``aging_ms`` (so batch
+        traffic cannot starve); FIFO within a class.  Parked stragglers
+        stay skipped while a batch of their shape is in flight.  Returns
+        a stream, ``_SHUTDOWN`` (a close sentinel was consumed), or None
+        (nothing pickable right now)."""
+        now = time.perf_counter()
+        best, best_class = None, None
+        has_stream = False
+        for s in self._pending:
+            if s is None:
+                continue
+            has_stream = True
+            if (s.requeued and not self._closed
+                    and self._inflight_keys[s.serve_spec.batch_key()] > 0):
+                continue  # parked: the next batch of its key scoops it
+            aged = (now - s.submitted_at) * 1e3 >= self.aging_ms
+            cls = 0 if (s.spec.priority == "interactive" or aged) else 1
+            if best is None or cls < best_class:
+                best, best_class = s, cls
+                if cls == 0:
+                    break  # first class-0 in FIFO order wins outright
+        if best is not None:
+            self._pending.remove(best)
+            return best
+        if not has_stream and self._pending:
+            self._pending.popleft()  # consume one close sentinel
+            return _SHUTDOWN
+        return None
+
+    def _next_wake_locked(self) -> float | None:
+        """Seconds until the earliest queued deadline/degrade threshold
+        (so sweeps run on time without busy-waiting), or None."""
+        now = time.perf_counter()
+        wake = None
+        for s in self._pending:
+            if s is None:
+                continue
+            for t in (s.deadline_at,
+                      (self._degrade_at(s)
+                       if s.degraded_members is None else None)):
+                if t is not None:
+                    dt = max(0.0, t - now)
+                    wake = dt if wake is None else min(wake, dt)
+        return wake
+
+    def _next_batch(self) -> tuple[list[ForecastStream], object] | None:
+        """Block for the next serveable request; coalesce queued
+        same-shape requests behind it (waiting up to ``batch_window_ms``
+        for the batch to fill).  Returns ``(batch, batch_key)`` with the
+        key's in-flight count already incremented (the worker must
+        decrement it), or None on shutdown."""
         with self._cond:
-            while not self._pending:
-                self._cond.wait()
-            head = self._pending.popleft()
-            if head is None:
-                return None
-            batch = [head]
-            if self.max_batch > 1 and head.spec.coalesce:
-                key = head.spec.batch_key()
-                self._take_matching(batch, key)
-                deadline = time.monotonic() + self.batch_window_ms / 1e3
-                while len(batch) < self.max_batch:
-                    remaining = deadline - time.monotonic()
-                    if remaining <= 0:
-                        break
-                    self._cond.wait(timeout=remaining)
+            while True:
+                head = None
+                while head is None:
+                    self._sweep_locked()
+                    head = self._pick_locked()
+                    if head is _SHUTDOWN:
+                        return None
+                    if head is None:
+                        self._cond.wait(timeout=self._next_wake_locked())
+                batch = [head]
+                key = head.serve_spec.batch_key()
+                if self.max_batch > 1 and head.spec.coalesce:
                     self._take_matching(batch, key)
-            return batch
+                    deadline = time.monotonic() + self.batch_window_ms / 1e3
+                    while len(batch) < self.max_batch:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            break
+                        self._cond.wait(timeout=remaining)
+                        self._sweep_locked()
+                        self._take_matching(batch, key)
+                    # batch re-forming: a solo straggler of a shape with
+                    # a batch already in flight parks once and joins the
+                    # *next* batch of that key instead of rolling alone
+                    if (len(batch) == 1 and not head.requeued
+                            and not head.cancelled
+                            and head.spec.deadline_ms is None
+                            and not self._closed
+                            and self._inflight_keys[key] > 0):
+                        head.requeued = True
+                        with self._lock:
+                            self._requeued[head.spec.priority] += 1
+                        self._pending.append(head)
+                        continue
+                # final admission check: the window may have outlived a
+                # member's consumer or deadline
+                now = time.perf_counter()
+                kept = []
+                for s in batch:
+                    if s.cancelled:
+                        self._drop_cancelled_locked(s)
+                    elif s.deadline_at is not None and now >= s.deadline_at:
+                        self._shed_locked(s)
+                    else:
+                        kept.append(s)
+                if not kept:
+                    continue
+                self._inflight_keys[key] += 1
+                return kept, key
 
     def _worker(self) -> None:
         while True:
-            batch = self._next_batch()
-            if batch is None:
+            item = self._next_batch()
+            if item is None:
                 return
+            batch, key = item
             try:
-                self._serve_batch(batch)
-                with self._lock:
-                    self._served += len(batch)
-            except Exception as e:  # noqa: BLE001 -- report, keep serving
-                with self._lock:
-                    self._failed += len(batch)
-                for stream in batch:
-                    stream.put({"event": "error",
-                                "request_id": stream.request_id,
-                                "message": f"{type(e).__name__}: {e}"})
+                try:
+                    self._serve_batch(batch)
+                    with self._lock:
+                        self._served += len(batch)
+                except Exception as e:  # noqa: BLE001 -- keep serving
+                    with self._lock:
+                        self._failed += len(batch)
+                    for stream in batch:
+                        self._finish(
+                            stream,
+                            {"event": "error",
+                             "request_id": stream.request_id,
+                             "message": f"{type(e).__name__}: {e}"})
+            finally:
+                with self._cond:
+                    self._inflight_keys[key] -= 1
+                    if self._inflight_keys[key] <= 0:
+                        del self._inflight_keys[key]
+                    # parked stragglers of this key become pickable
+                    self._cond.notify_all()
 
     def _serve_batch(self, streams: list[ForecastStream]) -> None:
         """Serve one coalesced batch (possibly of size 1) through a
-        single rollout, demuxing per-request events onto each stream."""
-        spec = streams[0].spec
+        single rollout, demuxing per-request events onto each stream.
+        Runs each stream's ``serve_spec`` -- identical to the submitted
+        spec unless the degrade policy latched a smaller member count,
+        which start/done events then report as ``degraded_members``."""
+        spec = streams[0].serve_spec
         b = len(streams)
         t_start = time.perf_counter()
         # setup_s is everything between worker pickup and rollout start
@@ -503,16 +807,21 @@ class ForecastScheduler:
             self._batch_sizes[b] += 1
         setup_s = (time.perf_counter() - t_start) - warm["compile_s"]
         for i, stream in enumerate(streams):
-            stream.put({"event": "start", "request_id": stream.request_id,
-                        "spec": stream.spec.to_dict(),
-                        "queue_s": t_start - stream.submitted_at,
-                        "setup_s": setup_s,
-                        "compile_s": warm["compile_s"],
-                        "batch_size": b, "batch_index": i,
-                        "cache": warm["outcomes"]})
+            start = {"event": "start", "request_id": stream.request_id,
+                     "spec": stream.spec.to_dict(),
+                     "queue_s": t_start - stream.submitted_at,
+                     "setup_s": setup_s,
+                     "compile_s": warm["compile_s"],
+                     "batch_size": b, "batch_index": i,
+                     "cache": warm["outcomes"]}
+            if stream.degraded_members is not None:
+                # honest reporting: the consumer learns up front it is
+                # getting fewer members than it asked for
+                start["degraded_members"] = stream.degraded_members
+            stream.put(start)
         ds = bundle.ds
-        state0s = [ds.state(s.spec.sample, 0) for s in streams]
-        keys = [jax.random.PRNGKey(s.spec.seed) for s in streams]
+        state0s = [ds.state(s.serve_spec.sample, 0) for s in streams]
+        keys = [jax.random.PRNGKey(s.serve_spec.seed) for s in streams]
         # one shared aux source (and one truth source per distinct
         # sample): the batched stager stages each distinct source once
         # and broadcasts device-side, so B coalesced members cost one
@@ -532,13 +841,20 @@ class ForecastScheduler:
                 keys[0], steps=spec.lead_steps,
                 truth=truths[0] if truths is not None else None))
         else:
+            # cancellation-aware shrink: the engine polls the surviving
+            # (non-cancelled) member indices at every chunk boundary and
+            # re-dispatches through an already-compiled smaller-batch
+            # executable when one is warm (masked full-width otherwise)
             blocks = engine.stream_batched(
                 bundle.params, bundle.buffers, state0s, auxs, keys,
-                steps=spec.lead_steps, truths=truths)
+                steps=spec.lead_steps, truths=truths,
+                survivors=lambda: [j for j, st in enumerate(streams)
+                                   if not st.cancelled])
 
         chunk_s: list[list[float]] = [[] for _ in streams]
         finals: list = [None] * b
         last_ready = [run_t0]
+        shrunk = [False]
 
         def fetch_and_emit(index: int, block_list) -> None:
             # Runs on the dedicated fetch thread, in chunk order: the
@@ -548,7 +864,13 @@ class ForecastScheduler:
             # scores stream out.
             evs = []
             for j, (stream, blk) in enumerate(zip(streams, block_list)):
-                if stream.cancelled:
+                if stream.cancelled or blk is None:
+                    # blk is None exactly when the rollout shrank away
+                    # from this (cancelled) member's slot
+                    if blk is None and not shrunk[0]:
+                        shrunk[0] = True
+                        with self._lock:
+                            self._batch_shrinks += 1
                     continue
                 ev = transport.chunk_event(stream.request_id, index, blk)
                 if blk.final_state is not None and stream.spec.return_state:
@@ -573,19 +895,29 @@ class ForecastScheduler:
                 f.result()  # propagate fetch/encode failures
         run_s = time.perf_counter() - run_t0
         for j, stream in enumerate(streams):
+            queue_s = t_start - stream.submitted_at
+            total_s = time.perf_counter() - stream.submitted_at
             done = {
                 "event": "done", "request_id": stream.request_id,
                 "cancelled": stream.cancelled,
-                "timing": {"queue_s": t_start - stream.submitted_at,
+                "timing": {"queue_s": queue_s,
                            "setup_s": setup_s,
                            "compile_s": warm["compile_s"],
                            "run_s": run_s,
-                           "total_s": (time.perf_counter()
-                                       - stream.submitted_at),
+                           "total_s": total_s,
                            "batch_size": b,
                            "chunk_s": chunk_s[j]},
                 "cache": {"hits": warm["hits"], "misses": warm["misses"]},
             }
+            if stream.degraded_members is not None:
+                done["degraded_members"] = stream.degraded_members
             if finals[j] is not None:
                 done["final_state"] = transport.encode_array(finals[j])
-            stream.put(done)
+            self._finish(stream, done)
+            if not stream.cancelled:
+                # per-class latency SLO samples (sliding window); shed
+                # and cancelled requests never enter -- these are the
+                # latencies of requests actually served
+                with self._lock:
+                    self._latency[stream.spec.priority].append(
+                        (queue_s, total_s))

@@ -2,13 +2,20 @@
 
 Routes:
 
-* ``POST /v1/forecast`` -- body is a ``RequestSpec`` JSON object.
+* ``POST /v1/forecast`` -- body is a ``RequestSpec`` JSON object
+  (including the QoS fields ``priority``/``deadline_ms``/``degrade``).
   Responds 200 with an ``application/x-ndjson`` stream (see
   ``repro.serving.transport`` for the event grammar), 400 on an invalid
-  spec, 503 when the request queue is full.
+  spec, 503 when the request queue is full or the scheduler is
+  draining.  A request whose deadline expires while queued still gets a
+  200 stream -- its single event is the terminal ``error`` with
+  ``reason: "deadline"`` (admission control is part of the stream, not
+  the HTTP status).
 * ``GET /v1/stats``     -- scheduler + executable-cache statistics,
-  including the ``bundle`` block (warm-start provenance) on replicas
-  booted from a warm-start bundle (see ``repro.serving.bundle``).
+  including the ``qos`` block (per-class queue depth, shed/degraded/
+  requeued counters, p50/p95 latency percentiles) and the ``bundle``
+  block (warm-start provenance) on replicas booted from a warm-start
+  bundle (see ``repro.serving.bundle``).
 * ``GET /healthz``      -- liveness; includes ``bundle_id`` when the
   replica booted from a bundle.
 

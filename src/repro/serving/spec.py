@@ -13,6 +13,7 @@ import dataclasses
 
 PRECISIONS = ("float32", "bfloat16")
 KERNEL_MODES = ("auto", "reference", "pallas")
+PRIORITIES = ("interactive", "batch")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +40,16 @@ class RequestSpec:
     vmap of the serial one, bit-identical per request -- but a member
     does wait up to the server's ``batch_window_ms`` for companions;
     ``coalesce: false`` opts a latency-critical request out.
+
+    **QoS fields** -- ``priority`` ("interactive" beats "batch" at
+    pickup, subject to the scheduler's aging knob), ``deadline_ms``
+    (wall-clock budget from submit; an expired request is shed with a
+    terminal ``error`` carrying ``reason: "deadline"`` instead of
+    burning a rollout) and ``degrade`` (opt-in: near the deadline the
+    scheduler may serve ``degraded_members()`` members instead of
+    missing it, reported honestly in start/done events).  None of the
+    three enters ``engine_key``/``batch_key`` -- QoS must route traffic,
+    never fragment the compiled-program cache.
     """
 
     config: str = "smoke"
@@ -57,6 +68,9 @@ class RequestSpec:
     seed: int = 7
     return_state: bool = False
     coalesce: bool = True
+    priority: str = "batch"
+    deadline_ms: float | None = None
+    degrade: bool = False
 
     @classmethod
     def from_dict(cls, d: dict) -> "RequestSpec":
@@ -112,11 +126,27 @@ class RequestSpec:
         per-member inputs of the shared batched program."""
         return (self.engine_key(), self.lead_steps, self.scored)
 
+    def degraded_members(self) -> int:
+        """The validated floor of the member count -- what an opted-in
+        near-deadline request is served with instead of missing.  The
+        smallest count >= 2 that still passes the perturbation rules
+        (centered noise needs an even count, ensemble transform needs
+        enough independent draws); >= 2 keeps the forecast a real
+        ensemble, so scores stay probabilistic.  Falls back to the
+        requested count when nothing smaller validates."""
+        from repro.inference import perturbations as perturblib
+        pcfg = self.perturbation_config()
+        for m in range(2, self.members):
+            if not perturblib.validate_member_count(m, centered=True,
+                                                    cfg=pcfg):
+                return m
+        return self.members
+
     _INT_FIELDS = ("members", "lead_steps", "lead_chunk", "bred_cycles",
                    "sample", "seed")
     _BOOL_FIELDS = ("ensemble_transform", "spectra", "scored",
-                    "return_state", "coalesce")
-    _STR_FIELDS = ("config", "precision", "perturb", "kernels")
+                    "return_state", "coalesce", "degrade")
+    _STR_FIELDS = ("config", "precision", "perturb", "kernels", "priority")
 
     def _type_problems(self) -> list[str]:
         """JSON is typed; the spec must be too -- members=2.0 or
@@ -137,6 +167,11 @@ class RequestSpec:
         v = self.perturb_amplitude
         if isinstance(v, bool) or not isinstance(v, (int, float)):
             problems.append(f"perturb_amplitude must be a number, got {v!r}")
+        v = self.deadline_ms
+        if v is not None and (isinstance(v, bool)
+                              or not isinstance(v, (int, float))):
+            problems.append(
+                f"deadline_ms must be a number or null, got {v!r}")
         return problems
 
     def validate(self) -> None:
@@ -163,6 +198,13 @@ class RequestSpec:
             problems.append(
                 f"kernels must be one of {KERNEL_MODES}, "
                 f"got {self.kernels!r}")
+        if self.priority not in PRIORITIES:
+            problems.append(
+                f"priority must be one of {PRIORITIES}, "
+                f"got {self.priority!r}")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            problems.append(
+                f"deadline_ms must be positive, got {self.deadline_ms}")
         try:
             pcfg = self.perturbation_config()
         except ValueError as e:

@@ -13,8 +13,15 @@ line, emitted in order:
   in-scan ``scores`` for those leads and ``chunk_s`` wall time.  Chunks
   arrive as the scan retires them, not at rollout end.
 * ``done`` -- rollout finished: the timing summary, per-request cache
-  totals, and (when requested) the final ensemble state.
-* ``error`` -- terminal failure; ``message`` says why.
+  totals, and (when requested) the final ensemble state.  A request
+  cancelled while still queued gets a zero-chunk ``done`` with
+  ``cancelled: true`` (no start event, no rollout); a request served
+  under the degrade policy carries ``degraded_members``, the member
+  count actually rolled.
+* ``error`` -- terminal failure; ``message`` says why.  Admission-
+  control errors additionally carry a machine-readable ``reason``:
+  ``"deadline"`` (shed unserved after its deadline expired) or
+  ``"shutdown"`` (scheduler close() timed out with the stream open).
 
 Scores travel as plain JSON numbers: float32 -> float64 is exact,
 ``json`` emits the shortest round-tripping decimal, and the float64 ->
@@ -44,7 +51,13 @@ TERMINAL_EVENTS = ("done", "error")
 
 
 class ServingError(RuntimeError):
-    """A request failed server-side (validation or mid-rollout)."""
+    """A request failed server-side (validation, admission control or
+    mid-rollout).  ``reason`` is the error event's machine-readable
+    reason when it carried one ("deadline", "shutdown"), else None."""
+
+    def __init__(self, message: str, reason: str | None = None):
+        super().__init__(message)
+        self.reason = reason
 
 
 def encode_array(a) -> dict:
@@ -133,6 +146,9 @@ class ServedForecast:
     #: served solo) and this request's slot in that batch
     batch_size: int = 1
     batch_index: int = 0
+    #: member count actually served when the scheduler's degrade policy
+    #: traded ensemble size for the deadline (None = served as asked)
+    degraded_members: int | None = None
 
 
 def collect(events: Iterable[dict]) -> ServedForecast:
@@ -154,6 +170,7 @@ def collect(events: Iterable[dict]) -> ServedForecast:
     done = False
     cancelled = False
     batch_size, batch_index = 1, 0
+    degraded_members = None
     for ev in events:
         kind = ev.get("event")
         if kind == "start":
@@ -161,6 +178,8 @@ def collect(events: Iterable[dict]) -> ServedForecast:
             spec = ev.get("spec", {})
             batch_size = int(ev.get("batch_size", 1))
             batch_index = int(ev.get("batch_index", 0))
+            if ev.get("degraded_members") is not None:
+                degraded_members = int(ev["degraded_members"])
         elif kind == "chunk":
             leads.extend(ev["lead_steps"])
             for name, rows in ev["scores"].items():
@@ -173,10 +192,17 @@ def collect(events: Iterable[dict]) -> ServedForecast:
             cancelled = bool(ev.get("cancelled", False))
             timing = ev.get("timing", {})
             cache = ev.get("cache", {})
+            if not request_id:
+                # a cancel-at-pickup done is the stream's only event
+                # (zero chunks, no start); still identify the request
+                request_id = ev.get("request_id", "")
+            if ev.get("degraded_members") is not None:
+                degraded_members = int(ev["degraded_members"])
             if "final_state" in ev:
                 final_state = decode_array(ev["final_state"])
         elif kind == "error":
-            raise ServingError(ev.get("message", "unknown serving error"))
+            raise ServingError(ev.get("message", "unknown serving error"),
+                               reason=ev.get("reason"))
     if not done:
         raise ServingError(
             f"stream ended after {len(chunks)} chunk(s) without a "
@@ -186,4 +212,5 @@ def collect(events: Iterable[dict]) -> ServedForecast:
                           lead_steps=np.asarray(leads), scores=scores,
                           timing=timing, cache=cache, chunks=chunks,
                           final_state=final_state, cancelled=cancelled,
-                          batch_size=batch_size, batch_index=batch_index)
+                          batch_size=batch_size, batch_index=batch_index,
+                          degraded_members=degraded_members)

@@ -1,0 +1,519 @@
+"""Tests for the scheduler's QoS tier (ISSUE 7).
+
+The load-bearing guarantees:
+
+* ``priority``/``deadline_ms``/``degrade`` ride the wire contract but
+  never change ``engine_key``/``batch_key`` or per-request numerics --
+  a request that meets its deadline is bit-identical to the pure-FIFO
+  scheduler;
+* pickup is priority-then-FIFO with aging (batch traffic cannot
+  starve); expired deadlines are shed at pickup with a machine-readable
+  ``reason: "deadline"`` and **zero rollout work**; opted-in
+  near-deadline requests degrade to the validated member-count floor,
+  reported honestly;
+* a solo straggler of a shape with a batch in flight parks once and
+  joins the *next* batch of that key; cancelled members of an in-flight
+  batch shrink the rollout onto an already-compiled smaller-batch
+  executable when one is warm;
+* the request-lifecycle bugfixes hold: cancel-while-queued runs zero
+  rollouts, a timed-out ``close()`` unblocks every consumer with a
+  terminal event, and engine builds never race evictions.
+"""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.inference import ForecastEngine
+from repro.inference import perturbations as perturblib
+from repro.serving import transport
+from repro.serving.cache import ExecutableCache
+from repro.serving.scheduler import (EnginePool, ForecastScheduler,
+                                     ModelPool, RequestSpec)
+
+SPEC = RequestSpec(config="smoke", members=2, lead_steps=2, lead_chunk=2,
+                   scored=True)
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return ModelPool()
+
+
+class _WarmGate:
+    """Instance-level wrap of ``sched.cache.warm_engine`` that blocks
+    serving at a deterministic point (after pickup, before any compile
+    or rollout), so tests can stage queue states without sleeps."""
+
+    def __init__(self, sched, block_when=None):
+        self.entered = threading.Event()
+        self.release = threading.Event()
+        self.abort = False
+        self._block_when = block_when  # fn(args, kwargs) -> bool
+        self._orig = sched.cache.warm_engine
+        sched.cache.warm_engine = self._wrapped
+
+    def _wrapped(self, *a, **k):
+        if self._block_when is None or self._block_when(a, k):
+            self.entered.set()
+            assert self.release.wait(timeout=60), "gate never released"
+            if self.abort:
+                raise RuntimeError("aborted by test gate")
+        return self._orig(*a, **k)
+
+
+def _record_serve_order(sched):
+    """Wrap ``_serve_batch`` to record pickup order (request ids)."""
+    order = []
+    orig = sched._serve_batch
+
+    def wrapped(streams):
+        order.extend(s.request_id for s in streams)
+        return orig(streams)
+
+    sched._serve_batch = wrapped
+    return order
+
+
+class TestQoSSpec:
+    def test_qos_fields_validate(self):
+        RequestSpec(**{**SPEC.to_dict(), "priority": "interactive",
+                       "deadline_ms": 250.0, "degrade": True}).validate()
+        with pytest.raises(ValueError, match="priority must be one of"):
+            RequestSpec(**{**SPEC.to_dict(),
+                           "priority": "urgent"}).validate()
+        with pytest.raises(ValueError, match="deadline_ms must be"):
+            RequestSpec(**{**SPEC.to_dict(),
+                           "deadline_ms": "soon"}).validate()
+        with pytest.raises(ValueError, match="deadline_ms must be"):
+            RequestSpec(**{**SPEC.to_dict(),
+                           "deadline_ms": -5}).validate()
+        with pytest.raises(ValueError, match="degrade must be a boolean"):
+            RequestSpec(**{**SPEC.to_dict(), "degrade": 1}).validate()
+
+    def test_qos_fields_ride_the_wire_contract(self):
+        d = {**SPEC.to_dict(), "priority": "interactive",
+             "deadline_ms": 125.5, "degrade": True}
+        spec = RequestSpec.from_dict(d)
+        assert spec.priority == "interactive"
+        assert spec.deadline_ms == 125.5
+        assert spec.degrade is True
+        assert spec.to_dict() == d
+
+    def test_qos_fields_never_change_compiled_program_keys(self):
+        base = SPEC
+        qos = RequestSpec(**{**SPEC.to_dict(), "priority": "interactive",
+                             "deadline_ms": 50.0, "degrade": True})
+        # the whole point: QoS routes traffic, it must not fragment the
+        # executable cache
+        assert qos.engine_key() == base.engine_key()
+        assert qos.batch_key() == base.batch_key()
+
+    def test_degraded_members_is_validated_floor(self):
+        spec = RequestSpec(**{**SPEC.to_dict(), "members": 8})
+        dm = spec.degraded_members()
+        assert 2 <= dm < spec.members
+        assert perturblib.validate_member_count(
+            dm, centered=True, cfg=spec.perturbation_config()) == []
+        # ensemble transform needs 4 antithetic members: the floor obeys
+        et = RequestSpec(**{**SPEC.to_dict(), "members": 8,
+                            "perturb": "bred",
+                            "ensemble_transform": True})
+        dm_et = et.degraded_members()
+        assert perturblib.validate_member_count(
+            dm_et, centered=True, cfg=et.perturbation_config()) == []
+        assert dm_et >= 4
+        # nothing smaller validates -> serve what was asked
+        assert RequestSpec(**{**SPEC.to_dict(),
+                              "members": 2}).degraded_members() == 2
+
+
+class TestPriorityAndAdmission:
+    """One gated scheduler session covers priority-then-FIFO pickup,
+    deadline shed, cancel-while-queued and the no-QoS bit-identity of
+    served requests."""
+
+    @pytest.fixture(scope="class")
+    def qsched(self, pool):
+        # aging disabled so pure priority ordering is observable
+        s = ForecastScheduler(pool=pool, cache=ExecutableCache(),
+                              max_concurrency=1, aging_ms=1e9)
+        yield s
+        s.close()
+
+    @pytest.fixture(scope="class")
+    def session(self, qsched):
+        """Plug the single worker, stage a mixed queue, release, and
+        hand the tests the observed outcomes."""
+        order = _record_serve_order(qsched)
+        gate = _WarmGate(qsched)
+        plug = qsched.submit(
+            RequestSpec(**{**SPEC.to_dict(), "seed": 100}))
+        assert gate.entered.wait(timeout=60)
+        b1 = qsched.submit(RequestSpec(**{**SPEC.to_dict(), "seed": 101}))
+        dead = qsched.submit(RequestSpec(
+            **{**SPEC.to_dict(), "seed": 102, "deadline_ms": 30.0}))
+        c1 = qsched.submit(RequestSpec(**{**SPEC.to_dict(), "seed": 103}))
+        c1.cancel()
+        i1 = qsched.submit(RequestSpec(
+            **{**SPEC.to_dict(), "seed": 104, "priority": "interactive"}))
+        time.sleep(0.1)  # let dead's 30ms deadline expire while queued
+        gate.release.set()
+        results = {}
+        for name, st in (("plug", plug), ("b1", b1), ("i1", i1),
+                         ("c1", c1)):
+            results[name] = st.result()
+        with pytest.raises(transport.ServingError) as err:
+            dead.result()
+        return {"order": order, "results": results, "dead_err": err.value,
+                "streams": {"plug": plug, "b1": b1, "dead": dead,
+                            "c1": c1, "i1": i1}}
+
+    def test_interactive_beats_batch_fifo_within_class(self, session):
+        st = session["streams"]
+        assert session["order"] == [st["plug"].request_id,
+                                    st["i1"].request_id,
+                                    st["b1"].request_id]
+
+    def test_expired_deadline_shed_with_reason_and_no_rollout(
+            self, session, qsched):
+        err = session["dead_err"]
+        assert err.reason == "deadline"
+        assert "shed before rollout" in str(err)
+        # zero rollout work: the shed request never reached a worker
+        assert session["streams"]["dead"].request_id not in session["order"]
+        assert qsched.stats()["qos"]["shed"] == {"batch": 1}
+
+    def test_cancel_while_queued_runs_zero_rollouts(self, session, qsched):
+        res = session["results"]["c1"]
+        assert res.cancelled
+        assert res.chunks == [] and res.scores == {}
+        assert res.request_id == session["streams"]["c1"].request_id
+        assert session["streams"]["c1"].request_id not in session["order"]
+        assert qsched.stats()["qos"]["cancelled_queued"] == {"batch": 1}
+
+    def test_latency_percentiles_per_class(self, session, qsched):
+        lat = qsched.stats()["qos"]["latency"]
+        assert lat["interactive"]["count"] == 1
+        assert lat["batch"]["count"] == 2  # plug + b1; shed/cancel excluded
+        for cls in ("interactive", "batch"):
+            for metric in ("queue_s", "total_s"):
+                block = lat[cls][metric]
+                assert block["p95"] >= block["p50"] >= 0.0
+
+    def test_queue_depth_per_class_empty_after_drain(self, session, qsched):
+        assert qsched.stats()["qos"]["queue_depth"] == {
+            "interactive": 0, "batch": 0}
+
+    def test_qos_fields_leave_numerics_bit_identical(self, session, qsched):
+        # a request that meets its (generous) deadline must be served
+        # exactly like the no-QoS scheduler would serve it
+        plain = qsched.submit(
+            RequestSpec(**{**SPEC.to_dict(), "seed": 42})).result()
+        qos = qsched.submit(RequestSpec(
+            **{**SPEC.to_dict(), "seed": 42, "priority": "interactive",
+               "deadline_ms": 600000.0, "degrade": True})).result()
+        assert qos.degraded_members is None  # nowhere near the deadline
+        assert set(plain.scores) == set(qos.scores)
+        for name, arr in plain.scores.items():
+            np.testing.assert_array_equal(qos.scores[name], arr,
+                                          err_msg=name)
+
+
+class TestAging:
+    def test_aged_batch_request_beats_newer_interactive(self, pool):
+        sched = ForecastScheduler(pool=pool, cache=ExecutableCache(),
+                                  max_concurrency=1, aging_ms=200.0)
+        try:
+            order = _record_serve_order(sched)
+            gate = _WarmGate(sched)
+            plug = sched.submit(
+                RequestSpec(**{**SPEC.to_dict(), "seed": 200}))
+            assert gate.entered.wait(timeout=60)
+            b1 = sched.submit(
+                RequestSpec(**{**SPEC.to_dict(), "seed": 201}))
+            time.sleep(0.3)  # b1 crosses aging_ms while queued
+            i1 = sched.submit(RequestSpec(
+                **{**SPEC.to_dict(), "seed": 202,
+                   "priority": "interactive"}))
+            gate.release.set()
+            for st in (plug, b1, i1):
+                st.result()
+            # the aged batch request was promoted: FIFO within class 0
+            assert order == [plug.request_id, b1.request_id,
+                             i1.request_id]
+        finally:
+            sched.close()
+
+
+class TestDegrade:
+    def test_near_deadline_degrades_to_validated_floor(self, pool):
+        # an absolute margin wider than the deadline => the degrade
+        # policy latches at first pickup, deterministically
+        sched = ForecastScheduler(pool=pool, cache=ExecutableCache(),
+                                  max_concurrency=1,
+                                  degrade_margin_ms=1e9)
+        try:
+            spec = RequestSpec(**{**SPEC.to_dict(), "members": 4,
+                                  "degrade": True,
+                                  "deadline_ms": 600000.0})
+            res = sched.submit(spec).result()
+            assert res.degraded_members == 2
+            assert perturblib.validate_member_count(
+                res.degraded_members, centered=True,
+                cfg=spec.perturbation_config()) == []
+            # the rollout really ran with 2 members: rank histogram has
+            # E+1 = 3 bins, and only the members=2 engine was built
+            assert res.scores["rank_hist"].shape[-1] == 3
+            keys = set(sched._engines.snapshot())
+            assert {k[1].members for k in keys} == {2}
+            assert sched.stats()["qos"]["degraded"] == {"batch": 1}
+        finally:
+            sched.close()
+
+    def test_no_degrade_without_opt_in(self, pool):
+        sched = ForecastScheduler(pool=pool, cache=ExecutableCache(),
+                                  max_concurrency=1,
+                                  degrade_margin_ms=1e9)
+        try:
+            spec = RequestSpec(**{**SPEC.to_dict(), "members": 4,
+                                  "deadline_ms": 600000.0})
+            res = sched.submit(spec).result()
+            assert res.degraded_members is None
+            assert res.scores["rank_hist"].shape[-1] == 5
+        finally:
+            sched.close()
+
+
+class TestBatchReforming:
+    def test_straggler_joins_next_batch_of_its_shape(self, pool):
+        sched = ForecastScheduler(pool=pool, cache=ExecutableCache(),
+                                  max_concurrency=1, max_batch=2,
+                                  batch_window_ms=50.0)
+        try:
+            sched.warmup(SPEC)
+            sched.warmup(SPEC, batch=2)
+            key = SPEC.batch_key()
+            # stage an in-flight batch of this shape key
+            with sched._cond:
+                sched._inflight_keys[key] += 1
+            r3 = sched.submit(RequestSpec(**{**SPEC.to_dict(),
+                                             "seed": 301}))
+            deadline = time.time() + 10
+            while (sched.stats()["qos"]["requeued"].get("batch", 0) < 1
+                   and time.time() < deadline):
+                time.sleep(0.02)
+            assert sched.stats()["qos"]["requeued"] == {"batch": 1}
+            # the straggler parked instead of rolling solo...
+            assert sched.stats()["batches"] == {}
+            # ...and joins the next batch of its key
+            r4 = sched.submit(RequestSpec(**{**SPEC.to_dict(),
+                                             "seed": 302}))
+            res3, res4 = r3.result(), r4.result()
+            assert res3.batch_size == 2 and res4.batch_size == 2
+            assert sched.stats()["batches"] == {"2": 1}
+        finally:
+            with sched._cond:
+                sched._inflight_keys.pop(key, None)
+                sched._cond.notify_all()
+            sched.close()
+
+    def test_no_park_without_inflight_batch(self, pool):
+        sched = ForecastScheduler(pool=pool, cache=ExecutableCache(),
+                                  max_concurrency=1, max_batch=2,
+                                  batch_window_ms=50.0)
+        try:
+            sched.warmup(SPEC)
+            res = sched.submit(RequestSpec(
+                **{**SPEC.to_dict(), "seed": 303})).result()
+            assert res.batch_size == 1
+            assert sched.stats()["qos"]["requeued"] == {}
+        finally:
+            sched.close()
+
+
+class TestCancellationShrink:
+    def test_engine_shrinks_onto_warm_smaller_batch(self, pool):
+        b = pool.get("smoke")
+        spec = RequestSpec(**{**SPEC.to_dict(), "lead_chunk": 1,
+                              "scored": False})
+        eng = ForecastEngine(b.model, spec.engine_config())
+        for nb in (3, 2):
+            eng.compile_chunk(False, 1, b.params, b.buffers, batch=nb)
+        state0s = [b.ds.state(i, 0) for i in range(3)]
+        keys = [jax.random.PRNGKey(i) for i in range(3)]
+        auxs = [lambda n: b.ds.aux_fields(6.0 * (n + 1))] * 3
+
+        alive = [[0, 1, 2]]
+        blocks = []
+        for blk in eng.stream_batched(b.params, b.buffers, state0s, auxs,
+                                      keys, steps=2,
+                                      survivors=lambda: alive[0]):
+            blocks.append(blk)
+            alive[0] = [0, 2]  # request 1 cancels after chunk 0
+        assert len(blocks) == 2
+        assert all(r is not None for r in blocks[0])
+        assert blocks[1][1] is None  # dropped slot stays positional
+        assert blocks[1][0] is not None and blocks[1][2] is not None
+        assert eng.dispatch_counts["shrinks"] == 1
+        assert eng.dispatch_counts["jit"] == 0  # warm redispatch only
+        assert eng.dispatch_counts["aot"] == 2
+
+        # survivors' states are bit-identical to the unshrunk batch
+        eng2 = ForecastEngine(b.model, spec.engine_config())
+        eng2.compile_chunk(False, 1, b.params, b.buffers, batch=3)
+        full = list(eng2.stream_batched(b.params, b.buffers, state0s,
+                                        auxs, keys, steps=2))
+        for j in (0, 2):
+            np.testing.assert_array_equal(
+                np.asarray(blocks[1][j].final_state),
+                np.asarray(full[1][j].final_state))
+
+    def test_engine_masks_when_smaller_batch_cold(self, pool):
+        b = pool.get("smoke")
+        spec = RequestSpec(**{**SPEC.to_dict(), "lead_chunk": 1,
+                              "scored": False})
+        eng = ForecastEngine(b.model, spec.engine_config())
+        eng.compile_chunk(False, 1, b.params, b.buffers, batch=2)
+        state0s = [b.ds.state(i, 0) for i in range(2)]
+        keys = [jax.random.PRNGKey(i) for i in range(2)]
+        auxs = [lambda n: b.ds.aux_fields(6.0 * (n + 1))] * 2
+        alive = [[0, 1]]
+        blocks = []
+        for blk in eng.stream_batched(b.params, b.buffers, state0s, auxs,
+                                      keys, steps=2,
+                                      survivors=lambda: alive[0]):
+            blocks.append(blk)
+            alive[0] = [0]  # serial program NOT compiled -> stay masked
+        assert eng.dispatch_counts["shrinks"] == 0
+        assert all(r is not None for r in blocks[1])
+
+    def test_scheduler_shrinks_cancelled_batch_member(self, pool):
+        sched = ForecastScheduler(pool=pool, cache=ExecutableCache(),
+                                  max_concurrency=1, max_batch=2,
+                                  batch_window_ms=2000.0)
+        try:
+            sched.warmup(SPEC)             # serial program (shrink target)
+            sched.warmup(SPEC, batch=2)    # the coalesced program
+            gate = _WarmGate(
+                sched, block_when=lambda a, k: k.get("batch") == 2)
+            r1 = sched.submit(RequestSpec(**{**SPEC.to_dict(),
+                                             "seed": 401}))
+            r2 = sched.submit(RequestSpec(**{**SPEC.to_dict(),
+                                             "seed": 402}))
+            assert gate.entered.wait(timeout=60)  # batch of 2 picked
+            r2.cancel()
+            gate.release.set()
+            res1, res2 = r1.result(), r2.result()
+            assert res2.cancelled and res2.chunks == []
+            assert not res1.cancelled
+            assert sched.stats()["qos"]["batch_shrinks"] == 1
+            eng = sched._engines.snapshot()[SPEC.engine_key()]
+            assert eng.dispatch_counts["shrinks"] == 1
+            assert eng.dispatch_counts["jit"] == 0
+            # the survivor is bit-identical to a direct serial rollout
+            b = pool.get("smoke")
+            ref = ForecastEngine(b.model, SPEC.engine_config()).forecast(
+                b.params, b.buffers, b.ds.state(0, 0),
+                lambda n: b.ds.aux_fields(6.0 * (n + 1)),
+                jax.random.PRNGKey(401), steps=SPEC.lead_steps,
+                truth=lambda n: b.ds.state(0, n + 1))
+            np.testing.assert_array_equal(res1.scores["crps"],
+                                          np.asarray(ref.scores["crps"]))
+        finally:
+            sched.close()
+
+
+class TestCloseUnblocksConsumers:
+    def test_timed_out_close_pushes_terminal_errors(self, pool):
+        sched = ForecastScheduler(pool=pool, cache=ExecutableCache(),
+                                  max_concurrency=1)
+        gate = _WarmGate(sched)
+        r1 = sched.submit(RequestSpec(**{**SPEC.to_dict(), "seed": 500}))
+        assert gate.entered.wait(timeout=60)  # worker stuck mid-serve
+        r2 = sched.submit(RequestSpec(**{**SPEC.to_dict(), "seed": 501}))
+
+        closer = threading.Thread(target=lambda: sched.close(timeout=1.0))
+        closer.start()
+        time.sleep(0.2)
+        # distinct rejection while the drain is still in progress
+        with pytest.raises(RuntimeError, match="draining"):
+            sched.submit(RequestSpec(**{**SPEC.to_dict(), "seed": 502}))
+        closer.join(timeout=30)
+        assert not closer.is_alive()
+
+        # every consumer unblocks with a terminal shutdown error --
+        # the in-flight request AND the one still queued
+        for st in (r1, r2):
+            with pytest.raises(transport.ServingError) as err:
+                st.result()
+            assert err.value.reason == "shutdown"
+        with pytest.raises(RuntimeError, match="scheduler is closed"):
+            sched.submit(RequestSpec(**{**SPEC.to_dict(), "seed": 503}))
+        # let the stuck worker die quickly instead of serving ghosts
+        gate.abort = True
+        gate.release.set()
+
+
+class TestEvictionBuildRace:
+    class _FakeEngine:
+        def __init__(self, nbytes):
+            self._n = nbytes
+
+        def estimated_bytes(self):
+            return self._n
+
+    def test_build_locks_stable_across_eviction(self):
+        pool = EnginePool(budget_bytes=100)
+        pool.get_or_build("a", lambda: self._FakeEngine(80))
+        lock_a = pool._build_locks["a"]
+        pool.get_or_build("b", lambda: self._FakeEngine(80))
+        assert pool.enforce_budget() == 1
+        assert "a" not in pool.snapshot()
+        # the evicted key's build lock is the SAME object: a builder
+        # still holding it cannot race a fresh lock into existence
+        assert pool._build_locks["a"] is lock_a
+
+    def test_build_once_under_eviction_pressure(self):
+        pool = EnginePool(budget_bytes=100)
+        state = {k: {"active": 0, "max_active": 0, "builds": 0}
+                 for k in ("a", "b")}
+        mu = threading.Lock()
+
+        def build(key):
+            with mu:
+                st = state[key]
+                st["active"] += 1
+                st["max_active"] = max(st["max_active"], st["active"])
+            time.sleep(0.002)  # widen the window a popped lock would open
+            with mu:
+                state[key]["active"] -= 1
+                state[key]["builds"] += 1
+            return self._FakeEngine(80)
+
+        stop = time.time() + 2.0
+        errors = []
+
+        def churn(key):
+            try:
+                while time.time() < stop:
+                    pool.get_or_build(key, lambda: build(key))
+                    pool.enforce_budget()  # evicts the other key
+            except Exception as e:  # noqa: BLE001 -- surface in main thread
+                errors.append(e)
+
+        threads = [threading.Thread(target=churn, args=(k,))
+                   for k in ("a", "b") for _ in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        # rebuilds after eviction are legitimate; CONCURRENT builds of
+        # one key never are
+        for key, st in state.items():
+            assert st["max_active"] == 1, (key, st)
+            assert st["builds"] >= 1
