@@ -13,6 +13,10 @@ EXPERIMENTS.md (dry-run roofline terms for the production mesh).
   sec5_serving_qos                        -- pickup-policy A/B under overload:
                                              FIFO vs priority-then-FIFO with
                                              deadline shedding
+  sec5_observability                      -- instrumentation cost A/B: warm
+                                             request latency with tracing
+                                             disabled vs enabled (overhead
+                                             must sit within host noise)
   sec5_kernels                            -- op-level SHT/DISCO dispatch A/B
                                              (reference vs Pallas substrate)
                                              + banded-psi buffer footprint
@@ -596,6 +600,87 @@ def bench_bundle(members: int = 2, steps: int = 4) -> None:
         shutil.rmtree(tmp, ignore_errors=True)
 
 
+def bench_observability(members: int = 2, steps: int = 4) -> None:
+    """docs/observability.md: the instrumentation layer's cost A/B.
+
+    One warm single-worker scheduler per arm serving the same request
+    shape: tracing+flight recording *disabled*
+    (``ObservabilityConfig(enabled=False)``, the structurally
+    pre-instrumentation dispatch path) vs *enabled* (span tree + flight
+    events recorded per request).  Round-robin best-of bursts, same
+    noisy-host discipline as ``_ab_timeit``.  The row's value is the
+    enabled arm's warm-request latency; ``overhead_pct`` in the derived
+    column is the acceptance gate (must sit within host noise).
+    """
+    from repro.serving.cache import ExecutableCache
+    from repro.serving.observability import ObservabilityConfig
+    from repro.serving.scheduler import (ForecastScheduler, ModelPool,
+                                         RequestSpec)
+    pool = ModelPool()
+    spec = RequestSpec(config="smoke", members=members, lead_steps=steps,
+                       lead_chunk=max(1, steps // 2), scored=True)
+    arms = {}
+    try:
+        for name, enabled in (("disabled", False), ("enabled", True)):
+            arms[name] = ForecastScheduler(
+                pool=pool, cache=ExecutableCache(), max_concurrency=1,
+                observability=ObservabilityConfig(enabled=enabled))
+            arms[name].warmup(spec)
+            arms[name].submit(spec).result()  # first-request one-offs
+        best = dict.fromkeys(arms, float("inf"))
+        for _ in range(5):
+            for name, sched in arms.items():
+                t0 = time.perf_counter()
+                sched.submit(spec).result()
+                best[name] = min(best[name], time.perf_counter() - t0)
+        overhead = 100.0 * (best["enabled"] - best["disabled"]) \
+            / best["disabled"]
+        traced = arms["enabled"].debug_requests()
+        _row("sec5_observability", best["enabled"] * 1e6,
+             f"enabled_us={best['enabled'] * 1e6:.1f};"
+             f"disabled_us={best['disabled'] * 1e6:.1f};"
+             f"overhead_pct={overhead:.2f};"
+             f"flight_entries={len(traced['finished'])}")
+    finally:
+        for sched in arms.values():
+            sched.close()
+
+
+def _append_history(path: str, rows: list[dict]) -> None:
+    """Append this run's sec5 rows to a benchmark-trajectory JSON file.
+
+    Each appended entry is a row plus provenance (git SHA, UTC date,
+    jax backend), so CI runs accumulate a queryable latency/throughput
+    history across commits (the ``BENCH_serving.json`` artifact).
+    """
+    import datetime
+    import os
+    import subprocess
+    sha = os.environ.get("GITHUB_SHA")
+    if not sha:
+        try:
+            sha = subprocess.run(["git", "rev-parse", "HEAD"],
+                                 capture_output=True, text=True,
+                                 check=True).stdout.strip()
+        except (OSError, subprocess.CalledProcessError):
+            sha = "unknown"
+    stamp = {"sha": sha[:12],
+             "date": datetime.datetime.now(datetime.timezone.utc)
+             .strftime("%Y-%m-%dT%H:%M:%SZ"),
+             "backend": jax.default_backend()}
+    try:
+        with open(path) as f:
+            history = json.load(f)
+        if not isinstance(history, list):
+            raise ValueError(f"{path} is not a JSON list")
+    except FileNotFoundError:
+        history = []
+    history.extend({**stamp, **row} for row in rows
+                   if row["name"].startswith("sec5"))
+    with open(path, "w") as f:
+        json.dump(history, f, indent=2)
+
+
 BENCHES = {
     "fig3_probabilistic_skill": lambda a: bench_probabilistic_skill(),
     "fig5_spectral_fidelity": lambda a: bench_spectral_fidelity(),
@@ -603,6 +688,7 @@ BENCHES = {
                                                             a.steps),
     "sec5_serving": lambda a: bench_serving(a.members, a.steps),
     "sec5_serving_qos": lambda a: bench_serving_qos(a.members, a.steps),
+    "sec5_observability": lambda a: bench_observability(a.members, a.steps),
     "sec5_bundle": lambda a: bench_bundle(a.members, a.steps),
     "sec5_kernels": lambda a: bench_sec5_kernels(),
     "table3_train_step": lambda a: bench_train_step(),
@@ -625,6 +711,10 @@ def main(argv=None) -> None:
     ap.add_argument("--json-out", default=None,
                     help="also write the emitted rows to this JSON file "
                          "(the CI benchmark artifact)")
+    ap.add_argument("--history", default=None, metavar="PATH",
+                    help="append this run's sec5 rows (plus git SHA, UTC "
+                         "date and jax backend) to a benchmark-trajectory "
+                         "JSON list, e.g. BENCH_serving.json")
     args = ap.parse_args(argv)
     selected = {n: fn for n, fn in BENCHES.items()
                 if args.only is None or args.only in n}
@@ -637,6 +727,8 @@ def main(argv=None) -> None:
         with open(args.json_out, "w") as f:
             json.dump({"backend": jax.default_backend(), "rows": ROWS}, f,
                       indent=2)
+    if args.history:
+        _append_history(args.history, ROWS)
 
 
 if __name__ == "__main__":

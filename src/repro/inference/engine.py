@@ -74,6 +74,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Iterator
 
@@ -938,7 +939,7 @@ class ForecastEngine:
         return bounds
 
     def stream(self, params, buffers, state0: jax.Array, aux, key: jax.Array,
-               steps: int | None = None, truth=None
+               steps: int | None = None, truth=None, on_span=None
                ) -> Iterator[ForecastResult]:
         """Roll the forecast, yielding one ForecastResult per chunk.
 
@@ -947,6 +948,11 @@ class ForecastEngine:
                giving the verifying state for lead ``step``; enables
                in-scan scoring.
         steps: total lead steps; required when ``aux`` is a callable.
+        on_span: optional ``fn(name, t0, t1, args)`` observability hook
+               (monotonic ``perf_counter`` bounds) called around each
+               chunk's host->device staging; None (the default) keeps
+               the stage functions exactly as before -- the hook only
+               reads clocks, never touches the staged values.
 
         Host staging is double-buffered through ``_ChunkStager``: chunk
         k+1's aux/truth materialize on a background thread while chunk k
@@ -965,11 +971,15 @@ class ForecastEngine:
             buffers if self.cfg.static_buffers else None)
 
         def stage(start: int, k: int) -> dict:
+            t0 = time.perf_counter() if on_span is not None else 0.0
             xs = {"n": jnp.arange(start, start + k, dtype=jnp.int32),
                   "aux": self._stage(aux, start, k)}
             if scored:
                 xs["truth"] = self._stage(truth, start, k)
             self._count_staged(k)
+            if on_span is not None:
+                on_span("stage_h2d", t0, time.perf_counter(),
+                        {"start": start, "steps": k})
             return xs
 
         stager = _ChunkStager(bounds, stage)
@@ -1008,7 +1018,8 @@ class ForecastEngine:
     # Coalesced request batching: B same-shape requests, one rollout.
     def stream_batched(self, params, buffers, state0s, auxs, keys,
                        steps: int | None = None, truths=None,
-                       survivors: Callable[[], list[int]] | None = None
+                       survivors: Callable[[], list[int]] | None = None,
+                       on_span=None
                        ) -> Iterator[list[ForecastResult]]:
         """Roll B same-shape requests through one batched chunk program.
 
@@ -1039,6 +1050,10 @@ class ForecastEngine:
         exactly as before.  After a shrink the yielded lists keep length
         B with ``None`` in dropped slots; ``dispatch_counts["shrinks"]``
         ticks once per shrink.
+
+        ``on_span`` is the same clock-only observability hook as
+        ``stream``'s: ``fn(name, t0, t1, args)`` around each chunk's
+        staging, never touching staged values.
         """
         b = len(state0s)
         if b < 1:
@@ -1067,6 +1082,7 @@ class ForecastEngine:
             # *distinct* source once and let jnp.stack broadcast it
             # device-side, instead of recomputing and re-copying B
             # identical host chunks.
+            t0 = time.perf_counter() if on_span is not None else 0.0
             staged: dict[int, jax.Array] = {}
 
             def once(src):
@@ -1081,6 +1097,9 @@ class ForecastEngine:
             if scored:
                 xs["truth"] = jnp.stack([once(t) for t in truths])
             self._count_staged(k * len({id(a) for a in auxs}))
+            if on_span is not None:
+                on_span("stage_h2d", t0, time.perf_counter(),
+                        {"start": start, "steps": k, "batch": b})
             return xs
 
         stager = _ChunkStager(bounds, stage)

@@ -27,6 +27,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import logging
+
+_log = logging.getLogger("repro.launch.bundle")
 
 
 def _cmd_build(args: argparse.Namespace) -> int:
@@ -45,9 +48,11 @@ def _cmd_build(args: argparse.Namespace) -> int:
                verbose=True)
     from repro.serving.bundle import WarmStartBundle
     b = WarmStartBundle.load(out)
-    print(f"[bundle] built {b.bundle_id} at {out} "
-          f"({len(b.manifest['engines'])} engine(s), "
-          f"{len(b.manifest['files'])} file(s))")
+    _log.info("built %s at %s (%d engine(s), %d file(s))",
+              b.bundle_id, out, len(b.manifest["engines"]),
+              len(b.manifest["files"]))
+    # the bundle path is the build's one stdout line: scripts capture it
+    # with `... | tail -n 1` (progress goes to stderr via logging)
     print(out)
     return 0
 
@@ -119,6 +124,8 @@ def main(argv=None) -> None:
     v.set_defaults(fn=_cmd_verify)
 
     args = ap.parse_args(argv)
+    from repro.serving.observability import setup_logging
+    setup_logging()
     raise SystemExit(args.fn(args))
 
 

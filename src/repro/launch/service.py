@@ -38,9 +38,12 @@ from __future__ import annotations
 
 import argparse
 import json
+import logging
 import os
 
 from repro.configs import fcn3 as fcn3cfg
+
+_log = logging.getLogger("repro.launch.service")
 
 
 def _enable_xla_cache(persist_dir: str) -> None:
@@ -107,6 +110,23 @@ def main(argv=None) -> None:
                     help="RequestSpec JSON to precompile before serving "
                          "(repeatable), e.g. "
                          "'{\"members\": 4, \"lead_steps\": 8}'")
+    ap.add_argument("--trace-dir", default=None,
+                    help="dump every served request's span tree as "
+                         "Chrome/Perfetto trace JSON into this directory "
+                         "(traces are also served from memory at "
+                         "GET /v1/trace/<request_id>)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="enable the opt-in per-request jax.profiler "
+                         "hook: requests sending 'profile': true get "
+                         "their rollout captured as an XLA trace under "
+                         "this directory (inert when unset)")
+    ap.add_argument("--no-tracing", action="store_true",
+                    help="disable request tracing and the flight "
+                         "recorder (metrics stay on -- they back "
+                         "/v1/stats); the instrumented path is free "
+                         "when disabled, so this mainly declutters")
+    ap.add_argument("--log-level", default="INFO",
+                    help="level for the repro.* loggers on stderr")
     args = ap.parse_args(argv)
     if args.bundle and args.persist_dir:
         ap.error("--bundle and --persist-dir are mutually exclusive: a "
@@ -117,9 +137,17 @@ def main(argv=None) -> None:
 
     # Imports after the cache config: jax reads it at first use.
     from repro.serving.cache import ExecutableCache
+    from repro.serving.observability import (ObservabilityConfig,
+                                             setup_logging)
     from repro.serving.scheduler import (ForecastScheduler, ModelPool,
                                          RequestSpec)
     from repro.serving.service import ForecastService
+
+    # Logs go to stderr: stdout stays clean for scripted capture.
+    setup_logging(args.log_level)
+    obs_config = ObservabilityConfig(
+        enabled=not args.no_tracing,
+        trace_dir=args.trace_dir, profile_dir=args.profile_dir)
 
     warm_specs = []
     for raw in args.warm:
@@ -138,51 +166,50 @@ def main(argv=None) -> None:
                              if args.engine_budget_mb is not None
                              else None),
         aging_ms=args.aging_ms,
-        degrade_margin_ms=args.degrade_margin_ms)
+        degrade_margin_ms=args.degrade_margin_ms,
+        observability=obs_config)
     if args.bundle:
         # Zero-cold-start boot: verify + install plans + pre-warm every
         # bundled engine from StableHLO blobs (readonly cache -- any
         # shape the bundle lacks refuses instead of compiling).
         from repro.serving.bundle import WarmStartBundle, boot_scheduler
         b = WarmStartBundle.load(args.bundle)
-        print(f"[service] booting from bundle {b.bundle_id[:12]} "
-              f"({args.bundle}) ...", flush=True)
+        _log.info("booting from bundle %s (%s) ...",
+                  b.bundle_id[:12], args.bundle)
         scheduler = boot_scheduler(b, pool=pool, **sched_kwargs)
         info = scheduler.bundle_info
-        print(f"[service] bundle boot OK: {info['engines']} engine(s), "
-              f"{info['programs']} program(s), "
-              f"{info['disk_hits']} from blobs, "
-              f"boot_s={info['boot_s']}", flush=True)
+        _log.info("bundle boot OK: %s engine(s), %s program(s), "
+                  "%s from blobs, boot_s=%s", info["engines"],
+                  info["programs"], info["disk_hits"], info["boot_s"])
     else:
         scheduler = ForecastScheduler(
             pool=pool, cache=ExecutableCache(args.persist_dir),
             **sched_kwargs)
     for name in args.config:
-        print(f"[service] preloading config {name!r} ...", flush=True)
+        _log.info("preloading config %r ...", name)
         pool.get(name)
     for spec in warm_specs:
         out = scheduler.warmup(spec)
-        print(f"[service] warmed {spec.to_dict()}: "
-              f"compile_s={out['compile_s']:.2f} "
-              f"({[o['source'] for o in out['outcomes']]})", flush=True)
+        _log.info("warmed %s: compile_s=%.2f (%s)", spec.to_dict(),
+                  out["compile_s"],
+                  [o["source"] for o in out["outcomes"]])
         if args.max_batch > 1:
             # also warm the full-batch coalesced program, so the first
             # burst of same-shape traffic pays zero compile
             outb = scheduler.warmup(spec, batch=args.max_batch)
-            print(f"[service] warmed batch={args.max_batch}: "
-                  f"compile_s={outb['compile_s']:.2f} "
-                  f"({[o['source'] for o in outb['outcomes']]})",
-                  flush=True)
+            _log.info("warmed batch=%d: compile_s=%.2f (%s)",
+                      args.max_batch, outb["compile_s"],
+                      [o["source"] for o in outb["outcomes"]])
 
     service = ForecastService(scheduler=scheduler)
     server = service.make_server(args.host, args.port)
     host, port = server.server_address[:2]
-    print(f"[service] listening on http://{host}:{port} "
-          f"(POST /v1/forecast, GET /v1/stats, GET /healthz)", flush=True)
+    _log.info("listening on http://%s:%s (POST /v1/forecast, "
+              "GET /v1/stats, GET /metrics, GET /healthz)", host, port)
     try:
         server.serve_forever()
     except KeyboardInterrupt:
-        print("[service] shutting down")
+        _log.info("shutting down")
     finally:
         server.server_close()
         service.close()

@@ -20,7 +20,15 @@ Three pillars:
 * ``bundle``    -- content-addressed warm-start bundles: pack the
                    StableHLO blobs, XLA compilation cache and geometry
                    plans so a fresh replica boots with zero compiles
-                   (``--bundle`` on the launcher; refuses on mismatch).
+                   (``--bundle`` on the launcher; refuses on mismatch);
+* ``observability``
+                -- the instrumentation substrate (ISSUE 8): a metrics
+                   registry backing both ``/v1/stats`` and Prometheus
+                   ``/metrics``, per-request span traces exported as
+                   Chrome/Perfetto JSON, opt-in ``jax.profiler`` hooks
+                   and a bounded flight recorder
+                   (``GET /v1/debug/requests``).  See
+                   docs/observability.md.
 
 Launch with ``python -m repro.launch.service``; see docs/serving.md and
 docs/deployment.md (docs/README.md is the index).
@@ -41,6 +49,11 @@ from repro.serving.cache import (  # noqa: F401
     ExecutableCache,
     ExecutableKey,
     ReadOnlyCacheMiss,
+)
+from repro.serving.observability import (  # noqa: F401
+    FlightRecorder,
+    Observability,
+    ObservabilityConfig,
 )
 from repro.serving.spec import RequestSpec  # noqa: F401
 from repro.serving.transport import (  # noqa: F401

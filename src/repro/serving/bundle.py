@@ -41,6 +41,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import logging
 import os
 import shutil
 import tarfile
@@ -51,6 +52,8 @@ import numpy as np
 from repro.serving.cache import (ExecutableKey, ReadOnlyCacheMiss,
                                  _code_fingerprint)
 from repro.serving.spec import RequestSpec
+
+_logger = logging.getLogger("repro.serving.bundle")
 
 #: manifest schema version; bump on any incompatible layout change
 BUNDLE_FORMAT = "fcn3-warm-bundle/1"
@@ -179,8 +182,9 @@ def pack(specs: list[RequestSpec], out: str | None = None,
     """
 
     def _log(msg: str) -> None:
-        if verbose:
-            print(f"[bundle] {msg}", flush=True)
+        # verbose promotes build progress to INFO; it always remains
+        # visible at DEBUG for anyone wiring up repro.serving.* logging
+        _logger.log(logging.INFO if verbose else logging.DEBUG, msg)
 
     # staging lives next to the final path so the finalizing rename is
     # atomic (same filesystem)

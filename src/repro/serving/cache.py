@@ -31,9 +31,12 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import logging
 import os
 import threading
 import time
+
+_log = logging.getLogger("repro.serving.cache")
 
 _CODE_FINGERPRINT: str | None = None
 
@@ -187,8 +190,8 @@ class ExecutableCache:
                 os.remove(path)
             except OSError:
                 pass
-            print(f"[serving-cache] discarding stale executable {path} "
-                  f"({type(e).__name__}: {e}); recompiling")
+            _log.warning("discarding stale executable %s (%s: %s); "
+                         "recompiling", path, type(e).__name__, e)
             return False
 
     def warm(self, key: ExecutableKey, engine, params, buffers) -> dict:
@@ -279,3 +282,38 @@ class ExecutableCache:
                     "compile_s": self.compile_s,
                     "persist_dir": self.persist_dir,
                     "readonly": self.readonly}
+
+    def bind_metrics(self, registry) -> None:
+        """Export the cache's live counters into a ``MetricsRegistry``.
+
+        Registers a collector callback that reads the same tallies
+        ``stats()`` reports at every ``/metrics`` scrape (the internal
+        ints stay the source of truth -- no double bookkeeping, so the
+        two views agree exactly).  Idempotent per registry call site;
+        safe to call from multiple schedulers sharing one cache only if
+        they also share the registry.
+        """
+        from repro.serving.observability import METRIC_PREFIX as p
+
+        def collect():
+            s = self.stats()
+            return [
+                {"name": p + "cache_hits_total", "type": "counter",
+                 "help": "Warm-executable memory hits",
+                 "samples": [({}, s["hits"])]},
+                {"name": p + "cache_misses_total", "type": "counter",
+                 "help": "Executable compiles (cache misses)",
+                 "samples": [({}, s["misses"])]},
+                {"name": p + "cache_disk_hits_total", "type": "counter",
+                 "help": "Executables restored from persisted blobs",
+                 "samples": [({}, s["disk_hits"])]},
+                {"name": p + "cache_compile_seconds_total",
+                 "type": "counter",
+                 "help": "Cumulative lowering/compile/restore seconds",
+                 "samples": [({}, s["compile_s"])]},
+                {"name": p + "cache_keys", "type": "gauge",
+                 "help": "Distinct executable keys seen",
+                 "samples": [({}, s["keys"])]},
+            ]
+
+        registry.register_collector(collect)

@@ -71,6 +71,29 @@ class ForecastClient:
         """The server's scheduler/cache/bundle statistics block."""
         return self._get_json("/v1/stats")
 
+    def metrics(self) -> str:
+        """The server's ``/metrics`` Prometheus text exposition (parse
+        it with ``repro.telemetry.parse_prometheus``)."""
+        conn = self._connect()
+        try:
+            conn.request("GET", "/metrics")
+            resp = conn.getresponse()
+            body = resp.read()
+            if resp.status != 200:
+                raise transport.ServingError(
+                    f"GET /metrics -> {resp.status}: {body.decode()}")
+            return body.decode("utf-8")
+        finally:
+            conn.close()
+
+    def trace(self, request_id: str) -> dict:
+        """A served request's Chrome/Perfetto trace JSON (404s raise)."""
+        return self._get_json(f"/v1/trace/{request_id}")
+
+    def debug_requests(self) -> dict:
+        """The server's flight-recorder snapshot."""
+        return self._get_json("/v1/debug/requests")
+
     def stream(self, spec: RequestSpec | dict):
         """Yield transport events as the server emits them (NDJSON)."""
         body = json.dumps(spec.to_dict() if isinstance(spec, RequestSpec)
@@ -167,7 +190,9 @@ def main(argv=None) -> None:
 
     client = ForecastClient(args.host, args.port)
     client.health(retries=max(0, int(args.wait_s / 0.5)), delay=0.5)
-    t0 = time.time()
+    # monotonic clock: wall-clock (time.time) jumps under NTP slew and
+    # produced nonsense chunk timings in long-running smoke loops
+    t0 = time.perf_counter()
     report: dict = {"spec": spec.to_dict(), "chunks": []}
     done = None
     for ev in client.stream(spec):
@@ -195,7 +220,7 @@ def main(argv=None) -> None:
                     if name in ev["scores"]:
                         v = float(np.mean(ev["scores"][name][i]))
                         line += f"  {name}={v:.4f}"
-                print(f"{line}  ({time.time() - t0:.1f}s)")
+                print(f"{line}  ({time.perf_counter() - t0:.1f}s)")
         elif kind == "error":
             raise transport.ServingError(ev["message"],
                                          reason=ev.get("reason"))
@@ -207,6 +232,9 @@ def main(argv=None) -> None:
     report["request_id"] = done.get("request_id")
     report["timing"] = done.get("timing", {})
     report["cache"] = done.get("cache", {})
+    # end-to-end as the *client* saw it (connect + stream + decode), to
+    # compare against the server-side total_s in the same report
+    report["client_total_s"] = round(time.perf_counter() - t0, 6)
     print(f"[client] done: run={report['timing'].get('run_s', 0):.3f}s "
           f"total={report['timing'].get('total_s', 0):.3f}s "
           f"batch={report['timing'].get('batch_size', 1)} "

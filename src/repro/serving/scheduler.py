@@ -28,17 +28,28 @@ service core:
 * results leave as transport events chunk-by-chunk
   (``ForecastStream``); the retired chunk's device->host score fetch
   runs on a dedicated thread, so the dispatch thread is already
-  enqueueing chunk k+1 while chunk k's scores download and encode.
+  enqueueing chunk k+1 while chunk k's scores download and encode;
+* every request is **observable** (``repro.serving.observability``):
+  the scheduler's counters are registry instruments (``/v1/stats`` is
+  a view over the same values ``/metrics`` exposes), each request gets
+  a span tree (queue -> coalesce -> compile|aot_hit -> stage_h2d ->
+  chunk[k] -> score_fetch -> encode) on monotonic clocks, lifecycle
+  events land in the flight recorder, and ``spec.profile`` wraps the
+  rollout in a ``jax.profiler`` session -- all of it free when
+  disabled and bit-identical always.
 """
 
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import itertools
+import logging
 import queue
 import threading
 import time
+import types
 from concurrent.futures import ThreadPoolExecutor
 
 import jax
@@ -51,7 +62,11 @@ from repro.inference import ForecastEngine, InitialConditionPerturbation
 from repro.inference.params import load_params
 from repro.serving import transport
 from repro.serving.cache import ExecutableCache
+from repro.serving.observability import (METRIC_PREFIX, NULL_TRACE,
+                                         Observability, ObservabilityConfig)
 from repro.serving.spec import RequestSpec  # noqa: F401 -- re-export
+
+_log = logging.getLogger("repro.serving.scheduler")
 
 
 class QueueFull(RuntimeError):
@@ -263,6 +278,10 @@ class ForecastStream:
         self.serve_spec = spec
         self.degraded_members: int | None = None
         self.requeued = False
+        #: span tree for this request (NULL_TRACE when tracing is off)
+        self.trace = NULL_TRACE
+        #: when a worker took this stream off the queue (None: queued)
+        self.picked_at: float | None = None
         self.submitted_at = time.perf_counter()
         self.deadline_at = (self.submitted_at + spec.deadline_ms / 1e3
                             if spec.deadline_ms is not None else None)
@@ -353,7 +372,9 @@ class ForecastScheduler:
                  engine_budget_bytes: int | None = None,
                  aging_ms: float = 2000.0,
                  degrade_margin_ms: float | None = None,
-                 latency_window: int = 512):
+                 latency_window: int = 512,
+                 observability: Observability | ObservabilityConfig
+                 | None = None):
         self.pool = pool if pool is not None else ModelPool()
         self.cache = cache if cache is not None else ExecutableCache()
         self.max_batch = max(1, max_batch)
@@ -361,6 +382,15 @@ class ForecastScheduler:
         self.aging_ms = max(0.0, aging_ms)
         self.degrade_margin_ms = degrade_margin_ms
         self._queue_size = queue_size
+        # the instrumentation hub: every counter below is a registry
+        # instrument (/v1/stats reads them back; /metrics renders the
+        # same registry), traces/flight events route through it too
+        if isinstance(observability, Observability):
+            self.obs = observability
+        else:
+            self.obs = Observability(observability)
+        self.obs.metrics.register_collector(self._collect_metrics)
+        self.cache.bind_metrics(self.obs.metrics)
         # pending requests + close sentinels (None), FIFO; guarded by
         # _cond's lock so coalescing workers can scoop matching streams
         # out of the middle (queue.Queue cannot express that)
@@ -371,17 +401,10 @@ class ForecastScheduler:
         self._ids = itertools.count()
         self._closed = False
         self._drained = False
-        self._served = 0
-        self._failed = 0
-        self._batch_sizes: collections.Counter = collections.Counter()
-        # --- QoS accounting (all guarded by _lock) ---
-        # per-priority-class counters of admission-control outcomes
-        self._shed: collections.Counter = collections.Counter()
-        self._degraded: collections.Counter = collections.Counter()
-        self._requeued: collections.Counter = collections.Counter()
-        self._cancelled_queued: collections.Counter = collections.Counter()
-        self._batch_shrinks = 0
         # sliding per-class latency window: (queue_s, total_s) samples
+        # (a windowed percentile estimate, not a counter -- it stays
+        # outside the registry; the total_seconds histogram is the
+        # unwindowed exposition-side view)
         self._latency = {p: collections.deque(maxlen=max(1, latency_window))
                          for p in ("interactive", "batch")}
         # streams submitted but not yet terminal -- what a timed-out
@@ -403,35 +426,66 @@ class ForecastScheduler:
     # ------------------------------------------------------------------
     def submit(self, spec: RequestSpec) -> ForecastStream:
         """Validate and enqueue; returns immediately with the stream."""
+        t_admit = time.perf_counter()
         spec.validate()
         stream = ForecastStream(f"r{next(self._ids)}", spec)
-        # closed-check and enqueue are one atomic step against close():
-        # a stream enqueued behind the shutdown sentinels would never be
-        # popped and its consumer would block forever.
-        with self._cond:
-            if self._closed:
-                # distinct messages: mid-drain is "try again on another
-                # replica", fully closed is "this replica is gone" --
-                # both map to HTTP 503 in service.py
-                raise RuntimeError(
-                    "scheduler is closed" if self._drained else
-                    "scheduler is draining; not accepting new requests")
-            if sum(1 for s in self._pending
-                   if s is not None) >= self._queue_size:
-                raise QueueFull(
-                    f"request queue full ({self._queue_size} pending)")
-            self._pending.append(stream)
-            with self._lock:
-                self._open.add(stream)
-            self._cond.notify_all()
+        # trace/flight entries attach BEFORE the stream is visible to a
+        # worker (a pickup may race the tail of submit otherwise)
+        if self.obs.enabled:
+            stream.trace = self.obs.begin_trace(
+                stream.request_id,
+                {"config": spec.config, "members": spec.members,
+                 "lead_steps": spec.lead_steps, "priority": spec.priority},
+                t0=t_admit)
+            stream.trace.add("admit", t_admit, time.perf_counter(),
+                             args={"queue_size": self._queue_size})
+            self.obs.flight_start(stream.request_id, {
+                "config": spec.config, "members": spec.members,
+                "lead_steps": spec.lead_steps, "priority": spec.priority,
+                "deadline_ms": spec.deadline_ms, "degrade": spec.degrade,
+                "profile": spec.profile})
+            self.obs.flight_record(stream.request_id, "submitted")
+        try:
+            # closed-check and enqueue are one atomic step against
+            # close(): a stream enqueued behind the shutdown sentinels
+            # would never be popped and its consumer would block forever.
+            with self._cond:
+                if self._closed:
+                    # distinct messages: mid-drain is "try again on
+                    # another replica", fully closed is "this replica is
+                    # gone" -- both map to HTTP 503 in service.py
+                    raise RuntimeError(
+                        "scheduler is closed" if self._drained else
+                        "scheduler is draining; not accepting new requests")
+                if sum(1 for s in self._pending
+                       if s is not None) >= self._queue_size:
+                    raise QueueFull(
+                        f"request queue full ({self._queue_size} pending)")
+                self._pending.append(stream)
+                with self._lock:
+                    self._open.add(stream)
+                self._cond.notify_all()
+        except Exception:
+            self.obs.flight_finish(stream.request_id, "rejected")
+            self.obs.finish_trace(stream.trace)
+            raise
         return stream
 
     def _finish(self, stream: ForecastStream, ev: dict) -> bool:
-        """Push a terminal event (at most once per stream) and retire
-        the stream from the open-streams registry."""
+        """Push a terminal event (at most once per stream), retire the
+        stream from the open-streams registry, and close its trace and
+        flight entry with an honest outcome."""
         delivered = stream.put_terminal(ev)
         with self._lock:
             self._open.discard(stream)
+        if delivered and self.obs.enabled:
+            outcome = ev.get("event", "done")
+            if outcome == "done" and ev.get("cancelled"):
+                outcome = "cancelled"
+            elif outcome == "error":
+                outcome = ev.get("reason") or "error"
+            self.obs.flight_finish(stream.request_id, outcome)
+            self.obs.finish_trace(stream.trace)
         return delivered
 
     def warmup(self, spec: RequestSpec, batch: int | None = None) -> dict:
@@ -469,11 +523,95 @@ class ForecastScheduler:
             return (dict(self._bundle_info)
                     if self._bundle_info is not None else None)
 
+    def trace_json(self, request_id: str) -> dict | None:
+        """A served request's Chrome/Perfetto trace JSON (the
+        ``GET /v1/trace/<id>`` payload), or None if unknown/evicted."""
+        return self.obs.trace_json(request_id)
+
+    def debug_requests(self) -> dict:
+        """The flight-recorder snapshot (``GET /v1/debug/requests``)."""
+        return self.obs.debug_requests()
+
+    def _collect_metrics(self) -> list[dict]:
+        """Collector polled at ``/metrics`` scrape time: live values the
+        scheduler does not tally itself -- queue depths, open streams,
+        the engine pool, per-engine dispatch counts and warm-start
+        bundle provenance.  Reading at scrape time (the Prometheus
+        custom-collector pattern) keeps these exactly equal to what
+        ``stats()`` reports."""
+        p = METRIC_PREFIX
+        snap = self._engines.snapshot()
+        dispatch: collections.Counter = collections.Counter()
+        for eng in snap.values():
+            for k, v in eng.dispatch_stats().items():
+                dispatch[k] += v
+        pool = self._engines.stats()
+        with self._cond:
+            depth = {"interactive": 0, "batch": 0}
+            for s in self._pending:
+                if s is not None:
+                    depth[s.spec.priority] += 1
+        with self._lock:
+            open_n = len(self._open)
+            binfo = (dict(self._bundle_info)
+                     if self._bundle_info is not None else None)
+        out = [
+            {"name": p + "queue_depth", "type": "gauge",
+             "help": "Requests queued, by priority class",
+             "samples": [({"priority": k}, v)
+                         for k, v in sorted(depth.items())]},
+            {"name": p + "open_streams", "type": "gauge",
+             "help": "Streams submitted but not yet terminal",
+             "samples": [({}, open_n)]},
+            {"name": p + "engine_pool_engines", "type": "gauge",
+             "help": "Warm engines in the pool",
+             "samples": [({}, pool["engines"])]},
+            {"name": p + "engine_pool_bytes", "type": "gauge",
+             "help": "Estimated bytes held by warm engines",
+             "samples": [({}, pool["engine_bytes"])]},
+            {"name": p + "engine_pool_evictions_total", "type": "counter",
+             "help": "Engines LRU-evicted under the byte budget",
+             "samples": [({}, pool["evictions"])]},
+            {"name": p + "engine_dispatch_total", "type": "counter",
+             "help": "Chunk dispatches by path (aot/jit/shrinks)",
+             "samples": [({"path": k}, dispatch.get(k, 0))
+                         for k in ("aot", "jit", "shrinks")]},
+            {"name": p + "engine_h2d_chunks_total", "type": "counter",
+             "help": "Host->device chunk stagings",
+             "samples": [({}, dispatch.get("h2d_chunks", 0))]},
+            {"name": p + "engine_h2d_steps_total", "type": "counter",
+             "help": "Host->device staged (source, step) pairs",
+             "samples": [({}, dispatch.get("h2d_steps", 0))]},
+        ]
+        if binfo is not None:
+            bid = str(binfo.get("bundle_id", ""))[:12]
+            out.append({
+                "name": p + "bundle_boot_seconds", "type": "gauge",
+                "help": "Warm-start bundle boot wall time",
+                "samples": [({"bundle_id": bid},
+                             float(binfo.get("boot_s", 0.0)))]})
+            out.append({
+                "name": p + "bundle_programs", "type": "gauge",
+                "help": "Executables pre-warmed from the bundle",
+                "samples": [({"bundle_id": bid},
+                             binfo.get("programs", 0))]})
+        return out
+
+    @staticmethod
+    def _by_label(counter) -> dict:
+        """A single-label registry counter as ``{label_value: int}`` --
+        the exact shape the pre-registry QoS dicts had."""
+        return {k[0]: int(v) for k, v in sorted(counter.values().items())}
+
     def stats(self) -> dict:
         """The ``/v1/stats`` payload: queue/served/failed counters, the
         coalesced-batch histogram, per-engine rows with dispatch counts,
         pool and cache statistics, and the ``bundle`` provenance block
-        (None unless the replica booted from a warm-start bundle)."""
+        (None unless the replica booted from a warm-start bundle).
+
+        Every counter here is read back from the metrics registry --
+        ``/v1/stats`` and ``/metrics`` are two renderings of one store,
+        so they cannot disagree at quiescence."""
         snap = self._engines.snapshot()
         sizes = {key: eng.estimated_bytes() for key, eng in snap.items()}
         engines = [{"config": key[0],
@@ -487,18 +625,20 @@ class ForecastScheduler:
                     "estimated_bytes": sizes[key],
                     "dispatch": eng.dispatch_stats()}
                    for key, eng in snap.items()]
+        served = int(self.obs.served.value())
+        failed = int(self.obs.failed.value())
+        batches = {k[0]: int(v) for k, v in sorted(
+            self.obs.batches.values().items(), key=lambda kv: int(kv[0][0]))}
         with self._lock:
-            served, failed = self._served, self._failed
-            batches = {str(k): v
-                       for k, v in sorted(self._batch_sizes.items())}
             bundle_info = (dict(self._bundle_info)
                            if self._bundle_info is not None else None)
             qos = {
-                "shed": dict(self._shed),
-                "degraded": dict(self._degraded),
-                "requeued": dict(self._requeued),
-                "cancelled_queued": dict(self._cancelled_queued),
-                "batch_shrinks": self._batch_shrinks,
+                "shed": self._by_label(self.obs.shed),
+                "degraded": self._by_label(self.obs.degraded),
+                "requeued": self._by_label(self.obs.requeued),
+                "cancelled_queued": self._by_label(
+                    self.obs.cancelled_queued),
+                "batch_shrinks": int(self.obs.batch_shrinks.value()),
                 "aging_ms": self.aging_ms,
                 "degrade_margin_ms": self.degrade_margin_ms,
                 "latency": {p: _latency_stats(d)
@@ -545,9 +685,10 @@ class ForecastScheduler:
         if stuck:
             # daemon threads die with the process; say so -- and unblock
             # every consumer still waiting on a terminal event
-            print(f"[scheduler] close() timed out after {timeout}s with "
-                  f"{len(stuck)} worker(s) still running ({stuck}); "
-                  f"terminating open streams with a shutdown error")
+            _log.warning(
+                "close() timed out after %ss with %d worker(s) still "
+                "running (%s); terminating open streams with a shutdown "
+                "error", timeout, len(stuck), stuck)
             with self._lock:
                 open_streams = list(self._open)
             for s in open_streams:
@@ -591,22 +732,25 @@ class ForecastScheduler:
                     and s.serve_spec.batch_key() == key]
         for s in matching[:self.max_batch - len(batch)]:
             self._pending.remove(s)
+            s.picked_at = time.perf_counter()
             batch.append(s)
 
     # -- QoS admission control (all helpers assume _cond is held) ------
     def _drop_cancelled_locked(self, s: ForecastStream) -> None:
         """Satellite-1 fix: a consumer that went away while queued gets
         a terminal done (cancelled, zero chunks) and **no rollout**."""
-        with self._lock:
-            self._cancelled_queued[s.spec.priority] += 1
+        self.obs.cancelled_queued.inc(priority=s.spec.priority)
+        self.obs.flight_record(s.request_id, "cancelled_queued")
         self._finish(s, {"event": "done", "request_id": s.request_id,
                          "cancelled": True})
 
     def _shed_locked(self, s: ForecastStream) -> None:
         """Deadline expired before pickup: terminal error with a
         machine-readable reason, zero engine/compile/rollout work."""
-        with self._lock:
-            self._shed[s.spec.priority] += 1
+        self.obs.shed.inc(priority=s.spec.priority)
+        self.obs.flight_record(
+            s.request_id, "shed",
+            waited_ms=round((time.perf_counter() - s.submitted_at) * 1e3, 1))
         self._finish(s, {
             "event": "error", "request_id": s.request_id,
             "reason": "deadline", "priority": s.spec.priority,
@@ -645,8 +789,9 @@ class ForecastScheduler:
                 if dm < s.spec.members:
                     s.degraded_members = dm
                     s.serve_spec = dataclasses.replace(s.spec, members=dm)
-                    with self._lock:
-                        self._degraded[s.spec.priority] += 1
+                    self.obs.degraded.inc(priority=s.spec.priority)
+                    self.obs.flight_record(s.request_id, "degraded",
+                                           members=dm)
 
     def _pick_locked(self):
         """Priority-then-FIFO pick with aging.  Class 0 is interactive
@@ -673,6 +818,7 @@ class ForecastScheduler:
                     break  # first class-0 in FIFO order wins outright
         if best is not None:
             self._pending.remove(best)
+            best.picked_at = time.perf_counter()
             return best
         if not has_stream and self._pending:
             self._pending.popleft()  # consume one close sentinel
@@ -732,8 +878,8 @@ class ForecastScheduler:
                             and not self._closed
                             and self._inflight_keys[key] > 0):
                         head.requeued = True
-                        with self._lock:
-                            self._requeued[head.spec.priority] += 1
+                        self.obs.requeued.inc(priority=head.spec.priority)
+                        self.obs.flight_record(head.request_id, "requeued")
                         self._pending.append(head)
                         continue
                 # final admission check: the window may have outlived a
@@ -761,12 +907,16 @@ class ForecastScheduler:
             try:
                 try:
                     self._serve_batch(batch)
-                    with self._lock:
-                        self._served += len(batch)
+                    self.obs.served.inc(len(batch))
                 except Exception as e:  # noqa: BLE001 -- keep serving
-                    with self._lock:
-                        self._failed += len(batch)
+                    self.obs.failed.inc(len(batch))
+                    _log.warning(
+                        "dispatch failed for %s: %s: %s",
+                        [s.request_id for s in batch], type(e).__name__, e)
                     for stream in batch:
+                        self.obs.flight_record(
+                            stream.request_id, "error",
+                            message=f"{type(e).__name__}: {e}")
                         self._finish(
                             stream,
                             {"event": "error",
@@ -785,10 +935,25 @@ class ForecastScheduler:
         single rollout, demuxing per-request events onto each stream.
         Runs each stream's ``serve_spec`` -- identical to the submitted
         spec unless the degrade policy latched a smaller member count,
-        which start/done events then report as ``degraded_members``."""
+        which start/done events then report as ``degraded_members``.
+
+        Observability here is clock-reads and value-copies only: with
+        tracing disabled (``traced`` False and ``on_span`` None) the
+        dispatch path is structurally the pre-observability one, and a
+        traced request runs the same lowered programs in the same order
+        -- bit-identical either way."""
         spec = streams[0].serve_spec
         b = len(streams)
         t_start = time.perf_counter()
+        traced = any(s.trace is not NULL_TRACE for s in streams)
+        for stream in streams:
+            picked = stream.picked_at or t_start
+            stream.trace.add("queue", stream.submitted_at, picked,
+                             args={"priority": stream.spec.priority})
+            stream.trace.add("coalesce", picked, t_start,
+                             args={"batch_size": b})
+            self.obs.flight_record(stream.request_id, "picked",
+                                   batch_size=b)
         # setup_s is everything between worker pickup and rollout start
         # that is NOT compilation proper: model-bundle / engine builds on
         # a cold config and time spent waiting on another request's
@@ -796,15 +961,23 @@ class ForecastScheduler:
         # latency would be silently misattributed (total_s != the sum of
         # its parts).
         engine, bundle = self._get_engine(spec)
+        t_engine = time.perf_counter()
         warm = self.cache.warm_engine(spec.config, engine, spec.scored,
                                       spec.lead_steps, bundle.params,
                                       bundle.buffers,
                                       batch=b if b > 1 else None)
+        t_warm = time.perf_counter()
+        for stream in streams:
+            stream.trace.add("engine_build", t_start, t_engine)
+            stream.trace.add(
+                "compile" if warm["misses"] else "aot_hit", t_engine,
+                t_warm, args={"compile_s": warm["compile_s"],
+                              "hits": warm["hits"],
+                              "misses": warm["misses"]})
         # warming may have installed new executables: re-check the pool
         # budget now, so cold shapes evict cold engines, not the tests
         self._engines.enforce_budget()
-        with self._lock:
-            self._batch_sizes[b] += 1
+        self.obs.batches.inc(size=str(b))
         setup_s = (time.perf_counter() - t_start) - warm["compile_s"]
         for i, stream in enumerate(streams):
             start = {"event": "start", "request_id": stream.request_id,
@@ -834,12 +1007,31 @@ class ForecastScheduler:
                 lambda n: ds.state(sm, n + 1)))(s.spec.sample)
                 for s in streams}
             truths = [by_sample[s.spec.sample] for s in streams]
+        # stage_h2d spans: the stager's background thread reports each
+        # chunk's host materialization through this clock-only hook
+        # (None when observability is off -- the engine then runs the
+        # exact pre-observability stage functions)
+        on_span = None
+        if self.obs.enabled:
+            def on_span(name, s_t0, s_t1, args=None):
+                self.obs.h2d_seconds.observe(s_t1 - s_t0)
+                for st in streams:
+                    st.trace.add(name, s_t0, s_t1, args=args)
+
+        # opt-in device profiling: process-global, so at most one
+        # session at a time (the hub's lock arbitrates); never enters
+        # engine_key/batch_key and never fails the request
+        prof_ids = [s.request_id for s in streams if s.serve_spec.profile]
+        prof_cm = (self.obs.profile_session("_".join(prof_ids))
+                   if prof_ids and self.obs.config.profile_dir
+                   else contextlib.nullcontext(None))
         run_t0 = time.perf_counter()
         if b == 1:
             blocks = ([blk] for blk in engine.stream(
                 bundle.params, bundle.buffers, state0s[0], auxs[0],
                 keys[0], steps=spec.lead_steps,
-                truth=truths[0] if truths is not None else None))
+                truth=truths[0] if truths is not None else None,
+                on_span=on_span))
         else:
             # cancellation-aware shrink: the engine polls the surviving
             # (non-cancelled) member indices at every chunk boundary and
@@ -849,33 +1041,56 @@ class ForecastScheduler:
                 bundle.params, bundle.buffers, state0s, auxs, keys,
                 steps=spec.lead_steps, truths=truths,
                 survivors=lambda: [j for j, st in enumerate(streams)
-                                   if not st.cancelled])
+                                   if not st.cancelled],
+                on_span=on_span)
 
         chunk_s: list[list[float]] = [[] for _ in streams]
         finals: list = [None] * b
         last_ready = [run_t0]
         shrunk = [False]
+        rollout_sids: dict[str, int] = {}
+        if traced:
+            for stream in streams:
+                stream.trace.add("inputs", t_warm, run_t0,
+                                 args={"batch_size": b})
+                rollout_sids[stream.request_id] = stream.trace.begin(
+                    "rollout", args={"batch_size": b})
 
         def fetch_and_emit(index: int, block_list) -> None:
             # Runs on the dedicated fetch thread, in chunk order: the
-            # device->host score download (np.asarray inside
-            # chunk_event) happens here, so the dispatch thread is
-            # already staging and enqueueing chunk k+1 while chunk k's
-            # scores stream out.
-            evs = []
+            # device->host score download happens here, so the dispatch
+            # thread is already staging and enqueueing chunk k+1 while
+            # chunk k's scores download (score_fetch) and encode.
+            f0 = time.perf_counter() if traced else 0.0
+            host_blocks: list = [None] * len(block_list)
             for j, (stream, blk) in enumerate(zip(streams, block_list)):
                 if stream.cancelled or blk is None:
                     # blk is None exactly when the rollout shrank away
                     # from this (cancelled) member's slot
                     if blk is None and not shrunk[0]:
                         shrunk[0] = True
-                        with self._lock:
-                            self._batch_shrinks += 1
+                        self.obs.batch_shrinks.inc()
+                        for st in streams:
+                            self.obs.flight_record(st.request_id,
+                                                   "shrink", index=index)
                     continue
-                ev = transport.chunk_event(stream.request_id, index, blk)
+                # materialize the scores on host NOW (same transfer the
+                # fused chunk_event used to do; np.asarray below is then
+                # a no-op view, so the wire bytes are unchanged)
+                host_scores = {k: np.asarray(jax.device_get(v), np.float32)
+                               for k, v in blk.scores.items()}
                 if blk.final_state is not None and stream.spec.return_state:
                     finals[j] = np.asarray(jax.device_get(blk.final_state))
-                evs.append((j, stream, ev))
+                host_blocks[j] = types.SimpleNamespace(
+                    lead_steps=blk.lead_steps, scores=host_scores)
+            f1 = time.perf_counter() if traced else 0.0
+            evs = []
+            for j, (stream, blk) in enumerate(zip(streams, host_blocks)):
+                if blk is None:
+                    continue
+                evs.append((j, stream,
+                            transport.chunk_event(stream.request_id,
+                                                  index, blk)))
             now = time.perf_counter()
             dt = now - last_ready[0]
             last_ready[0] = now
@@ -883,18 +1098,49 @@ class ForecastScheduler:
                 ev["chunk_s"] = dt
                 chunk_s[j].append(dt)
                 stream.put(ev)
+            if traced:
+                for j, stream, ev in evs:
+                    parent = rollout_sids.get(stream.request_id, 0)
+                    stream.trace.add("score_fetch", f0, f1, parent=parent,
+                                     args={"index": index})
+                    stream.trace.add("encode", f1, now, parent=parent,
+                                     args={"index": index})
 
         futures = []
-        with ThreadPoolExecutor(max_workers=1,
-                                thread_name_prefix="d2h-fetch") as ex:
-            for index, block_list in enumerate(blocks):
-                futures.append(ex.submit(fetch_and_emit, index, block_list))
-                if all(s.cancelled for s in streams):
-                    break
-            for f in futures:
-                f.result()  # propagate fetch/encode failures
+        with prof_cm as prof_path:
+            with ThreadPoolExecutor(max_workers=1,
+                                    thread_name_prefix="d2h-fetch") as ex:
+                block_iter = enumerate(blocks)
+                while True:
+                    c0 = time.perf_counter() if traced else 0.0
+                    try:
+                        index, block_list = next(block_iter)
+                    except StopIteration:
+                        break
+                    if traced:
+                        c1 = time.perf_counter()
+                        for stream in streams:
+                            stream.trace.add(
+                                f"chunk[{index}]", c0, c1,
+                                parent=rollout_sids.get(stream.request_id,
+                                                        0),
+                                args={"index": index})
+                    futures.append(ex.submit(fetch_and_emit, index,
+                                             block_list))
+                    if all(s.cancelled for s in streams):
+                        break
+                for f in futures:
+                    f.result()  # propagate fetch/encode failures
         run_s = time.perf_counter() - run_t0
+        if traced:
+            for stream in streams:
+                end_args = {"run_s": run_s}
+                if prof_path:
+                    end_args["xla_trace"] = prof_path
+                stream.trace.end(rollout_sids[stream.request_id],
+                                 args=end_args)
         for j, stream in enumerate(streams):
+            d0 = time.perf_counter() if traced else 0.0
             queue_s = t_start - stream.submitted_at
             total_s = time.perf_counter() - stream.submitted_at
             done = {
@@ -909,10 +1155,17 @@ class ForecastScheduler:
                            "chunk_s": chunk_s[j]},
                 "cache": {"hits": warm["hits"], "misses": warm["misses"]},
             }
+            if prof_path:
+                done["profile"] = prof_path
             if stream.degraded_members is not None:
                 done["degraded_members"] = stream.degraded_members
             if finals[j] is not None:
                 done["final_state"] = transport.encode_array(finals[j])
+            if traced:
+                stream.trace.add("finalize", d0, time.perf_counter())
+            self.obs.flight_record(stream.request_id, "done",
+                                   total_s=round(total_s, 6),
+                                   cancelled=stream.cancelled)
             self._finish(stream, done)
             if not stream.cancelled:
                 # per-class latency SLO samples (sliding window); shed
@@ -921,3 +1174,7 @@ class ForecastScheduler:
                 with self._lock:
                     self._latency[stream.spec.priority].append(
                         (queue_s, total_s))
+                self.obs.queue_seconds.observe(
+                    queue_s, priority=stream.spec.priority)
+                self.obs.total_seconds.observe(
+                    total_s, priority=stream.spec.priority)

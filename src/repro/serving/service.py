@@ -18,6 +18,17 @@ Routes:
   bundle (see ``repro.serving.bundle``).
 * ``GET /healthz``      -- liveness; includes ``bundle_id`` when the
   replica booted from a bundle.
+* ``GET /metrics``      -- the scheduler's metrics registry in
+  Prometheus text exposition format.  Counters here and ``/v1/stats``
+  are two renderings of one store (``repro.serving.observability``),
+  so the views agree exactly.
+* ``GET /v1/trace/<request_id>`` -- a served request's span tree as
+  Chrome/Perfetto trace-event JSON (load it at ``ui.perfetto.dev``);
+  404 once the trace ages out of the bounded in-memory ring (the
+  service's ``--trace-dir`` flag persists every trace to disk too).
+* ``GET /v1/debug/requests`` -- the flight recorder: the last N request
+  lifecycle event sequences (submit/pick/shed/degrade/shrink/done...)
+  for post-mortem without a debugger attached.
 
 Framing: HTTP/1.0 close-delimited bodies.  Every stdlib client handles
 them, the handler stays small, and chunk latency is dominated by device
@@ -34,6 +45,7 @@ further chunks while its companions finish.
 from __future__ import annotations
 
 import json
+import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 from repro.serving import transport
@@ -94,6 +106,26 @@ class _ForecastHandler(BaseHTTPRequestHandler):
             self._json(200, ok)
         elif self.path == "/v1/stats":
             self._json(200, self.service.scheduler.stats())
+        elif self.path == "/metrics":
+            body = (self.service.scheduler.obs.metrics.prometheus_text()
+                    .encode("utf-8"))
+            self.send_response(200)
+            self.send_header("Content-Type",
+                             "text/plain; version=0.0.4; charset=utf-8")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+        elif self.path.startswith("/v1/trace/"):
+            rid = self.path[len("/v1/trace/"):]
+            trace = self.service.scheduler.trace_json(rid)
+            if trace is None:
+                self._json(404, {"error": f"no trace for request {rid!r} "
+                                          f"(unknown id, tracing disabled, "
+                                          f"or aged out of the ring)"})
+            else:
+                self._json(200, trace)
+        elif self.path == "/v1/debug/requests":
+            self._json(200, self.service.scheduler.debug_requests())
         else:
             self._json(404, {"error": f"no route {self.path}"})
 
@@ -116,11 +148,20 @@ class _ForecastHandler(BaseHTTPRequestHandler):
         self.send_header("Content-Type", transport.NDJSON_MIME)
         self.send_header("Connection", "close")
         self.end_headers()
+        t_stream = time.perf_counter()
+        n_events = 0
         try:
             for ev in stream.events():
                 self.wfile.write(transport.dump_event(ev))
                 self.wfile.flush()
+                n_events += 1
         except (BrokenPipeError, ConnectionResetError):
             # Client hung up mid-stream: stop the rollout at the next
             # chunk boundary; the worker moves on to the next request.
             stream.cancel()
+        finally:
+            # the stream span covers serialization + socket writes for
+            # the whole NDJSON response; recorded after the trace's root
+            # closed, so the on-disk dump is refreshed to include it
+            self.service.scheduler.obs.note_stream(
+                stream.trace, t_stream, time.perf_counter(), n_events)

@@ -50,6 +50,13 @@ class RequestSpec:
     missing it, reported honestly in start/done events).  None of the
     three enters ``engine_key``/``batch_key`` -- QoS must route traffic,
     never fragment the compiled-program cache.
+
+    ``profile`` (default False) opts this request's rollout into a
+    ``jax.profiler`` trace when the server was launched with
+    ``--profile-dir`` (inert otherwise); the XLA trace path is linked
+    into the request's span tree and ``done`` event.  Like the QoS
+    fields it never enters ``engine_key``/``batch_key`` -- a profiled
+    request dispatches the same warm executables and stays bit-identical.
     """
 
     config: str = "smoke"
@@ -71,6 +78,7 @@ class RequestSpec:
     priority: str = "batch"
     deadline_ms: float | None = None
     degrade: bool = False
+    profile: bool = False
 
     @classmethod
     def from_dict(cls, d: dict) -> "RequestSpec":
@@ -145,7 +153,7 @@ class RequestSpec:
     _INT_FIELDS = ("members", "lead_steps", "lead_chunk", "bred_cycles",
                    "sample", "seed")
     _BOOL_FIELDS = ("ensemble_transform", "spectra", "scored",
-                    "return_state", "coalesce", "degrade")
+                    "return_state", "coalesce", "degrade", "profile")
     _STR_FIELDS = ("config", "precision", "perturb", "kernels", "priority")
 
     def _type_problems(self) -> list[str]:

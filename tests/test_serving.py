@@ -497,7 +497,7 @@ class TestPersistedExecutables:
                                       np.asarray(direct.scores["crps"]))
 
     def test_stale_blob_recompiles_instead_of_poisoning(self, pool,
-                                                        tmp_path, capsys):
+                                                        tmp_path, caplog):
         # A corrupt/incompatible persisted file must fall back to a
         # fresh compile and be replaced, not fail every request for its
         # key until someone wipes the directory.
@@ -506,13 +506,15 @@ class TestPersistedExecutables:
         cache = ExecutableCache(persist_dir=d)
         eng = ForecastEngine(b.model, SPEC.engine_config())
         key = ExecutableKey.for_engine("smoke", eng, True, 2)
+        import logging
         import os
         os.makedirs(d, exist_ok=True)
         with open(cache._path(key), "wb") as f:
             f.write(b"not a stablehlo module")
-        out = cache.warm(key, eng, b.params, b.buffers)
+        with caplog.at_level(logging.WARNING, "repro.serving.cache"):
+            out = cache.warm(key, eng, b.params, b.buffers)
         assert not out["hit"] and out["source"] == "compiled"
-        assert "discarding stale executable" in capsys.readouterr().out
+        assert "discarding stale executable" in caplog.text
         assert eng.has_chunk_executable(True, 2, b.params, b.buffers)
         # the bad file was replaced by a loadable one
         eng2 = ForecastEngine(b.model, SPEC.engine_config())
