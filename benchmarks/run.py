@@ -17,6 +17,10 @@ EXPERIMENTS.md (dry-run roofline terms for the production mesh).
                                              request latency with tracing
                                              disabled vs enabled (overhead
                                              must sit within host noise)
+  sec5_serving_faults                     -- fault-substrate cost A/B: warm
+                                             request latency with injection
+                                             unarmed (NULL_FAULTS) vs armed
+                                             on a never-firing fault
   sec5_kernels                            -- op-level SHT/DISCO dispatch A/B
                                              (reference vs Pallas substrate)
                                              + banded-psi buffer footprint
@@ -646,6 +650,59 @@ def bench_observability(members: int = 2, steps: int = 4) -> None:
             sched.close()
 
 
+def bench_serving_faults(members: int = 2, steps: int = 4) -> None:
+    """docs/serving.md#fault-tolerance: the fault substrate's cost A/B.
+
+    One warm single-worker scheduler per arm serving the same request
+    shape: *disabled* (no ``--fault`` args, the scheduler holds
+    ``NULL_FAULTS`` and the dispatch path is structurally identical to
+    pre-fault-tolerance) vs *armed-but-idle* (a real injector armed on
+    a fault that never fires, which additionally wraps H2D staging
+    callables).  Round-robin best-of bursts, same noisy-host discipline
+    as ``_ab_timeit``.  The row's value is the armed arm's warm-request
+    latency; ``overhead_pct`` is the acceptance gate (the armed path
+    exists for tests/chaos drills, but must still sit within host
+    noise -- the *disabled* path's only cost is one ``is NULL_FAULTS``
+    identity check).
+    """
+    from repro.serving.cache import ExecutableCache
+    from repro.serving.faults import FaultInjector
+    from repro.serving.scheduler import (ForecastScheduler, ModelPool,
+                                         RequestSpec)
+    pool = ModelPool()
+    spec = RequestSpec(config="smoke", members=members, lead_steps=steps,
+                       lead_chunk=max(1, steps // 2), scored=True)
+    arms = {}
+    try:
+        for name, faults in (
+                ("disabled", None),
+                ("armed_idle", FaultInjector.from_args(
+                    ["rollout_chunk:n=1000000000"]))):
+            arms[name] = ForecastScheduler(
+                pool=pool, cache=ExecutableCache(), max_concurrency=1,
+                faults=faults)
+            arms[name].warmup(spec)
+            arms[name].submit(spec).result()  # first-request one-offs
+        best = dict.fromkeys(arms, float("inf"))
+        for _ in range(5):
+            for name, sched in arms.items():
+                t0 = time.perf_counter()
+                sched.submit(spec).result()
+                best[name] = min(best[name], time.perf_counter() - t0)
+        overhead = 100.0 * (best["armed_idle"] - best["disabled"]) \
+            / best["disabled"]
+        fired = arms["armed_idle"].stats()["fault_tolerance"][
+            "faults"]["fired"]
+        assert not fired, f"idle arm fired faults: {fired}"
+        _row("sec5_serving_faults", best["armed_idle"] * 1e6,
+             f"armed_idle_us={best['armed_idle'] * 1e6:.1f};"
+             f"disabled_us={best['disabled'] * 1e6:.1f};"
+             f"overhead_pct={overhead:.2f}")
+    finally:
+        for sched in arms.values():
+            sched.close()
+
+
 def _append_history(path: str, rows: list[dict]) -> None:
     """Append this run's sec5 rows to a benchmark-trajectory JSON file.
 
@@ -689,6 +746,8 @@ BENCHES = {
     "sec5_serving": lambda a: bench_serving(a.members, a.steps),
     "sec5_serving_qos": lambda a: bench_serving_qos(a.members, a.steps),
     "sec5_observability": lambda a: bench_observability(a.members, a.steps),
+    "sec5_serving_faults": lambda a: bench_serving_faults(a.members,
+                                                          a.steps),
     "sec5_bundle": lambda a: bench_bundle(a.members, a.steps),
     "sec5_kernels": lambda a: bench_sec5_kernels(),
     "table3_train_step": lambda a: bench_train_step(),

@@ -120,6 +120,28 @@ def main(argv=None) -> None:
                          "hook: requests sending 'profile': true get "
                          "their rollout captured as an XLA trace under "
                          "this directory (inert when unset)")
+    ap.add_argument("--fault", action="append", default=[],
+                    metavar="POINT:SPEC",
+                    help="arm a deterministic fault (repeatable), e.g. "
+                         "'rollout_chunk:n=2' (fail exactly the 2nd "
+                         "chunk), 'import_chunk:first=3,kind=permanent' "
+                         "or 'stream_write:p=0.1,seed=7'; see "
+                         "repro.serving.faults.FaultSpec.  Unarmed "
+                         "points cost nothing")
+    ap.add_argument("--retry-backoff-ms", type=float, default=50.0,
+                    help="base delay for per-request transient retries "
+                         "(exponential: base * 2^(attempt-1), capped)")
+    ap.add_argument("--breaker-threshold", type=int, default=3,
+                    help="consecutive build/compile failures on one "
+                         "engine key before its circuit opens (requests "
+                         "shed with reason=circuit_open, no compile)")
+    ap.add_argument("--breaker-cooldown-s", type=float, default=30.0,
+                    help="seconds an open circuit waits before letting "
+                         "one half-open probe through")
+    ap.add_argument("--resume-grace-s", type=float, default=15.0,
+                    help="seconds a disconnected client may reclaim its "
+                         "stream via GET /v1/stream/<id>?from=<seq> "
+                         "before the request is cancelled")
     ap.add_argument("--no-tracing", action="store_true",
                     help="disable request tracing and the flight "
                          "recorder (metrics stay on -- they back "
@@ -158,6 +180,16 @@ def main(argv=None) -> None:
             ap.error(f"--warm {raw!r}: {e}")
         warm_specs.append(spec)
 
+    faults = None
+    if args.fault:
+        from repro.serving.faults import FaultInjector
+        try:
+            faults = FaultInjector.from_args(args.fault)
+        except ValueError as e:
+            ap.error(f"--fault: {e}")
+        _log.warning("fault injection ARMED: %s (do not deploy this "
+                     "replica to production)", args.fault)
+
     pool = ModelPool({args.config[0]: args.ckpt} if args.ckpt else None)
     sched_kwargs = dict(
         max_concurrency=args.max_concurrency, queue_size=args.queue_size,
@@ -167,7 +199,16 @@ def main(argv=None) -> None:
                              else None),
         aging_ms=args.aging_ms,
         degrade_margin_ms=args.degrade_margin_ms,
-        observability=obs_config)
+        observability=obs_config,
+        faults=faults,
+        retry_backoff_ms=args.retry_backoff_ms,
+        breaker_threshold=args.breaker_threshold,
+        breaker_cooldown_s=args.breaker_cooldown_s,
+        resume_grace_s=args.resume_grace_s,
+        # readiness gate: /readyz stays 503 ("starting") until preload
+        # + warmup below finish, so LB traffic probes never route to a
+        # replica that would eat a cold compile
+        ready=False)
     if args.bundle:
         # Zero-cold-start boot: verify + install plans + pre-warm every
         # bundled engine from StableHLO blobs (readonly cache -- any
@@ -201,11 +242,15 @@ def main(argv=None) -> None:
                       args.max_batch, outb["compile_s"],
                       [o["source"] for o in outb["outcomes"]])
 
+    # Preload + warmup done: flip /readyz from "starting" to "ready".
+    scheduler.mark_ready()
+
     service = ForecastService(scheduler=scheduler)
     server = service.make_server(args.host, args.port)
     host, port = server.server_address[:2]
     _log.info("listening on http://%s:%s (POST /v1/forecast, "
-              "GET /v1/stats, GET /metrics, GET /healthz)", host, port)
+              "GET /v1/stats, GET /metrics, GET /healthz, GET /readyz)",
+              host, port)
     try:
         server.serve_forever()
     except KeyboardInterrupt:

@@ -30,6 +30,16 @@ Three pillars:
                    (``GET /v1/debug/requests``).  See
                    docs/observability.md.
 
+* ``faults``    -- the fault-tolerance substrate (ISSUE 9):
+                   deterministic fault injection (``--fault`` on the
+                   launcher; ``NULL_FAULTS`` when unarmed), transient/
+                   permanent error classification behind per-request
+                   retries, per-engine-key circuit breakers and the
+                   replica health state machine behind ``GET /readyz``.
+                   Streams survive disconnects via a bounded replay
+                   ring (``GET /v1/stream/<id>?from=<seq>``) and the
+                   client auto-resumes.  See docs/serving.md.
+
 Launch with ``python -m repro.launch.service``; see docs/serving.md and
 docs/deployment.md (docs/README.md is the index).
 
@@ -50,6 +60,16 @@ from repro.serving.cache import (  # noqa: F401
     ExecutableKey,
     ReadOnlyCacheMiss,
 )
+from repro.serving.faults import (  # noqa: F401
+    NULL_FAULTS,
+    CircuitBreaker,
+    CircuitOpenError,
+    FaultInjector,
+    FaultSpec,
+    InjectedFault,
+    ReplicaHealth,
+    classify_error,
+)
 from repro.serving.observability import (  # noqa: F401
     FlightRecorder,
     Observability,
@@ -59,6 +79,7 @@ from repro.serving.spec import RequestSpec  # noqa: F401
 from repro.serving.transport import (  # noqa: F401
     ServedForecast,
     ServingError,
+    StreamInterrupted,
 )
 
 _LAZY = {
@@ -66,6 +87,7 @@ _LAZY = {
     "ForecastStream": "repro.serving.scheduler",
     "ModelPool": "repro.serving.scheduler",
     "QueueFull": "repro.serving.scheduler",
+    "ReplayGone": "repro.serving.scheduler",
     "build_bundle": "repro.serving.scheduler",
     "ForecastService": "repro.serving.service",
     # pack/boot compile through the scheduler stack (jax); the manifest

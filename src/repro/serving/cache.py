@@ -36,6 +36,8 @@ import os
 import threading
 import time
 
+from repro.serving import faults as faultlib
+
 _log = logging.getLogger("repro.serving.cache")
 
 _CODE_FINGERPRINT: str | None = None
@@ -150,10 +152,17 @@ class ExecutableCache:
         self._lock = threading.Lock()
         self._key_locks: dict[ExecutableKey, threading.Lock] = {}
         self._known: set[ExecutableKey] = set()
+        self._faults = faultlib.NULL_FAULTS
         self.hits = 0
         self.misses = 0
         self.disk_hits = 0
+        self.quarantined = 0
         self.compile_s = 0.0
+
+    def bind_faults(self, injector) -> None:
+        """Route this cache's fault points (``compile``, ``cache_read``,
+        ``cache_write``, ``import_chunk``) through ``injector``."""
+        self._faults = injector
 
     def _path(self, key: ExecutableKey) -> str | None:
         if not self.persist_dir:
@@ -168,30 +177,56 @@ class ExecutableCache:
 
     def _from_disk(self, key: ExecutableKey, path: str, engine, params,
                    buffers) -> bool:
-        """Try installing a persisted blob; a stale/incompatible file is
-        removed and reported as a miss (recompile), never a poisoned key.
-        A readonly cache instead raises ``ReadOnlyCacheMiss`` on a load
-        failure -- the blob came from a bundle and must not be deleted
-        or silently recompiled around."""
+        """Try installing a persisted blob.
+
+        Two distinct failure modes, handled differently: a *read*
+        failure (I/O error fetching the bytes) leaves the file alone --
+        the disk may merely be flaky, and the recompile writes a fresh
+        blob over it anyway.  An *import* failure (the bytes are there
+        but ``jax.export`` rejects them) **quarantines** the blob --
+        renamed to ``*.corrupt`` and counted -- so a corrupt file fails
+        at most once instead of on every boot, and the evidence
+        survives for a post-mortem.  Both fall back to recompiling.  A
+        readonly cache instead raises ``ReadOnlyCacheMiss`` on any load
+        failure -- the blob came from a bundle and must not be renamed
+        or silently recompiled around.
+        """
         try:
+            self._faults.fire("cache_read", path=path)
             with open(path, "rb") as f:
                 blob = f.read()
+        except (OSError, faultlib.InjectedFault) as e:
+            if self.readonly:
+                raise ReadOnlyCacheMiss(
+                    f"bundle executable {path} for key {key!r} failed to "
+                    f"read ({type(e).__name__}: {e}); refusing to "
+                    f"recompile -- the bundle does not match this "
+                    f"process") from e
+            _log.warning("failed to read executable %s (%s: %s); "
+                         "recompiling", path, type(e).__name__, e)
+            return False
+        try:
+            self._faults.fire("import_chunk", path=path)
             engine.import_chunk(key.scored, key.chunk_len, blob,
                                 params, buffers, batch=key.batch)
             return True
-        except Exception as e:  # noqa: BLE001 -- any load failure => recompile
+        except Exception as e:  # noqa: BLE001 -- any import failure => recompile
             if self.readonly:
                 raise ReadOnlyCacheMiss(
                     f"bundle executable {path} for key {key!r} failed to "
                     f"load ({type(e).__name__}: {e}); refusing to "
                     f"recompile -- the bundle does not match this "
                     f"process") from e
+            qpath = path + ".corrupt"
             try:
-                os.remove(path)
+                os.replace(path, qpath)
             except OSError:
-                pass
-            _log.warning("discarding stale executable %s (%s: %s); "
-                         "recompiling", path, type(e).__name__, e)
+                qpath = "<unlinked>"
+            with self._lock:
+                self.quarantined += 1
+            _log.warning("quarantined corrupt executable %s -> %s "
+                         "(%s: %s); recompiling", path, qpath,
+                         type(e).__name__, e)
             return False
 
     def warm(self, key: ExecutableKey, engine, params, buffers) -> dict:
@@ -227,6 +262,7 @@ class ExecutableCache:
                     f"no bundle executable for key {key!r} "
                     f"(looked for {path}); refusing to compile -- the "
                     f"bundle was not built for this engine/request shape")
+            self._faults.fire("compile", key=str(key.chunk_len))
             if path:
                 # Persisting anyway: trace/lower once through jax.export
                 # and install from the exported module, instead of
@@ -236,6 +272,7 @@ class ExecutableCache:
                 blob = engine.export_chunk(key.scored, key.chunk_len,
                                            params, buffers,
                                            batch=key.batch)
+                self._faults.fire("cache_write", path=path)
                 tmp = f"{path}.tmp.{os.getpid()}"
                 with open(tmp, "wb") as f:
                     f.write(blob)
@@ -279,6 +316,7 @@ class ExecutableCache:
         with self._lock:
             return {"keys": len(self._known), "hits": self.hits,
                     "misses": self.misses, "disk_hits": self.disk_hits,
+                    "quarantined": self.quarantined,
                     "compile_s": self.compile_s,
                     "persist_dir": self.persist_dir,
                     "readonly": self.readonly}
@@ -311,6 +349,9 @@ class ExecutableCache:
                  "type": "counter",
                  "help": "Cumulative lowering/compile/restore seconds",
                  "samples": [({}, s["compile_s"])]},
+                {"name": p + "cache_quarantined_total", "type": "counter",
+                 "help": "Corrupt persisted blobs quarantined (*.corrupt)",
+                 "samples": [({}, s["quarantined"])]},
                 {"name": p + "cache_keys", "type": "gauge",
                  "help": "Distinct executable keys seen",
                  "samples": [({}, s["keys"])]},

@@ -32,22 +32,54 @@ from repro.serving.spec import RequestSpec
 
 
 class ForecastClient:
-    """Stdlib-only HTTP client: one connection per call, no jax import."""
+    """Stdlib-only HTTP client: one connection per call, no jax import.
+
+    Timeouts are split: ``connect_timeout`` bounds the TCP connect (a
+    dead host should fail in seconds, not minutes) while
+    ``read_timeout`` bounds each wait for the next byte of a response
+    -- a streamed forecast legitimately pauses for a cold compile, so
+    the read bound stays generous.  The legacy single ``timeout``
+    argument is still accepted and becomes the read timeout.
+
+    ``stream``/``forecast`` transparently **auto-resume**: when the
+    connection dies mid-stream the client reconnects with backoff to
+    ``GET /v1/stream/<id>?from=<n>`` (``n`` = events already received)
+    and continues byte-identically; after ``max_resumes`` failed
+    attempts it raises ``transport.StreamInterrupted`` -- a distinct,
+    actionable error naming the request id and resume cursor, not a
+    generic server failure.  Pass ``resume=False`` to fail fast on the
+    first disconnect instead.
+    """
 
     def __init__(self, host: str = "127.0.0.1", port: int = 8771,
-                 timeout: float = 600.0):
+                 timeout: float = 600.0, connect_timeout: float = 10.0,
+                 read_timeout: float | None = None,
+                 resume: bool = True, max_resumes: int = 4,
+                 resume_backoff_s: float = 0.25):
         self.host = host
         self.port = port
         self.timeout = timeout
+        self.connect_timeout = connect_timeout
+        self.read_timeout = timeout if read_timeout is None else read_timeout
+        self.resume = resume
+        self.max_resumes = max(0, max_resumes)
+        self.resume_backoff_s = max(0.0, resume_backoff_s)
 
     def _connect(self) -> http.client.HTTPConnection:
         return http.client.HTTPConnection(self.host, self.port,
-                                          timeout=self.timeout)
+                                          timeout=self.connect_timeout)
+
+    def _widen_timeout(self, conn: http.client.HTTPConnection) -> None:
+        """Swap the socket to the read timeout once connected: the
+        connect bound did its job, body reads get the generous one."""
+        if conn.sock is not None:
+            conn.sock.settimeout(self.read_timeout)
 
     def _get_json(self, path: str) -> dict:
         conn = self._connect()
         try:
             conn.request("GET", path)
+            self._widen_timeout(conn)
             resp = conn.getresponse()
             body = resp.read()
             if resp.status != 200:
@@ -77,6 +109,7 @@ class ForecastClient:
         conn = self._connect()
         try:
             conn.request("GET", "/metrics")
+            self._widen_timeout(conn)
             resp = conn.getresponse()
             body = resp.read()
             if resp.status != 200:
@@ -94,14 +127,29 @@ class ForecastClient:
         """The server's flight-recorder snapshot."""
         return self._get_json("/v1/debug/requests")
 
-    def stream(self, spec: RequestSpec | dict):
-        """Yield transport events as the server emits them (NDJSON)."""
-        body = json.dumps(spec.to_dict() if isinstance(spec, RequestSpec)
-                          else spec)
+    def readyz(self) -> dict:
+        """The replica health snapshot (state/reasons/transitions).
+        Unlike a load balancer, the client accepts the 503 rendering of
+        a not-ready replica -- callers inspect ``state``."""
         conn = self._connect()
         try:
-            conn.request("POST", "/v1/forecast", body,
-                         {"Content-Type": "application/json"})
+            conn.request("GET", "/readyz")
+            self._widen_timeout(conn)
+            resp = conn.getresponse()
+            return json.loads(resp.read())
+        finally:
+            conn.close()
+
+    def _open_stream(self, method: str, path: str,
+                     body: str | None = None):
+        """One streaming HTTP exchange; returns (conn, resp) with the
+        read timeout installed, raising ``ServingError`` on non-200."""
+        conn = self._connect()
+        try:
+            headers = ({"Content-Type": "application/json"}
+                       if body is not None else {})
+            conn.request(method, path, body, headers)
+            self._widen_timeout(conn)
             resp = conn.getresponse()
             if resp.status != 200:
                 err = resp.read().decode("utf-8", "replace")
@@ -110,10 +158,74 @@ class ForecastClient:
                 except json.JSONDecodeError:
                     pass
                 raise transport.ServingError(
-                    f"POST /v1/forecast -> {resp.status}: {err}")
-            yield from transport.read_events(resp)
-        finally:
+                    f"{method} {path} -> {resp.status}: {err}")
+            return conn, resp
+        except BaseException:
             conn.close()
+            raise
+
+    def stream(self, spec: RequestSpec | dict):
+        """Yield transport events as the server emits them (NDJSON),
+        transparently resuming a dropped connection (see class doc)."""
+        body = json.dumps(spec.to_dict() if isinstance(spec, RequestSpec)
+                          else spec)
+        request_id: str | None = None
+        received = 0
+        resumes = 0
+        conn, resp = self._open_stream("POST", "/v1/forecast", body)
+        while True:
+            interrupted: Exception | None = None
+            try:
+                try:
+                    for ev in transport.read_events(resp):
+                        if request_id is None:
+                            request_id = ev.get("request_id")
+                        received += 1
+                        yield ev
+                        if ev.get("event") in transport.TERMINAL_EVENTS:
+                            return
+                    # close-delimited framing: EOF without a terminal
+                    # event IS a disconnect, not a completed stream
+                    interrupted = transport.StreamInterrupted(
+                        "connection closed mid-stream (no terminal event)",
+                        request_id=request_id, events_received=received)
+                except (transport.StreamInterrupted, ConnectionError,
+                        TimeoutError, OSError,
+                        http.client.HTTPException) as e:
+                    interrupted = e
+            finally:
+                conn.close()
+            # -- the stream died mid-flight: try to resume ------------
+            while True:
+                if (not self.resume or request_id is None
+                        or resumes >= self.max_resumes):
+                    raise transport.StreamInterrupted(
+                        f"stream for request {request_id or '<unknown>'} "
+                        f"dropped after {received} event(s) "
+                        f"({type(interrupted).__name__}: {interrupted}); "
+                        + (f"gave up after {resumes} resume attempt(s)"
+                           if self.resume and request_id is not None else
+                           "resume disabled" if request_id is not None else
+                           "no request id yet, cannot resume"),
+                        request_id=request_id, events_received=received)
+                time.sleep(self.resume_backoff_s * 2 ** resumes)
+                resumes += 1
+                try:
+                    conn, resp = self._open_stream(
+                        "GET", f"/v1/stream/{request_id}?from={received}")
+                    break
+                except transport.ServingError as e:
+                    # 404/410: the server cannot resume this stream at
+                    # all -- retrying the same GET would loop forever
+                    raise transport.StreamInterrupted(
+                        f"stream for request {request_id} dropped after "
+                        f"{received} event(s) and the server refused "
+                        f"the resume: {e}", request_id=request_id,
+                        events_received=received) from e
+                except (ConnectionError, TimeoutError, OSError) as e:
+                    # server not reachable (restarting?): burn an
+                    # attempt, back off longer, try again
+                    interrupted = e
 
     def forecast(self, spec: RequestSpec | dict) -> transport.ServedForecast:
         """Block until the rollout finishes; returns assembled arrays."""
@@ -133,7 +245,7 @@ def _spec_from_args(args: argparse.Namespace) -> RequestSpec:
         return_state=args.return_state,
         coalesce=not args.no_coalesce,
         priority=args.priority, deadline_ms=args.deadline_ms,
-        degrade=args.degrade)
+        degrade=args.degrade, max_retries=args.max_retries)
 
 
 def main(argv=None) -> None:
@@ -179,6 +291,15 @@ def main(argv=None) -> None:
                     help="opt in to graceful degradation: near the "
                          "deadline the server may serve the validated "
                          "member-count floor instead of missing")
+    ap.add_argument("--max-retries", type=int, default=0,
+                    help="server-side transient-failure retry budget "
+                         "for this request (0 = fail on first error)")
+    ap.add_argument("--no-resume", action="store_true",
+                    help="fail fast on a mid-stream disconnect instead "
+                         "of auto-resuming via GET /v1/stream/<id>")
+    ap.add_argument("--connect-timeout", type=float, default=10.0,
+                    help="seconds to wait for the TCP connect (reads "
+                         "keep the generous streaming timeout)")
     ap.add_argument("--timing-out", default=None,
                     help="save the timing/chunk report to this JSON file")
     args = ap.parse_args(argv)
@@ -188,7 +309,9 @@ def main(argv=None) -> None:
     except ValueError as e:
         ap.error(str(e))
 
-    client = ForecastClient(args.host, args.port)
+    client = ForecastClient(args.host, args.port,
+                            connect_timeout=args.connect_timeout,
+                            resume=not args.no_resume)
     client.health(retries=max(0, int(args.wait_s / 0.5)), delay=0.5)
     # monotonic clock: wall-clock (time.time) jumps under NTP slew and
     # produced nonsense chunk timings in long-running smoke loops

@@ -202,6 +202,21 @@ class Observability:
             p + "traces_total", "Request traces recorded")
         self.profiles = m.counter(
             p + "profiles_total", "jax.profiler sessions captured")
+        self.retries = m.counter(
+            p + "retries_total",
+            "Request re-dispatches after a transient failure")
+        self.worker_restarts = m.counter(
+            p + "worker_restarts_total",
+            "Crashed worker threads restarted by the supervisor")
+        self.circuit_open_shed = m.counter(
+            p + "circuit_open_shed_total",
+            "Requests shed fast because their engine key's circuit was open")
+        self.stream_disconnects = m.counter(
+            p + "stream_disconnects_total",
+            "Client connections that dropped mid-stream")
+        self.stream_resumes = m.counter(
+            p + "stream_resumes_total",
+            "Streams resumed via GET /v1/stream/<id>?from=<seq>")
 
     # -- tracing ----------------------------------------------------------
 

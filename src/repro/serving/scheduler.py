@@ -44,9 +44,9 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import hashlib
 import itertools
 import logging
-import queue
 import threading
 import time
 import types
@@ -62,6 +62,9 @@ from repro.inference import ForecastEngine, InitialConditionPerturbation
 from repro.inference.params import load_params
 from repro.serving import transport
 from repro.serving.cache import ExecutableCache
+from repro.serving.faults import (CircuitBreaker, CircuitOpenError,
+                                  HEALTH_STATES, NULL_FAULTS, ReplicaHealth,
+                                  classify_error)
 from repro.serving.observability import (METRIC_PREFIX, NULL_TRACE,
                                          Observability, ObservabilityConfig)
 from repro.serving.spec import RequestSpec  # noqa: F401 -- re-export
@@ -71,6 +74,11 @@ _log = logging.getLogger("repro.serving.scheduler")
 
 class QueueFull(RuntimeError):
     """The scheduler's request queue is at capacity (HTTP 503)."""
+
+
+class ReplayGone(RuntimeError):
+    """A resume asked for events that aged out of the replay ring
+    (or lie beyond the stream's terminal event) -- HTTP 410."""
 
 
 _SHUTDOWN = object()  # _pick_locked's "a close sentinel was consumed"
@@ -270,9 +278,22 @@ class ForecastStream:
     scheduler actually serves -- the submitted spec, unless the degrade
     policy latched a smaller member count), ``degraded_members`` (set
     iff degraded) and ``requeued`` (parked once to join the next batch
-    of its shape instead of rolling solo)."""
+    of its shape instead of rolling solo).
 
-    def __init__(self, request_id: str, spec: RequestSpec):
+    Fault tolerance turned the event queue into a bounded **replay
+    ring**: events keep an implicit sequence number (their ordinal in
+    the stream, starting at 0), the last ``replay_window`` of them stay
+    buffered after delivery, and ``events(from_seq=...)`` replays from
+    any still-buffered ordinal -- how ``GET /v1/stream/<id>?from=<seq>``
+    resumes a severed connection with bytes identical to the unbroken
+    stream.  ``started``/``next_chunk`` suppress duplicate events when
+    the scheduler re-dispatches the rollout after a transient failure
+    (``retries`` counts those); ``disconnected_at`` marks a consumer
+    that dropped mid-stream and is still within the resume grace.
+    """
+
+    def __init__(self, request_id: str, spec: RequestSpec,
+                 replay_window: int = 512):
         self.request_id = request_id
         self.spec = spec
         self.serve_spec = spec
@@ -285,14 +306,34 @@ class ForecastStream:
         self.submitted_at = time.perf_counter()
         self.deadline_at = (self.submitted_at + spec.deadline_ms / 1e3
                             if spec.deadline_ms is not None else None)
-        self._q: queue.Queue = queue.Queue()
+        # retry / resume bookkeeping (written by the worker / service)
+        self.started = False
+        self.next_chunk = 0
+        self.retries = 0
+        self.resumes = 0
+        self.disconnected_at: float | None = None
+        # the replay ring: events [_base, _base + len(_ring)) are
+        # buffered; older ones aged out (ReplayGone on resume)
+        self._capacity = max(8, int(replay_window))
+        self._ring: collections.deque = collections.deque()
+        self._base = 0
+        self._terminal_seq: int | None = None
+        self._ev_cond = threading.Condition()
         self._cancelled = threading.Event()
         self._terminal = False
         self._term_lock = threading.Lock()
 
     def put(self, ev: dict) -> None:
-        """Enqueue one transport event (called by the serving worker)."""
-        self._q.put(ev)
+        """Append one transport event to the ring (called by the
+        serving worker), waking any blocked ``events()`` iterators."""
+        with self._ev_cond:
+            self._ring.append(ev)
+            if ev.get("event") in transport.TERMINAL_EVENTS:
+                self._terminal_seq = self._base + len(self._ring) - 1
+            while len(self._ring) > self._capacity:
+                self._ring.popleft()
+                self._base += 1
+            self._ev_cond.notify_all()
 
     def put_terminal(self, ev: dict) -> bool:
         """Enqueue a terminal event at most once per stream: the first
@@ -304,13 +345,13 @@ class ForecastStream:
             if self._terminal:
                 return False
             self._terminal = True
-        self._q.put(ev)
+        self.put(ev)
         return True
 
     def cancel(self) -> None:
-        """Consumer went away: a solo rollout stops at the next chunk
-        boundary; a coalesced member is masked out of further chunk
-        events while its batch companions finish."""
+        """Consumer went away for good: a solo rollout stops at the next
+        chunk boundary; a coalesced member is masked out of further
+        chunk events while its batch companions finish."""
         self._cancelled.set()
 
     @property
@@ -318,13 +359,44 @@ class ForecastStream:
         """Whether the consumer cancelled this stream."""
         return self._cancelled.is_set()
 
-    def events(self):
-        """Yield transport events until a terminal one (blocking)."""
+    @property
+    def terminal(self) -> bool:
+        """Whether a terminal event has been enqueued."""
+        with self._term_lock:
+            return self._terminal
+
+    def seq_bounds(self) -> tuple[int, int, int | None]:
+        """``(base, end, terminal_seq)``: the buffered ordinal range
+        ``[base, end)`` and the terminal event's ordinal (or None)."""
+        with self._ev_cond:
+            return (self._base, self._base + len(self._ring),
+                    self._terminal_seq)
+
+    def events(self, from_seq: int = 0):
+        """Yield transport events from ordinal ``from_seq`` until a
+        terminal one (blocking).  Raises ``ReplayGone`` when the asked
+        ordinal aged out of the ring or lies beyond the terminal."""
+        i = max(0, int(from_seq))
         while True:
-            ev = self._q.get()
+            with self._ev_cond:
+                while True:
+                    if (self._terminal_seq is not None
+                            and i > self._terminal_seq):
+                        raise ReplayGone(
+                            f"stream {self.request_id} ended at seq "
+                            f"{self._terminal_seq}; nothing at {i}")
+                    if i < self._base:
+                        raise ReplayGone(
+                            f"events before seq {self._base} aged out of "
+                            f"the replay ring (asked from {i})")
+                    if i < self._base + len(self._ring):
+                        break
+                    self._ev_cond.wait()
+                ev = self._ring[i - self._base]
             yield ev
             if ev.get("event") in transport.TERMINAL_EVENTS:
                 return
+            i += 1
 
     def result(self) -> transport.ServedForecast:
         """Block until done and fold the stream into arrays."""
@@ -374,7 +446,16 @@ class ForecastScheduler:
                  degrade_margin_ms: float | None = None,
                  latency_window: int = 512,
                  observability: Observability | ObservabilityConfig
-                 | None = None):
+                 | None = None,
+                 faults=None,
+                 retry_backoff_ms: float = 50.0,
+                 retry_backoff_max_ms: float = 2000.0,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 30.0,
+                 replay_window: int = 512,
+                 resume_grace_s: float = 15.0,
+                 supervise_interval_s: float = 0.2,
+                 ready: bool = True):
         self.pool = pool if pool is not None else ModelPool()
         self.cache = cache if cache is not None else ExecutableCache()
         self.max_batch = max(1, max_batch)
@@ -382,6 +463,26 @@ class ForecastScheduler:
         self.aging_ms = max(0.0, aging_ms)
         self.degrade_margin_ms = degrade_margin_ms
         self._queue_size = queue_size
+        # fault tolerance: the injector is NULL_FAULTS unless faults were
+        # armed (--fault), so the instrumented points cost one no-op call
+        # on the unarmed path; the cache shares the same injector
+        self.faults = faults if faults is not None else NULL_FAULTS
+        self.cache.bind_faults(self.faults)
+        self.retry_backoff_ms = max(0.0, retry_backoff_ms)
+        self.retry_backoff_max_ms = max(self.retry_backoff_ms,
+                                        retry_backoff_max_ms)
+        self.breaker_threshold = max(1, breaker_threshold)
+        self.breaker_cooldown_s = max(0.0, breaker_cooldown_s)
+        self.replay_window = max(8, replay_window)
+        self.resume_grace_s = max(0.0, resume_grace_s)
+        self._supervise_interval = max(0.05, supervise_interval_s)
+        #: replica health state machine behind GET /readyz; constructed
+        #: ready unless the launcher wants to gate on preload/warmup
+        #: (ready=False + mark_ready())
+        self.health = ReplicaHealth(ready=ready)
+        # per-engine-key circuit breakers: (label, CircuitBreaker)
+        self._breakers: dict = {}
+        self._breaker_lock = threading.Lock()
         # the instrumentation hub: every counter below is a registry
         # instrument (/v1/stats reads them back; /metrics renders the
         # same registry), traces/flight events route through it too
@@ -401,6 +502,10 @@ class ForecastScheduler:
         self._ids = itertools.count()
         self._closed = False
         self._drained = False
+        # set the moment close() begins: retry backoffs wait on it so a
+        # drain never sleeps out an exponential backoff, and the
+        # supervisor loop uses it as its shutdown signal
+        self._closing = threading.Event()
         # sliding per-class latency window: (queue_s, total_s) samples
         # (a windowed percentile estimate, not a counter -- it stays
         # outside the registry; the total_seconds histogram is the
@@ -410,25 +515,37 @@ class ForecastScheduler:
         # streams submitted but not yet terminal -- what a timed-out
         # close() must unblock so no consumer hangs forever
         self._open: set = set()
+        # request_id -> stream, retained past terminal (bounded) so
+        # GET /v1/stream/<id>?from=<seq> can resume/replay recently
+        # finished streams too; guarded by _lock
+        self._by_id: collections.OrderedDict = collections.OrderedDict()
+        self._by_id_capacity = max(2 * queue_size, 256)
         # in-flight coalesced batches per batch_key, for straggler
         # re-forming (guarded by _cond: pick decisions read it)
         self._inflight_keys: collections.Counter = collections.Counter()
         # warm-start provenance: set by WarmStartBundle.boot on a replica
         # booted from a bundle, surfaced as the "bundle" stats block
         self._bundle_info: dict | None = None
+        self._crashes = 0
+        self._worker_ids = itertools.count()
         self._workers = [
-            threading.Thread(target=self._worker, daemon=True,
-                             name=f"forecast-worker-{i}")
-            for i in range(max(1, max_concurrency))]
+            threading.Thread(target=self._run_worker, daemon=True,
+                             name=f"forecast-worker-{next(self._worker_ids)}")
+            for _ in range(max(1, max_concurrency))]
         for w in self._workers:
             w.start()
+        self._supervisor = threading.Thread(target=self._supervise,
+                                            daemon=True,
+                                            name="forecast-supervisor")
+        self._supervisor.start()
 
     # ------------------------------------------------------------------
     def submit(self, spec: RequestSpec) -> ForecastStream:
         """Validate and enqueue; returns immediately with the stream."""
         t_admit = time.perf_counter()
         spec.validate()
-        stream = ForecastStream(f"r{next(self._ids)}", spec)
+        stream = ForecastStream(f"r{next(self._ids)}", spec,
+                                replay_window=self.replay_window)
         # trace/flight entries attach BEFORE the stream is visible to a
         # worker (a pickup may race the tail of submit otherwise)
         if self.obs.enabled:
@@ -464,6 +581,16 @@ class ForecastScheduler:
                 self._pending.append(stream)
                 with self._lock:
                     self._open.add(stream)
+                    self._by_id[stream.request_id] = stream
+                    # retain recently finished streams for resume, but
+                    # never evict one that is still open
+                    while len(self._by_id) > self._by_id_capacity:
+                        for rid, s in self._by_id.items():
+                            if s not in self._open:
+                                del self._by_id[rid]
+                                break
+                        else:
+                            break
                 self._cond.notify_all()
         except Exception:
             self.obs.flight_finish(stream.request_id, "rejected")
@@ -532,6 +659,64 @@ class ForecastScheduler:
         """The flight-recorder snapshot (``GET /v1/debug/requests``)."""
         return self.obs.debug_requests()
 
+    # -- fault tolerance: resume, health, breakers ----------------------
+    def stream_by_id(self, request_id: str) -> ForecastStream | None:
+        """The stream for a request id (open or recently finished), or
+        None when unknown/aged out -- the ``GET /v1/stream/<id>``
+        lookup."""
+        with self._lock:
+            return self._by_id.get(request_id)
+
+    def note_disconnect(self, stream: ForecastStream) -> None:
+        """The consumer's connection dropped mid-stream.  Instead of
+        cancelling the rollout (the pre-fault-tolerance behavior), the
+        stream enters a resume grace window: events keep accumulating
+        in the replay ring, and a ``GET /v1/stream/<id>?from=<seq>``
+        within ``resume_grace_s`` picks up bit-identically.  The
+        supervisor cancels streams whose grace expires unclaimed."""
+        if stream.terminal:
+            return
+        stream.disconnected_at = time.perf_counter()
+        self.obs.stream_disconnects.inc()
+        self.obs.flight_record(stream.request_id, "disconnected")
+        _log.info("consumer of %s disconnected mid-stream; holding for "
+                  "resume (%.1fs grace)", stream.request_id,
+                  self.resume_grace_s)
+
+    def note_resume(self, stream: ForecastStream, from_seq: int) -> None:
+        """A consumer reattached via ``GET /v1/stream/<id>``: clear the
+        grace clock and meter the resume."""
+        stream.disconnected_at = None
+        stream.resumes += 1
+        self.obs.stream_resumes.inc()
+        self.obs.flight_record(stream.request_id, "resumed",
+                               from_seq=from_seq)
+
+    def mark_ready(self) -> None:
+        """Preload/warmup finished: flip the replica starting -> ready
+        (the launcher calls this after ``--preload``/``--warm``)."""
+        self.health.mark_ready()
+
+    def _breaker_for(self, key) -> tuple[str, CircuitBreaker]:
+        """The (label, breaker) pair for one engine key, created on
+        first use.  The label -- ``config/sha1[:8]`` -- is what metrics,
+        stats and shed errors name the key by."""
+        with self._breaker_lock:
+            ent = self._breakers.get(key)
+            if ent is None:
+                label = (f"{key[0]}/"
+                         f"{hashlib.sha1(repr(key).encode()).hexdigest()[:8]}")
+                ent = (label, CircuitBreaker(self.breaker_threshold,
+                                             self.breaker_cooldown_s))
+                self._breakers[key] = ent
+            return ent
+
+    def _breaker_snapshots(self) -> dict:
+        """Per-key breaker snapshots keyed by label (stats block)."""
+        with self._breaker_lock:
+            ents = list(self._breakers.values())
+        return {label: br.snapshot() for label, br in ents}
+
     def _collect_metrics(self) -> list[dict]:
         """Collector polled at ``/metrics`` scrape time: live values the
         scheduler does not tally itself -- queue depths, open streams,
@@ -555,6 +740,7 @@ class ForecastScheduler:
             open_n = len(self._open)
             binfo = (dict(self._bundle_info)
                      if self._bundle_info is not None else None)
+        health_state = self.health.state
         out = [
             {"name": p + "queue_depth", "type": "gauge",
              "help": "Requests queued, by priority class",
@@ -582,7 +768,28 @@ class ForecastScheduler:
             {"name": p + "engine_h2d_steps_total", "type": "counter",
              "help": "Host->device staged (source, step) pairs",
              "samples": [({}, dispatch.get("h2d_steps", 0))]},
+            {"name": p + "health_state", "type": "gauge",
+             "help": "Replica health (1 on the current state's label)",
+             "samples": [({"state": st}, 1 if st == health_state else 0)
+                         for st in HEALTH_STATES]},
         ]
+        fstats = self.faults.stats()
+        if fstats["armed"]:
+            out.append({
+                "name": p + "faults_injected_total", "type": "counter",
+                "help": "Injected faults fired, by point",
+                "samples": [({"point": pt}, n) for pt, n
+                            in sorted(fstats["fired"].items())] or
+                           [({}, 0)]})
+        breakers = self._breaker_snapshots()
+        if breakers:
+            code = {"closed": 0, "half_open": 1, "open": 2}
+            out.append({
+                "name": p + "circuit_state", "type": "gauge",
+                "help": "Circuit breaker state per engine key "
+                        "(0 closed, 1 half-open, 2 open)",
+                "samples": [({"key": lbl}, code[s["state"]])
+                            for lbl, s in sorted(breakers.items())]})
         if binfo is not None:
             bid = str(binfo.get("bundle_id", ""))[:12]
             out.append({
@@ -651,12 +858,24 @@ class ForecastScheduler:
                 if s is not None:
                     depth[s.spec.priority] += 1
         qos["queue_depth"] = depth
+        fault_tolerance = {
+            "retries": int(self.obs.retries.value()),
+            "worker_restarts": int(self.obs.worker_restarts.value()),
+            "circuit_open_shed": int(self.obs.circuit_open_shed.value()),
+            "stream_disconnects": int(
+                self.obs.stream_disconnects.value()),
+            "stream_resumes": int(self.obs.stream_resumes.value()),
+            "faults": self.faults.stats(),
+            "breakers": self._breaker_snapshots(),
+            "health": self.health.snapshot(),
+        }
         return {"queued": queued, "served": served,
                 "failed": failed, "workers": len(self._workers),
                 "max_batch": self.max_batch,
                 "batch_window_ms": self.batch_window_ms,
                 "batches": batches,
                 "qos": qos,
+                "fault_tolerance": fault_tolerance,
                 "engines": engines,
                 "pool": self._engines.stats(
                     engine_bytes=sum(sizes.values())),
@@ -674,6 +893,10 @@ class ForecastScheduler:
             if self._closed:
                 return
             self._closed = True
+            # interrupt in-flight retry backoffs (drain must win over a
+            # backoff sleep) and stop the supervisor loop
+            self._closing.set()
+            self.health.mark_draining()
             # sentinels go behind any already-queued streams, so pending
             # requests are served before the workers exit
             for _ in self._workers:
@@ -681,6 +904,7 @@ class ForecastScheduler:
             self._cond.notify_all()
         for w in self._workers:
             w.join(timeout=timeout)
+        self._supervisor.join(timeout=timeout)
         stuck = [w.name for w in self._workers if w.is_alive()]
         if stuck:
             # daemon threads die with the process; say so -- and unblock
@@ -711,6 +935,7 @@ class ForecastScheduler:
         bundle = self.pool.get(spec.config)
 
         def build() -> ForecastEngine:
+            self.faults.fire("engine_build", config=spec.config)
             pcfg = spec.perturbation_config()
             pert = (InitialConditionPerturbation.from_dataset(
                 bundle.model.in_sht, pcfg, bundle.ds)
@@ -900,28 +1125,18 @@ class ForecastScheduler:
 
     def _worker(self) -> None:
         while True:
+            # the worker fault point sits OUTSIDE any batch pickup: a
+            # crash here (like a real bug in the pickup path) kills the
+            # thread while it holds no requests, which is exactly the
+            # silent-capacity-loss failure the supervisor exists for
+            self.faults.fire("worker",
+                             thread=threading.current_thread().name)
             item = self._next_batch()
             if item is None:
                 return
             batch, key = item
             try:
-                try:
-                    self._serve_batch(batch)
-                    self.obs.served.inc(len(batch))
-                except Exception as e:  # noqa: BLE001 -- keep serving
-                    self.obs.failed.inc(len(batch))
-                    _log.warning(
-                        "dispatch failed for %s: %s: %s",
-                        [s.request_id for s in batch], type(e).__name__, e)
-                    for stream in batch:
-                        self.obs.flight_record(
-                            stream.request_id, "error",
-                            message=f"{type(e).__name__}: {e}")
-                        self._finish(
-                            stream,
-                            {"event": "error",
-                             "request_id": stream.request_id,
-                             "message": f"{type(e).__name__}: {e}"})
+                self._dispatch(batch)
             finally:
                 with self._cond:
                     self._inflight_keys[key] -= 1
@@ -929,6 +1144,154 @@ class ForecastScheduler:
                         del self._inflight_keys[key]
                     # parked stragglers of this key become pickable
                     self._cond.notify_all()
+
+    def _fail(self, stream: ForecastStream, e: Exception,
+              kind: str | None = None, reason: str | None = None) -> None:
+        """Terminal error (or cancelled-done) for one stream after a
+        dispatch failure, with flight/metric bookkeeping."""
+        self.obs.failed.inc()
+        if stream.cancelled:
+            # the consumer is gone; an error event would be noise
+            self._finish(stream, {"event": "done",
+                                  "request_id": stream.request_id,
+                                  "cancelled": True})
+            return
+        msg = f"{type(e).__name__}: {e}"
+        if stream.retries:
+            msg += f" (after {stream.retries} retries)"
+        ev = {"event": "error", "request_id": stream.request_id,
+              "message": msg}
+        if reason:
+            ev["reason"] = reason
+        if kind:
+            ev["classification"] = kind
+        if stream.retries:
+            ev["retries"] = stream.retries
+        self.obs.flight_record(stream.request_id, "error", message=msg)
+        self._finish(stream, ev)
+
+    def _dispatch(self, batch: list[ForecastStream]) -> None:
+        """Serve one picked batch with per-request retry.
+
+        Failures are classified (``faults.classify_error``): permanent
+        ones fail every member immediately; transient ones re-dispatch
+        the members with retry budget left (``spec.max_retries``) after
+        a bounded exponential backoff, failing the rest.  The backoff
+        waits on the closing event, so ``close()`` always wins the race
+        against a sleeping retry -- the request then gets a terminal
+        shutdown error instead of stalling the drain.  Re-dispatch is
+        deterministic and duplicate-suppressed (``stream.started`` /
+        ``stream.next_chunk``), so a retried request's event bytes are
+        identical to a never-faulted run's."""
+        attempt = 0
+        while True:
+            try:
+                self._serve_batch(batch)
+                self.obs.served.inc(len(batch))
+                return
+            except CircuitOpenError as e:
+                # shed fast, never retried: the breaker exists to stop
+                # work on this key until the cooldown probe says otherwise
+                self.obs.circuit_open_shed.inc(len(batch))
+                _log.warning("shed %s: %s",
+                             [s.request_id for s in batch], e)
+                for stream in batch:
+                    self._fail(stream, e, reason="circuit_open")
+                return
+            except Exception as e:  # noqa: BLE001 -- keep serving
+                attempt += 1
+                kind = classify_error(e)
+                retry = [s for s in batch
+                         if kind == "transient" and not s.cancelled
+                         and attempt <= s.spec.max_retries]
+                _log.warning(
+                    "dispatch failed for %s (%s, attempt %d): %s: %s",
+                    [s.request_id for s in batch], kind, attempt,
+                    type(e).__name__, e)
+                for stream in batch:
+                    if stream not in retry:
+                        self._fail(stream, e, kind=kind)
+                if not retry:
+                    return
+                delay = min(self.retry_backoff_max_ms,
+                            self.retry_backoff_ms * 2 ** (attempt - 1)) / 1e3
+                for stream in retry:
+                    stream.retries = attempt
+                    self.obs.flight_record(stream.request_id, "retrying",
+                                           attempt=attempt,
+                                           backoff_ms=round(delay * 1e3, 1))
+                self.obs.retries.inc(len(retry))
+                if self._closing.wait(delay):
+                    # drain wins: terminal shutdown error, no silent hang
+                    for stream in retry:
+                        self.obs.failed.inc()
+                        self._finish(stream, {
+                            "event": "error",
+                            "request_id": stream.request_id,
+                            "reason": "shutdown",
+                            "message": (f"scheduler closing; retry "
+                                        f"{attempt} abandoned after "
+                                        f"{type(e).__name__}: {e}")})
+                    return
+                batch = retry
+
+    def _run_worker(self) -> None:
+        """Worker thread body: the serve loop plus the crash net.  A
+        worker dying outside the per-batch handling used to silently
+        shrink capacity forever; now the crash is logged, health flips
+        degraded, and the supervisor restarts the thread."""
+        try:
+            self._worker()
+        except BaseException as e:  # noqa: BLE001 -- thread crash net
+            if self._closing.is_set():
+                return
+            _log.error("worker %s crashed: %s: %s",
+                       threading.current_thread().name,
+                       type(e).__name__, e)
+            with self._lock:
+                self._crashes += 1
+                crashes = self._crashes
+            self.health.set_dead_workers(crashes - int(
+                self.obs.worker_restarts.value()))
+
+    def _supervise(self) -> None:
+        """Supervisor loop: restart crashed worker threads (restoring
+        serve capacity and flipping health back from degraded) and
+        cancel disconnected streams whose resume grace expired.  Runs
+        every ``supervise_interval_s`` until close() begins."""
+        while not self._closing.wait(self._supervise_interval):
+            # restart crashed workers (a dead thread before closing can
+            # only be a crash: clean exits happen after close sentinels)
+            restarted = 0
+            for i, w in enumerate(self._workers):
+                if not w.is_alive() and not self._closing.is_set():
+                    nw = threading.Thread(
+                        target=self._run_worker, daemon=True,
+                        name=f"forecast-worker-{next(self._worker_ids)}")
+                    self._workers[i] = nw
+                    nw.start()
+                    restarted += 1
+            if restarted:
+                self.obs.worker_restarts.inc(restarted)
+                _log.warning("supervisor restarted %d crashed worker "
+                             "thread(s)", restarted)
+                self.health.set_dead_workers(
+                    sum(1 for w in self._workers if not w.is_alive()))
+            # sweep disconnected streams past their resume grace
+            if self.resume_grace_s >= 0:
+                now = time.perf_counter()
+                with self._lock:
+                    open_streams = list(self._open)
+                for s in open_streams:
+                    if (s.disconnected_at is not None and not s.terminal
+                            and now - s.disconnected_at
+                            > self.resume_grace_s):
+                        s.disconnected_at = None
+                        self.obs.flight_record(s.request_id,
+                                               "resume_grace_expired")
+                        _log.info("resume grace expired for %s; "
+                                  "cancelling", s.request_id)
+                        s.cancel()
 
     def _serve_batch(self, streams: list[ForecastStream]) -> None:
         """Serve one coalesced batch (possibly of size 1) through a
@@ -954,18 +1317,41 @@ class ForecastScheduler:
                              args={"batch_size": b})
             self.obs.flight_record(stream.request_id, "picked",
                                    batch_size=b)
+        # circuit breaker: a key whose builds/compiles keep failing is
+        # shed here, before any engine or compile work -- the whole
+        # point is not burning trace+compile time on a poisoned key
+        key = spec.engine_key()
+        label, breaker = self._breaker_for(key)
+        if not breaker.allow():
+            snap = breaker.snapshot()
+            raise CircuitOpenError(
+                f"circuit for engine key {label} is open after "
+                f"{snap['consecutive_failures']} consecutive "
+                f"build/compile failures; cooldown "
+                f"{snap.get('cooldown_remaining_s', 0.0)}s remaining")
         # setup_s is everything between worker pickup and rollout start
         # that is NOT compilation proper: model-bundle / engine builds on
         # a cold config and time spent waiting on another request's
         # in-flight compile of the same key.  Without it, cold-request
         # latency would be silently misattributed (total_s != the sum of
         # its parts).
-        engine, bundle = self._get_engine(spec)
-        t_engine = time.perf_counter()
-        warm = self.cache.warm_engine(spec.config, engine, spec.scored,
-                                      spec.lead_steps, bundle.params,
-                                      bundle.buffers,
-                                      batch=b if b > 1 else None)
+        try:
+            engine, bundle = self._get_engine(spec)
+            t_engine = time.perf_counter()
+            warm = self.cache.warm_engine(spec.config, engine, spec.scored,
+                                          spec.lead_steps, bundle.params,
+                                          bundle.buffers,
+                                          batch=b if b > 1 else None)
+        except Exception:
+            # only build/compile-phase failures count toward the
+            # breaker: a mid-rollout fault says nothing about the key
+            if breaker.record_failure():
+                _log.error("circuit OPENED for engine key %s", label)
+                self.health.set_breaker(label, True)
+            raise
+        if breaker.record_success():
+            _log.info("circuit closed for engine key %s", label)
+        self.health.set_breaker(label, False)
         t_warm = time.perf_counter()
         for stream in streams:
             stream.trace.add("engine_build", t_start, t_engine)
@@ -980,6 +1366,8 @@ class ForecastScheduler:
         self.obs.batches.inc(size=str(b))
         setup_s = (time.perf_counter() - t_start) - warm["compile_s"]
         for i, stream in enumerate(streams):
+            if stream.started:
+                continue  # retry re-dispatch: the start event already went
             start = {"event": "start", "request_id": stream.request_id,
                      "spec": stream.spec.to_dict(),
                      "queue_s": t_start - stream.submitted_at,
@@ -991,6 +1379,7 @@ class ForecastScheduler:
                 # honest reporting: the consumer learns up front it is
                 # getting fewer members than it asked for
                 start["degraded_members"] = stream.degraded_members
+            stream.started = True
             stream.put(start)
         ds = bundle.ds
         state0s = [ds.state(s.serve_spec.sample, 0) for s in streams]
@@ -999,13 +1388,29 @@ class ForecastScheduler:
         # sample): the batched stager stages each distinct source once
         # and broadcasts device-side, so B coalesced members cost one
         # aux staging, not B identical ones
+        def _staged(fn):
+            # h2d_stage fault point: the stager propagates staging
+            # exceptions through fut.result(), exactly like a real host
+            # failure materializing a step
+            def wrapped(n):
+                self.faults.fire("h2d_stage", step=n)
+                return fn(n)
+            return wrapped
+
         aux = (lambda n: ds.aux_fields(6.0 * (n + 1)))
+        if self.faults is not NULL_FAULTS:
+            # wrap only when armed: the unarmed path hands the engine
+            # the exact pre-fault-tolerance stage callables (and keeps
+            # the batched stager's dedup-by-identity intact)
+            aux = _staged(aux)
         auxs = [aux] * b
         truths = None
         if spec.scored:
             by_sample = {s.spec.sample: (lambda sm: (
                 lambda n: ds.state(sm, n + 1)))(s.spec.sample)
                 for s in streams}
+            if self.faults is not NULL_FAULTS:
+                by_sample = {k: _staged(v) for k, v in by_sample.items()}
             truths = [by_sample[s.spec.sample] for s in streams]
         # stage_h2d spans: the stager's background thread reports each
         # chunk's host materialization through this clock-only hook
@@ -1061,6 +1466,7 @@ class ForecastScheduler:
             # device->host score download happens here, so the dispatch
             # thread is already staging and enqueueing chunk k+1 while
             # chunk k's scores download (score_fetch) and encode.
+            self.faults.fire("score_fetch", index=index)
             f0 = time.perf_counter() if traced else 0.0
             host_blocks: list = [None] * len(block_list)
             for j, (stream, blk) in enumerate(zip(streams, block_list)):
@@ -1097,6 +1503,9 @@ class ForecastScheduler:
             for j, stream, ev in evs:
                 ev["chunk_s"] = dt
                 chunk_s[j].append(dt)
+                if index < stream.next_chunk:
+                    continue  # retry re-dispatch: this chunk already went
+                stream.next_chunk = index + 1
                 stream.put(ev)
             if traced:
                 for j, stream, ev in evs:
@@ -1117,6 +1526,7 @@ class ForecastScheduler:
                         index, block_list = next(block_iter)
                     except StopIteration:
                         break
+                    self.faults.fire("rollout_chunk", index=index)
                     if traced:
                         c1 = time.perf_counter()
                         for stream in streams:
@@ -1159,6 +1569,10 @@ class ForecastScheduler:
                 done["profile"] = prof_path
             if stream.degraded_members is not None:
                 done["degraded_members"] = stream.degraded_members
+            if stream.retries:
+                # honest reporting: the request survived this many
+                # transient failures before completing
+                done["retries"] = stream.retries
             if finals[j] is not None:
                 done["final_state"] = transport.encode_array(finals[j])
             if traced:

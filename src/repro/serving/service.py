@@ -17,7 +17,22 @@ Routes:
   block (warm-start provenance) on replicas booted from a warm-start
   bundle (see ``repro.serving.bundle``).
 * ``GET /healthz``      -- liveness; includes ``bundle_id`` when the
-  replica booted from a bundle.
+  replica booted from a bundle.  Always 200 while the process can
+  answer -- a degraded replica is still alive.
+* ``GET /readyz``       -- readiness: the replica health state machine
+  (``starting -> ready -> degraded -> draining``, see
+  ``repro.serving.faults.ReplicaHealth``).  200 only in ``ready``;
+  503 otherwise, with the state, its reasons (open circuit breakers,
+  crashed workers, warming, draining) and the transition log in the
+  JSON body.  Point load-balancer traffic probes here and liveness
+  probes at ``/healthz`` (docs/deployment.md has the wiring table).
+* ``GET /v1/stream/<request_id>?from=<seq>`` -- resume a severed
+  NDJSON stream from event ordinal ``<seq>`` (events are numbered
+  implicitly from 0 in stream order).  Replays the still-buffered
+  events from the request's bounded replay ring, then follows live;
+  the replayed bytes are identical to the unbroken stream's.  404 for
+  an unknown/aged-out request id, 410 when ``<seq>`` already aged out
+  of the ring (the client must restart the request).
 * ``GET /metrics``      -- the scheduler's metrics registry in
   Prometheus text exposition format.  Counters here and ``/v1/stats``
   are two renderings of one store (``repro.serving.observability``),
@@ -38,18 +53,23 @@ scheduler's worker pool, so N slow clients cannot oversubscribe the
 accelerator.  N concurrent *same-shape* requests additionally coalesce
 into one batched rollout inside the scheduler (when it runs with
 ``max_batch`` > 1) -- each connection still streams its own demuxed
-NDJSON events, and a client that disconnects mid-batch is masked out of
-further chunks while its companions finish.
+NDJSON events.  A client that disconnects mid-stream gets a resume
+grace window (``GET /v1/stream/<id>?from=<seq>``); only when the grace
+expires unclaimed is the request cancelled -- a coalesced member is
+then masked out of further chunks while its companions finish.
 """
 
 from __future__ import annotations
 
 import json
 import time
+import urllib.parse
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 from repro.serving import transport
-from repro.serving.scheduler import ForecastScheduler, QueueFull
+from repro.serving.faults import InjectedFault
+from repro.serving.scheduler import (ForecastScheduler, QueueFull,
+                                     ReplayGone)
 from repro.serving.spec import RequestSpec
 
 
@@ -93,9 +113,74 @@ class _ForecastHandler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(body)
 
+    def _stream_events(self, stream, events) -> None:
+        """Write an NDJSON event iterator to the socket (shared by the
+        POST stream and GET resume).
+
+        The ``stream_write`` fault point fires before each write; an
+        injected fault and a real broken pipe mean the same thing --
+        the consumer's connection died -- so the stream is parked for
+        resume (``note_disconnect``: events keep accumulating in the
+        replay ring for the scheduler's grace window) instead of the
+        rollout being cancelled outright.
+        """
+        sched = self.service.scheduler
+        t_stream = time.perf_counter()
+        n_events = 0
+        try:
+            for ev in events:
+                sched.faults.fire("stream_write",
+                                  request_id=stream.request_id)
+                self.wfile.write(transport.dump_event(ev))
+                self.wfile.flush()
+                n_events += 1
+        except (BrokenPipeError, ConnectionResetError, InjectedFault):
+            sched.note_disconnect(stream)
+        finally:
+            # the stream span covers serialization + socket writes for
+            # the whole NDJSON response; recorded after the trace's root
+            # closed, so the on-disk dump is refreshed to include it
+            sched.obs.note_stream(
+                stream.trace, t_stream, time.perf_counter(), n_events)
+
+    def _resume_stream(self) -> None:
+        """GET /v1/stream/<id>?from=<seq>: replay buffered events from
+        ordinal ``seq``, then follow the live stream to its terminal."""
+        sched = self.service.scheduler
+        parts = urllib.parse.urlsplit(self.path)
+        rid = parts.path[len("/v1/stream/"):]
+        try:
+            from_seq = int(urllib.parse.parse_qs(parts.query)
+                           .get("from", ["0"])[0])
+        except ValueError:
+            return self._json(400, {"error": "from must be an integer"})
+        stream = sched.stream_by_id(rid)
+        if stream is None:
+            return self._json(404, {"error": f"unknown request {rid!r} "
+                                             f"(never seen or aged out)"})
+        base, end, term = stream.seq_bounds()
+        if from_seq < base or (term is not None and from_seq > term):
+            return self._json(410, {
+                "error": (f"cannot resume {rid!r} from seq {from_seq}: "
+                          f"buffered range is [{base}, {end}), terminal "
+                          f"at {term}; restart the request"),
+                "base": base, "end": end})
+        sched.note_resume(stream, from_seq)
+        self.send_response(200)
+        self.send_header("Content-Type", transport.NDJSON_MIME)
+        self.send_header("Connection", "close")
+        self.end_headers()
+        try:
+            self._stream_events(stream, stream.events(from_seq))
+        except ReplayGone:
+            # aged out between the bounds check and the replay (a very
+            # slow resume against a fast producer); headers are already
+            # out, so just close -- the client's next attempt gets 410
+            pass
+
     def do_GET(self):  # noqa: N802 - stdlib naming
-        """Route GET: liveness (with warm-start provenance when the
-        replica booted from a bundle) and the scheduler stats block."""
+        """Route GET: liveness/readiness, stats/metrics/trace/debug
+        views, and stream resume."""
         if self.path == "/healthz":
             ok: dict = {"ok": True}
             info = self.service.scheduler.bundle_info
@@ -104,6 +189,11 @@ class _ForecastHandler(BaseHTTPRequestHandler):
                 # bundle it serves, so a rollout can check content ids
                 ok["bundle_id"] = info.get("bundle_id")
             self._json(200, ok)
+        elif self.path == "/readyz":
+            snap = self.service.scheduler.health.snapshot()
+            self._json(200 if snap["state"] == "ready" else 503, snap)
+        elif self.path.startswith("/v1/stream/"):
+            self._resume_stream()
         elif self.path == "/v1/stats":
             self._json(200, self.service.scheduler.stats())
         elif self.path == "/metrics":
@@ -148,20 +238,4 @@ class _ForecastHandler(BaseHTTPRequestHandler):
         self.send_header("Content-Type", transport.NDJSON_MIME)
         self.send_header("Connection", "close")
         self.end_headers()
-        t_stream = time.perf_counter()
-        n_events = 0
-        try:
-            for ev in stream.events():
-                self.wfile.write(transport.dump_event(ev))
-                self.wfile.flush()
-                n_events += 1
-        except (BrokenPipeError, ConnectionResetError):
-            # Client hung up mid-stream: stop the rollout at the next
-            # chunk boundary; the worker moves on to the next request.
-            stream.cancel()
-        finally:
-            # the stream span covers serialization + socket writes for
-            # the whole NDJSON response; recorded after the trace's root
-            # closed, so the on-disk dump is refreshed to include it
-            self.service.scheduler.obs.note_stream(
-                stream.trace, t_stream, time.perf_counter(), n_events)
+        self._stream_events(stream, stream.events())

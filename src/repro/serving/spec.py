@@ -57,6 +57,16 @@ class RequestSpec:
     into the request's span tree and ``done`` event.  Like the QoS
     fields it never enters ``engine_key``/``batch_key`` -- a profiled
     request dispatches the same warm executables and stays bit-identical.
+
+    ``max_retries`` (default 0) is the fault-tolerance budget: how many
+    times the scheduler may re-dispatch this request after a
+    *transient* failure (see ``faults.classify_error``) with bounded
+    exponential backoff before giving up.  Retries are reported in the
+    ``done`` event (``retries`` field, only when > 0) and metered.
+    Like the QoS fields it rides the wire but never enters
+    ``engine_key``/``batch_key`` -- a retried request re-dispatches the
+    same warm executables, and determinism makes the replayed chunks
+    bit-identical.
     """
 
     config: str = "smoke"
@@ -79,6 +89,7 @@ class RequestSpec:
     deadline_ms: float | None = None
     degrade: bool = False
     profile: bool = False
+    max_retries: int = 0
 
     @classmethod
     def from_dict(cls, d: dict) -> "RequestSpec":
@@ -151,7 +162,7 @@ class RequestSpec:
         return self.members
 
     _INT_FIELDS = ("members", "lead_steps", "lead_chunk", "bred_cycles",
-                   "sample", "seed")
+                   "sample", "seed", "max_retries")
     _BOOL_FIELDS = ("ensemble_transform", "spectra", "scored",
                     "return_state", "coalesce", "degrade", "profile")
     _STR_FIELDS = ("config", "precision", "perturb", "kernels", "priority")
@@ -213,6 +224,9 @@ class RequestSpec:
         if self.deadline_ms is not None and self.deadline_ms <= 0:
             problems.append(
                 f"deadline_ms must be positive, got {self.deadline_ms}")
+        if not 0 <= self.max_retries <= 8:
+            problems.append(
+                f"max_retries must be in [0, 8], got {self.max_retries}")
         try:
             pcfg = self.perturbation_config()
         except ValueError as e:

@@ -60,6 +60,20 @@ class ServingError(RuntimeError):
         self.reason = reason
 
 
+class StreamInterrupted(ServingError):
+    """The connection died mid-stream -- distinct from a server-side
+    failure: the server may well still be rolling the forecast, and a
+    ``GET /v1/stream/<id>?from=<seq>`` within the resume grace picks
+    the stream back up.  ``request_id``/``events_received`` carry what
+    the client knew when the connection dropped (the resume cursor)."""
+
+    def __init__(self, message: str, request_id: str | None = None,
+                 events_received: int = 0):
+        super().__init__(message, reason="disconnected")
+        self.request_id = request_id
+        self.events_received = events_received
+
+
 def encode_array(a) -> dict:
     """Exact binary encoding of an ndarray as a JSON-safe dict."""
     a = np.ascontiguousarray(a)
@@ -93,8 +107,10 @@ def read_events(fp) -> Iterator[dict]:
     """Parse events from a binary line stream (socket file / HTTP body).
 
     A half-written line (server died mid-write under close-delimited
-    framing) surfaces as ``ServingError``, the same exception callers
-    already handle for truncated streams -- never a raw json error.
+    framing) surfaces as ``StreamInterrupted`` (a ``ServingError``
+    subclass, so existing handlers still catch it -- and the client's
+    auto-resume can distinguish a dropped connection from a server-side
+    failure) -- never a raw json error.
     """
     for line in iter(fp.readline, b""):
         line = line.strip()
@@ -102,7 +118,7 @@ def read_events(fp) -> Iterator[dict]:
             try:
                 yield json.loads(line)
             except json.JSONDecodeError as e:
-                raise ServingError(
+                raise StreamInterrupted(
                     f"corrupt NDJSON line (connection died mid-write?): "
                     f"{e}") from e
 
@@ -149,6 +165,9 @@ class ServedForecast:
     #: member count actually served when the scheduler's degrade policy
     #: traded ensemble size for the deadline (None = served as asked)
     degraded_members: int | None = None
+    #: transient failures this request survived (the done event's
+    #: ``retries`` field; 0 = served on the first dispatch)
+    retries: int = 0
 
 
 def collect(events: Iterable[dict]) -> ServedForecast:
@@ -171,6 +190,7 @@ def collect(events: Iterable[dict]) -> ServedForecast:
     cancelled = False
     batch_size, batch_index = 1, 0
     degraded_members = None
+    retries = 0
     for ev in events:
         kind = ev.get("event")
         if kind == "start":
@@ -198,6 +218,7 @@ def collect(events: Iterable[dict]) -> ServedForecast:
                 request_id = ev.get("request_id", "")
             if ev.get("degraded_members") is not None:
                 degraded_members = int(ev["degraded_members"])
+            retries = int(ev.get("retries", 0))
             if "final_state" in ev:
                 final_state = decode_array(ev["final_state"])
         elif kind == "error":
@@ -213,4 +234,5 @@ def collect(events: Iterable[dict]) -> ServedForecast:
                           timing=timing, cache=cache, chunks=chunks,
                           final_state=final_state, cancelled=cancelled,
                           batch_size=batch_size, batch_index=batch_index,
-                          degraded_members=degraded_members)
+                          degraded_members=degraded_members,
+                          retries=retries)

@@ -1,0 +1,704 @@
+"""Tests for the fault-tolerance layer (ISSUE 9).
+
+The load-bearing guarantees:
+
+* fault injection is **deterministic** (Nth occurrence / first-K /
+  seeded Bernoulli) and costs nothing unarmed (``NULL_FAULTS``): with
+  no fault armed, served events and scores are bit-identical to a
+  scheduler built without the substrate;
+* a transient mid-rollout failure retries within ``spec.max_retries``
+  and completes **bit-identically** -- duplicate start/chunk events are
+  suppressed, the ``done`` event reports the retry count honestly;
+  permanent failures fail fast with a classification;
+* a crashed worker thread is restarted by the supervisor (capacity
+  restored, restarts metered); N consecutive build/compile failures
+  open the engine key's circuit -- later requests shed instantly with
+  ``reason: "circuit_open"`` and zero compile work -- and a half-open
+  probe after the cooldown recovers;
+* a severed NDJSON stream resumes bit-identically from the bounded
+  replay ring (``GET /v1/stream/<id>?from=<seq>``), the client
+  auto-resumes, and an unclaimed resume grace cancels the rollout;
+* corrupt persisted executables quarantine (``*.corrupt``) exactly
+  once; a flaky *read* recompiles without quarantining;
+* ``close()`` always beats a sleeping retry backoff (terminal shutdown
+  error, no hang) and ``/readyz`` tracks starting/ready/draining.
+"""
+
+import http.client
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving import transport
+from repro.serving.cache import ExecutableCache
+from repro.serving.client import ForecastClient
+from repro.serving.faults import (FAULT_POINTS, NULL_FAULTS, CircuitBreaker,
+                                  FaultInjector, FaultSpec, InjectedFault,
+                                  ReplicaHealth, classify_error)
+from repro.serving.scheduler import (ForecastScheduler, ForecastStream,
+                                     ModelPool, ReplayGone, RequestSpec)
+from repro.serving.service import ForecastService
+
+SPEC = RequestSpec(config="smoke", members=2, lead_steps=2, lead_chunk=2,
+                   scored=True)
+
+#: per-run noise (ids, timings, cache provenance) stripped before
+#: comparing event streams; scores/lead_steps/indices stay and must
+#: match bitwise
+_VOLATILE = ("request_id", "queue_s", "setup_s", "compile_s", "chunk_s",
+             "timing", "cache", "retries")
+
+
+def _stripped(events):
+    return [{k: v for k, v in ev.items() if k not in _VOLATILE}
+            for ev in events]
+
+
+def _sched(pool, **kw):
+    kw.setdefault("cache", ExecutableCache())
+    kw.setdefault("max_concurrency", 1)
+    return ForecastScheduler(pool=pool, **kw)
+
+
+def _poll(predicate, timeout=20.0, interval=0.02):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if predicate():
+            return True
+        time.sleep(interval)
+    return predicate()
+
+
+class _WarmGate:
+    """Block serving at a deterministic point (after pickup, before
+    compile/rollout) -- same helper as test_qos."""
+
+    def __init__(self, sched):
+        self.entered = threading.Event()
+        self.release = threading.Event()
+        self._orig = sched.cache.warm_engine
+        sched.cache.warm_engine = self._wrapped
+
+    def _wrapped(self, *a, **k):
+        self.entered.set()
+        assert self.release.wait(timeout=60), "gate never released"
+        return self._orig(*a, **k)
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return ModelPool()
+
+
+class TestFaultSpecGrammar:
+    def test_parse_roundtrip(self):
+        s = FaultSpec.parse("rollout_chunk:n=2")
+        assert (s.point, s.n, s.kind) == ("rollout_chunk", 2, "transient")
+        assert s.describe() == "rollout_chunk:n=2"
+        s = FaultSpec.parse("import_chunk:first=3,kind=permanent")
+        assert (s.first, s.kind) == (3, "permanent")
+        assert s.describe() == "import_chunk:first=3,kind=permanent"
+        s = FaultSpec.parse("h2d_stage:p=0.25,seed=7")
+        assert (s.p, s.seed) == (0.25, 7)
+        assert s.describe() == "h2d_stage:p=0.25,seed=7"
+
+    def test_parse_rejects_malformed(self):
+        with pytest.raises(ValueError, match="expected 'point:key=value"):
+            FaultSpec.parse("rollout_chunk")
+        with pytest.raises(ValueError, match="is not key=value"):
+            FaultSpec.parse("rollout_chunk:n")
+        with pytest.raises(ValueError, match="unknown key"):
+            FaultSpec.parse("rollout_chunk:nth=2")
+        with pytest.raises(ValueError, match="unknown fault point"):
+            FaultSpec.parse("tea_break:n=1")
+
+    def test_exactly_one_trigger(self):
+        with pytest.raises(ValueError, match="exactly one of"):
+            FaultSpec.parse("compile:n=1,first=2")
+        with pytest.raises(ValueError, match="exactly one of"):
+            FaultSpec.parse("compile:seed=3")
+
+    def test_trigger_ranges_and_kind(self):
+        with pytest.raises(ValueError, match="n must be >= 1"):
+            FaultSpec(point="compile", n=0)
+        with pytest.raises(ValueError, match="first must be >= 1"):
+            FaultSpec(point="compile", first=0)
+        with pytest.raises(ValueError, match="p must be in"):
+            FaultSpec(point="compile", p=1.5)
+        with pytest.raises(ValueError, match="kind must be one of"):
+            FaultSpec.parse("compile:n=1,kind=flaky")
+
+
+class TestInjectorDeterminism:
+    def test_nth_occurrence_fires_exactly_once(self):
+        inj = FaultInjector.from_args(["compile:n=3"])
+        inj.fire("compile")
+        inj.fire("compile")
+        with pytest.raises(InjectedFault) as e:
+            inj.fire("compile")
+        assert e.value.point == "compile" and e.value.occurrence == 3
+        assert e.value.transient
+        inj.fire("compile")  # the 4th occurrence passes again
+        st = inj.stats()
+        assert st["occurrences"]["compile"] == 4
+        assert st["fired"]["compile"] == 1
+        assert st["armed"] == ["compile:n=3"]
+
+    def test_first_k_fires_each_of_the_first_k(self):
+        inj = FaultInjector.from_args(["cache_read:first=2"])
+        for _ in range(2):
+            with pytest.raises(InjectedFault):
+                inj.fire("cache_read")
+        inj.fire("cache_read")
+        assert inj.stats()["fired"]["cache_read"] == 2
+
+    def test_seeded_bernoulli_is_reproducible(self):
+        def fired_set(seed):
+            inj = FaultInjector([FaultSpec(point="h2d_stage", p=0.3,
+                                           seed=seed)])
+            hits = set()
+            for i in range(50):
+                try:
+                    inj.fire("h2d_stage")
+                except InjectedFault:
+                    hits.add(i)
+            return hits
+
+        assert fired_set(7) == fired_set(7)
+        assert 0 < len(fired_set(7)) < 50
+        assert fired_set(7) != fired_set(8)
+
+    def test_null_injector_is_inert(self):
+        for point in FAULT_POINTS:
+            NULL_FAULTS.fire(point)  # never raises, never counts
+        assert NULL_FAULTS.stats() == {"armed": [], "occurrences": {},
+                                       "fired": {}}
+        assert NULL_FAULTS.enabled is False
+
+
+class TestClassification:
+    def test_injected_faults_carry_their_own_kind(self):
+        assert classify_error(
+            InjectedFault("compile", 1, "transient")) == "transient"
+        assert classify_error(
+            InjectedFault("compile", 1, "permanent")) == "permanent"
+
+    def test_os_level_hiccups_are_transient(self):
+        for exc in (ConnectionError("reset"), TimeoutError("slow"),
+                    MemoryError(), OSError("disk")):
+            assert classify_error(exc) == "transient"
+
+    def test_deterministic_breakage_is_permanent(self):
+        for exc in (RuntimeError("boom"), ValueError("bad shape"),
+                    KeyError("missing")):
+            assert classify_error(exc) == "permanent"
+
+
+class TestCircuitBreaker:
+    def test_opens_after_threshold_consecutive_failures(self):
+        clock = [0.0]
+        br = CircuitBreaker(threshold=3, cooldown_s=10.0,
+                            clock=lambda: clock[0])
+        assert br.allow() and not br.record_failure()
+        assert br.allow() and not br.record_failure()
+        assert br.allow() and br.record_failure()  # third failure opens
+        assert br.state == "open"
+        assert not br.allow()
+        snap = br.snapshot()
+        assert snap["opens"] == 1
+        assert snap["cooldown_remaining_s"] == 10.0
+        # a success before the threshold resets the consecutive count
+        br2 = CircuitBreaker(threshold=2, cooldown_s=10.0)
+        br2.record_failure()
+        br2.record_success()
+        assert not br2.record_failure()
+        assert br2.state == "closed"
+
+    def test_half_open_grants_one_probe(self):
+        clock = [0.0]
+        br = CircuitBreaker(threshold=1, cooldown_s=5.0,
+                            clock=lambda: clock[0])
+        br.record_failure()
+        assert br.state == "open" and not br.allow()
+        clock[0] = 5.1
+        assert br.allow()           # cooldown elapsed: the probe
+        assert br.state == "half_open"
+        assert not br.allow()       # concurrent request denied mid-probe
+        assert br.record_success()  # probe OK: closed again
+        assert br.state == "closed" and br.allow()
+
+    def test_failed_probe_reopens_for_another_cooldown(self):
+        clock = [0.0]
+        br = CircuitBreaker(threshold=1, cooldown_s=5.0,
+                            clock=lambda: clock[0])
+        br.record_failure()
+        clock[0] = 5.1
+        assert br.allow()
+        assert br.record_failure()  # probe failed: re-opened
+        assert br.state == "open" and not br.allow()
+        assert br.snapshot()["opens"] == 2
+        clock[0] = 10.3             # a fresh cooldown from the re-open
+        assert br.allow()
+
+
+class TestReplicaHealth:
+    def test_lifecycle_and_reasons(self):
+        h = ReplicaHealth(ready=False)
+        assert h.state == "starting"
+        assert h.snapshot()["reasons"] == ["warming"]
+        h.mark_ready()
+        assert h.state == "ready" and h.snapshot()["reasons"] == []
+        h.set_breaker("smoke/abc", True)
+        h.set_dead_workers(2)
+        snap = h.snapshot()
+        assert snap["state"] == "degraded"
+        assert snap["reasons"] == ["circuit_open:smoke/abc",
+                                   "workers_down:2"]
+        h.set_breaker("smoke/abc", False)
+        h.set_dead_workers(0)
+        assert h.state == "ready"
+        h.mark_draining()
+        assert h.state == "draining"
+        assert [t["state"] for t in h.snapshot()["transitions"]] == [
+            "starting", "ready", "degraded", "ready", "draining"]
+
+
+class TestReplayRing:
+    def test_bounds_replay_and_aging(self):
+        st = ForecastStream("r0", SPEC, replay_window=8)
+        for i in range(20):
+            st.put({"event": "chunk", "index": i})
+        st.put_terminal({"event": "done"})
+        base, end, term = st.seq_bounds()
+        assert (base, end, term) == (13, 21, 20)
+        replay = list(st.events(13))
+        assert [e.get("index") for e in replay[:-1]] == list(range(13, 20))
+        assert replay[-1]["event"] == "done"
+        # a second replay of the same range yields the same objects
+        assert list(st.events(13)) == replay
+
+    def test_aged_out_and_beyond_terminal_raise(self):
+        st = ForecastStream("r0", SPEC, replay_window=8)
+        for i in range(20):
+            st.put({"event": "chunk", "index": i})
+        st.put_terminal({"event": "done"})
+        with pytest.raises(ReplayGone, match="aged out"):
+            list(st.events(0))
+        with pytest.raises(ReplayGone, match="ended at seq 20"):
+            list(st.events(21))
+
+
+class TestMaxRetriesSpec:
+    def test_rides_the_wire_and_validates(self):
+        d = {**SPEC.to_dict(), "max_retries": 2}
+        spec = RequestSpec.from_dict(d)
+        spec.validate()
+        assert spec.max_retries == 2 and spec.to_dict() == d
+        with pytest.raises(ValueError, match="max_retries must be in"):
+            RequestSpec(**{**SPEC.to_dict(), "max_retries": 9}).validate()
+        with pytest.raises(ValueError, match="max_retries must be in"):
+            RequestSpec(**{**SPEC.to_dict(), "max_retries": -1}).validate()
+        with pytest.raises(ValueError, match="max_retries must be an"):
+            RequestSpec(**{**SPEC.to_dict(),
+                           "max_retries": 1.5}).validate()
+
+    def test_never_fragments_compiled_program_keys(self):
+        plain = SPEC
+        retried = RequestSpec(**{**SPEC.to_dict(), "max_retries": 8})
+        assert retried.engine_key() == plain.engine_key()
+        assert retried.batch_key() == plain.batch_key()
+
+
+class TestRetries:
+    def test_transient_rollout_fault_retries_bit_identically(self, pool):
+        spec = RequestSpec(**{**SPEC.to_dict(), "max_retries": 2})
+        clean = _sched(pool)
+        faulty = _sched(pool,
+                        faults=FaultInjector.from_args(["rollout_chunk:n=1"]),
+                        retry_backoff_ms=1.0)
+        try:
+            ref = list(clean.submit(spec).events())
+            st = faulty.submit(spec)
+            got = list(st.events())
+            # no duplicate start/chunk events despite the re-dispatch
+            assert [e["event"] for e in got] == ["start", "chunk", "done"]
+            assert _stripped(got) == _stripped(ref)
+            res = transport.collect(iter(got))
+            assert res.retries == 1
+            refres = transport.collect(iter(ref))
+            for name, arr in refres.scores.items():
+                np.testing.assert_array_equal(res.scores[name], arr,
+                                              err_msg=name)
+            ft = faulty.stats()["fault_tolerance"]
+            assert ft["retries"] == 1
+            assert ft["faults"]["fired"] == {"rollout_chunk": 1}
+        finally:
+            clean.close()
+            faulty.close()
+
+    def test_permanent_injected_fault_fails_fast(self, pool):
+        sched = _sched(pool, faults=FaultInjector.from_args(
+            ["rollout_chunk:n=1,kind=permanent"]), retry_backoff_ms=1.0)
+        try:
+            st = sched.submit(RequestSpec(**{**SPEC.to_dict(),
+                                             "max_retries": 8}))
+            with pytest.raises(transport.ServingError,
+                               match="injected permanent fault"):
+                st.result()
+            assert sched.stats()["fault_tolerance"]["retries"] == 0
+        finally:
+            sched.close()
+
+    def test_exhausted_retry_budget_reports_classification(self, pool):
+        sched = _sched(pool, faults=FaultInjector.from_args(
+            ["rollout_chunk:first=1000"]), retry_backoff_ms=1.0)
+        try:
+            st = sched.submit(RequestSpec(**{**SPEC.to_dict(),
+                                             "max_retries": 2}))
+            events = list(st.events())
+            err = events[-1]
+            assert err["event"] == "error"
+            assert err["classification"] == "transient"
+            assert err["retries"] == 2
+            assert "after 2 retries" in err["message"]
+        finally:
+            sched.close()
+
+    def test_zero_budget_request_never_retries(self, pool):
+        sched = _sched(pool, faults=FaultInjector.from_args(
+            ["rollout_chunk:n=1"]), retry_backoff_ms=1.0)
+        try:
+            with pytest.raises(transport.ServingError,
+                               match="injected transient fault"):
+                sched.submit(SPEC).result()  # max_retries defaults to 0
+            assert sched.stats()["fault_tolerance"]["retries"] == 0
+        finally:
+            sched.close()
+
+
+class TestWorkerSupervision:
+    def test_crashed_worker_is_restarted_and_capacity_restored(self, pool):
+        sched = _sched(pool,
+                       faults=FaultInjector.from_args(["worker:n=1"]),
+                       supervise_interval_s=0.05)
+        try:
+            # the armed fault kills the worker thread at the top of its
+            # loop; the supervisor must bring a replacement up
+            assert _poll(lambda: int(
+                sched.obs.worker_restarts.value()) >= 1, timeout=10)
+            res = sched.submit(SPEC).result()  # restarted worker serves
+            assert not res.cancelled and "crps" in res.scores
+            ft = sched.stats()["fault_tolerance"]
+            assert ft["worker_restarts"] >= 1
+            assert _poll(lambda: sched.health.state == "ready", timeout=5)
+        finally:
+            sched.close()
+
+
+class TestCircuitBreakerServing:
+    def test_open_circuit_sheds_without_compile(self, pool):
+        sched = _sched(pool, faults=FaultInjector.from_args(
+            ["engine_build:first=2,kind=permanent"]),
+            breaker_threshold=2, breaker_cooldown_s=1e9)
+        try:
+            for _ in range(2):
+                with pytest.raises(transport.ServingError,
+                                   match="injected permanent fault"):
+                    sched.submit(SPEC).result()
+            with pytest.raises(transport.ServingError) as e:
+                sched.submit(SPEC).result()
+            assert e.value.reason == "circuit_open"
+            ft = sched.stats()["fault_tolerance"]
+            assert ft["circuit_open_shed"] == 1
+            # the shed request touched neither engine build nor compile
+            assert ft["faults"]["occurrences"]["engine_build"] == 2
+            (label, snap), = ft["breakers"].items()
+            assert snap["state"] == "open"
+            assert label.startswith("smoke/")
+            health = ft["health"]
+            assert health["state"] == "degraded"
+            assert health["reasons"] == [f"circuit_open:{label}"]
+        finally:
+            sched.close()
+
+    def test_half_open_probe_recovers(self, pool):
+        sched = _sched(pool,
+                       faults=FaultInjector.from_args(["engine_build:n=1"]),
+                       breaker_threshold=1, breaker_cooldown_s=0.3)
+        try:
+            with pytest.raises(transport.ServingError):
+                sched.submit(SPEC).result()
+            (_, snap), = sched._breaker_snapshots().items()
+            assert snap["state"] == "open"
+            assert sched.health.state == "degraded"
+            time.sleep(0.4)  # past the cooldown: next request probes
+            res = sched.submit(SPEC).result()
+            assert "crps" in res.scores
+            (_, snap), = sched._breaker_snapshots().items()
+            assert snap["state"] == "closed" and snap["opens"] == 1
+            assert sched.health.state == "ready"
+        finally:
+            sched.close()
+
+
+class TestResumableStreams:
+    """One armed server session: sever the POST stream with an injected
+    stream_write fault, let the client auto-resume, and prove the
+    reassembled stream is bit-identical to the unbroken one."""
+
+    @pytest.fixture(scope="class")
+    def fsched(self, pool):
+        s = _sched(pool, faults=FaultInjector.from_args(
+            ["stream_write:n=3"]), resume_grace_s=30.0)
+        yield s
+        s.close()
+
+    @pytest.fixture(scope="class")
+    def server(self, fsched):
+        svc = ForecastService(scheduler=fsched)
+        srv = svc.make_server(port=0)
+        threading.Thread(target=srv.serve_forever, daemon=True).start()
+        yield srv
+        srv.shutdown()
+        srv.server_close()
+
+    def test_client_auto_resumes_bit_identically(self, fsched, server):
+        # lead_chunk=1 -> 4 events (start, chunk, chunk, done); the
+        # armed fault severs the socket before the 3rd write
+        spec = RequestSpec(**{**SPEC.to_dict(), "lead_chunk": 1})
+        client = ForecastClient(port=server.server_address[1],
+                                resume_backoff_s=0.01)
+        got = list(client.stream(spec))
+        assert [e["event"] for e in got] == ["start", "chunk", "chunk",
+                                            "done"]
+        rid = got[0]["request_id"]
+        stream = fsched.stream_by_id(rid)
+        assert stream is not None and stream.resumes == 1
+        # byte identity: what the client reassembled across the two
+        # connections == the full stream replayed from the ring
+        assert (b"".join(transport.dump_event(e) for e in got)
+                == b"".join(transport.dump_event(e)
+                            for e in stream.events(0)))
+        # the rollout outran the socket here, so the stream was already
+        # terminal at disconnect time: no grace clock started (nothing
+        # to cancel), but the resume is metered
+        ft = fsched.stats()["fault_tolerance"]
+        assert ft["stream_resumes"] == 1
+        # ...and the scores match an in-process run of the same spec
+        ref = fsched.submit(spec).result()
+        res = transport.collect(iter(got))
+        for name, arr in ref.scores.items():
+            np.testing.assert_array_equal(res.scores[name], arr,
+                                          err_msg=name)
+
+    def test_no_resume_raises_actionable_interrupt(self, fsched, server):
+        # re-arm relative to the live occurrence counter: sever the
+        # 2nd write of the NEXT stream (after its start event)
+        occ = fsched.faults.stats()["occurrences"]["stream_write"]
+        fsched.faults.arm(f"stream_write:n={occ + 2}")
+        client = ForecastClient(port=server.server_address[1],
+                                resume=False)
+        spec = RequestSpec(**{**SPEC.to_dict(), "lead_chunk": 1})
+        with pytest.raises(transport.StreamInterrupted,
+                           match="resume disabled") as e:
+            list(client.stream(spec))
+        assert e.value.request_id is not None
+        assert e.value.events_received == 1
+        assert e.value.reason == "disconnected"
+
+    def test_resume_of_unknown_request_is_404(self, server):
+        conn = http.client.HTTPConnection("127.0.0.1",
+                                          server.server_address[1],
+                                          timeout=10)
+        try:
+            conn.request("GET", "/v1/stream/nope?from=0")
+            resp = conn.getresponse()
+            assert resp.status == 404
+            assert "unknown request" in json.loads(resp.read())["error"]
+        finally:
+            conn.close()
+
+    def test_resume_past_terminal_is_410(self, fsched, server):
+        done = fsched.submit(SPEC)
+        done.result()
+        conn = http.client.HTTPConnection("127.0.0.1",
+                                          server.server_address[1],
+                                          timeout=10)
+        try:
+            conn.request("GET",
+                         f"/v1/stream/{done.request_id}?from=99")
+            resp = conn.getresponse()
+            assert resp.status == 410
+            body = json.loads(resp.read())
+            assert "restart the request" in body["error"]
+            assert body["base"] == 0
+        finally:
+            conn.close()
+
+
+class TestResumeGrace:
+    def test_unclaimed_grace_cancels_the_stream(self, pool):
+        sched = _sched(pool, resume_grace_s=0.15,
+                       supervise_interval_s=0.05)
+        gate = _WarmGate(sched)
+        try:
+            plug = sched.submit(RequestSpec(**{**SPEC.to_dict(),
+                                               "seed": 900}))
+            assert gate.entered.wait(timeout=60)  # worker held mid-serve
+            victim = sched.submit(RequestSpec(**{**SPEC.to_dict(),
+                                                 "seed": 901}))
+            sched.note_disconnect(victim)
+            assert victim.disconnected_at is not None
+            assert _poll(lambda: victim.cancelled, timeout=5)
+            gate.release.set()
+            assert victim.result().cancelled
+            plug.result()
+            assert sched.stats()["fault_tolerance"][
+                "stream_disconnects"] == 1
+        finally:
+            sched.close()
+
+    def test_resume_within_grace_clears_the_clock(self, pool):
+        sched = _sched(pool, resume_grace_s=30.0)
+        try:
+            st = sched.submit(SPEC)
+            st.result()
+            sched.note_disconnect(st)  # terminal: disconnect is a no-op
+            assert st.disconnected_at is None
+        finally:
+            sched.close()
+
+
+class TestQuarantine:
+    def _blobs(self, d):
+        return sorted(f for f in os.listdir(d)
+                      if f.endswith(".stablehlo"))
+
+    def test_corrupt_blob_quarantined_exactly_once(self, pool, tmp_path):
+        d = str(tmp_path / "persist")
+        s1 = _sched(pool, cache=ExecutableCache(d))
+        s1.warmup(SPEC)
+        s1.close()
+        blobs = self._blobs(d)
+        assert blobs
+        victim = os.path.join(d, blobs[0])
+        with open(victim, "wb") as f:
+            f.write(b"not stablehlo")
+        # boot 2: the corrupt blob fails import -> quarantined once,
+        # recompiled, and a fresh blob lands back at the same path
+        s2 = _sched(pool, cache=ExecutableCache(d))
+        out = s2.warmup(SPEC)
+        assert out["misses"] >= 1
+        assert s2.cache.stats()["quarantined"] == 1
+        s2.close()
+        assert os.path.exists(victim + ".corrupt")
+        assert self._blobs(d) == blobs  # rewritten, not left missing
+        # boot 3: clean disk hits, nothing further quarantined
+        s3 = _sched(pool, cache=ExecutableCache(d))
+        out = s3.warmup(SPEC)
+        assert out["misses"] == 0
+        assert s3.cache.stats()["quarantined"] == 0
+        assert s3.cache.stats()["disk_hits"] >= 1
+        s3.close()
+
+    def test_read_failure_recompiles_without_quarantine(self, pool,
+                                                        tmp_path):
+        d = str(tmp_path / "persist")
+        s1 = _sched(pool, cache=ExecutableCache(d))
+        s1.warmup(SPEC)
+        s1.close()
+        blobs = self._blobs(d)
+        # an injected read fault is a flaky disk, not a corrupt blob:
+        # fall back to compiling, leave the file alone
+        s2 = _sched(pool, cache=ExecutableCache(d),
+                    faults=FaultInjector.from_args(["cache_read:n=1"]))
+        out = s2.warmup(SPEC)
+        assert out["misses"] >= 1
+        assert s2.cache.stats()["quarantined"] == 0
+        s2.close()
+        assert self._blobs(d) == blobs
+        assert not any(f.endswith(".corrupt") for f in os.listdir(d))
+
+
+class TestReadyz:
+    def test_readyz_tracks_starting_ready_draining(self, pool):
+        sched = ForecastScheduler(pool=pool, cache=ExecutableCache(),
+                                  max_concurrency=1, ready=False)
+        svc = ForecastService(scheduler=sched)
+        srv = svc.make_server(port=0)
+        threading.Thread(target=srv.serve_forever, daemon=True).start()
+        port = srv.server_address[1]
+
+        def readyz():
+            conn = http.client.HTTPConnection("127.0.0.1", port,
+                                              timeout=10)
+            try:
+                conn.request("GET", "/readyz")
+                resp = conn.getresponse()
+                return resp.status, json.loads(resp.read())
+            finally:
+                conn.close()
+
+        try:
+            status, body = readyz()
+            assert status == 503 and body["state"] == "starting"
+            assert body["reasons"] == ["warming"]
+            sched.mark_ready()
+            status, body = readyz()
+            assert status == 200 and body["state"] == "ready"
+            sched.close()
+            status, body = readyz()
+            assert status == 503 and body["state"] == "draining"
+            assert [t["state"] for t in body["transitions"]] == [
+                "starting", "ready", "draining"]
+        finally:
+            srv.shutdown()
+            srv.server_close()
+            sched.close()
+
+
+class TestCloseRacesRetryBackoff:
+    def test_drain_beats_a_sleeping_backoff(self, pool):
+        # every dispatch fails transiently; the backoff is far longer
+        # than the test -- close() must interrupt it, not wait it out
+        sched = _sched(pool, faults=FaultInjector.from_args(
+            ["rollout_chunk:first=100000"]),
+            retry_backoff_ms=60000.0, retry_backoff_max_ms=60000.0)
+        st = sched.submit(RequestSpec(**{**SPEC.to_dict(),
+                                         "max_retries": 8}))
+        assert _poll(lambda: int(sched.obs.retries.value()) >= 1,
+                     timeout=30)
+        t0 = time.perf_counter()
+        sched.close(timeout=20.0)
+        assert time.perf_counter() - t0 < 10.0  # no 60s backoff sleep
+        with pytest.raises(transport.ServingError) as e:
+            st.result()
+        assert e.value.reason == "shutdown"
+        assert "abandoned" in str(e.value)
+
+
+class TestUnarmedBitIdentity:
+    def test_armed_but_idle_injector_changes_nothing(self, pool):
+        plain = _sched(pool)
+        armed = _sched(pool, faults=FaultInjector([
+            FaultSpec(point="rollout_chunk", n=10**9)]))
+        try:
+            ref = list(plain.submit(SPEC).events())
+            got = list(armed.submit(SPEC).events())
+            assert _stripped(got) == _stripped(ref)
+            res, refres = (transport.collect(iter(e))
+                           for e in (got, ref))
+            assert res.retries == 0 and refres.retries == 0
+            for name, arr in refres.scores.items():
+                np.testing.assert_array_equal(res.scores[name], arr,
+                                              err_msg=name)
+            ft = armed.stats()["fault_tolerance"]
+            assert ft["faults"]["fired"] == {}
+            assert ft["health"]["state"] == "ready"
+        finally:
+            plain.close()
+            armed.close()

@@ -499,8 +499,10 @@ class TestPersistedExecutables:
     def test_stale_blob_recompiles_instead_of_poisoning(self, pool,
                                                         tmp_path, caplog):
         # A corrupt/incompatible persisted file must fall back to a
-        # fresh compile and be replaced, not fail every request for its
-        # key until someone wipes the directory.
+        # fresh compile and be quarantined aside (renamed *.corrupt),
+        # not fail every request for its key until someone wipes the
+        # directory -- see tests/test_faults.py for the full
+        # quarantine/read-failure matrix.
         b = pool.get("smoke")
         d = str(tmp_path / "aot")
         cache = ExecutableCache(persist_dir=d)
@@ -514,7 +516,9 @@ class TestPersistedExecutables:
         with caplog.at_level(logging.WARNING, "repro.serving.cache"):
             out = cache.warm(key, eng, b.params, b.buffers)
         assert not out["hit"] and out["source"] == "compiled"
-        assert "discarding stale executable" in caplog.text
+        assert "quarantined corrupt executable" in caplog.text
+        assert cache.stats()["quarantined"] == 1
+        assert os.path.exists(cache._path(key) + ".corrupt")
         assert eng.has_chunk_executable(True, 2, b.params, b.buffers)
         # the bad file was replaced by a loadable one
         eng2 = ForecastEngine(b.model, SPEC.engine_config())
