@@ -57,6 +57,15 @@ def corrected(r: dict) -> dict:
     return out
 
 
+def achieved(flops: float, mem_bytes: float, seconds: float) -> dict:
+    """Achieved throughput of one timed kernel invocation: GFLOP/s and
+    HBM GB/s from the op's roofline terms (``op_flops_bytes``) and a
+    measured wall time.  Shared by ``benchmarks/run.py``'s tuned-kernel
+    rows so the A/B columns and these tables use one arithmetic."""
+    s = max(seconds, 1e-12)
+    return {"gflops": flops / s / 1e9, "gbs": mem_bytes / s / 1e9}
+
+
 def fmt_s(x: float) -> str:
     if x >= 1.0:
         return f"{x:.2f}s"

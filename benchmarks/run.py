@@ -24,6 +24,9 @@ EXPERIMENTS.md (dry-run roofline terms for the production mesh).
   sec5_kernels                            -- op-level SHT/DISCO dispatch A/B
                                              (reference vs Pallas substrate)
                                              + banded-psi buffer footprint
+  sec5_kernels_tuned                      -- autotuned vs default Pallas tile
+                                             shapes per op (in-process sweep,
+                                             achieved GFLOP/s + GB/s)
   table3_train_step                       -- ensemble CRPS train-step time
   kernel_*                                -- Pallas hot-spot kernels
   secG_dryrun_rooflines                   -- production-mesh roofline summary
@@ -452,7 +455,7 @@ def bench_sec5_kernels() -> None:
     """
     from repro.core.sphere import disco as dlib
     from repro.core.sphere import grids, sht
-    from repro.kernels import dispatch as kdispatch
+    from repro.kernels import autotune, dispatch as kdispatch
     from repro.kernels.config import KernelConfig, default_interpret
 
     interpret = default_interpret()
@@ -469,9 +472,14 @@ def bench_sec5_kernels() -> None:
     x = jax.random.normal(jax.random.PRNGKey(0), (16, 32, 64))
     fwd_ref = jax.jit(lambda x: kdispatch.sht_forward(x, bufs["wpct"], rc))
     fwd_pal = jax.jit(lambda x: kdispatch.sht_forward(x, bufs["wpct"], kc))
+    # every derived row names the mode that ran and the Pallas tile spec
+    # (the defaults here; sec5_kernels_tuned A/Bs the swept winners)
+    leg_blocks = autotune.format_blocks("legendre")
+    dis_blocks = autotune.format_blocks("disco")
     us_r, us_p = _ab_timeit([lambda: fwd_ref(x), lambda: fwd_pal(x)], n=5)
     _row("sec5_kernels_sht_forward", us_p,
-         f"ref_us={us_r:.1f};mode={mode};speedup={us_r / us_p:.2f}x")
+         f"ref_us={us_r:.1f};mode={mode};blocks={leg_blocks};"
+         f"speedup={us_r / us_p:.2f}x")
 
     c = fwd_ref(x)
     inv_ref = jax.jit(lambda c: kdispatch.sht_inverse(c, bufs["pct"], 64,
@@ -479,7 +487,8 @@ def bench_sec5_kernels() -> None:
     inv_pal = jax.jit(lambda c: kdispatch.sht_inverse(c, bufs["pct"], 64, kc))
     us_r, us_p = _ab_timeit([lambda: inv_ref(c), lambda: inv_pal(c)], n=5)
     _row("sec5_kernels_sht_inverse", us_p,
-         f"ref_us={us_r:.1f};mode={mode};speedup={us_r / us_p:.2f}x")
+         f"ref_us={us_r:.1f};mode={mode};blocks={leg_blocks};"
+         f"speedup={us_r / us_p:.2f}x")
 
     # DISCO on a real encoder plan (equiangular -> Gaussian downsampling).
     gi = grids.make_grid(64, 128, "equiangular")
@@ -494,7 +503,8 @@ def bench_sec5_kernels() -> None:
                                                      plan.affine, kc))
     us_r, us_p = _ab_timeit([lambda: dis_ref(xd), lambda: dis_pal(xd)], n=5)
     _row("sec5_kernels_disco", us_p,
-         f"ref_us={us_r:.1f};mode={mode};speedup={us_r / us_p:.2f}x")
+         f"ref_us={us_r:.1f};mode={mode};blocks={dis_blocks};"
+         f"speedup={us_r / us_p:.2f}x")
 
     # Static-memory footprint: banded split vs full psi, both for the
     # benchmark plan and extrapolated to the paper's 721x1440 encoder.
@@ -503,7 +513,72 @@ def bench_sec5_kernels() -> None:
     _row("sec5_kernels_psi_bytes", 0.0,
          f"full_bytes={full_b};band_bytes={band_b};"
          f"ratio={full_b / max(band_b, 1):.1f}x;"
-         f"wrap_rows={int(band['wrap_rows'].shape[0])}/{plan.psi.shape[1]}")
+         f"wrap_rows={int(band['wrap_rows'].shape[0])}/{plan.psi.shape[1]};"
+         f"mode={mode};blocks={dis_blocks}")
+
+
+def bench_sec5_kernels_tuned() -> None:
+    """Autotuner A/B: default vs swept Pallas tile shapes, per op.
+
+    Runs a real in-process sweep (``repro.kernels.autotune.sweep_op``
+    into a throwaway ``TuningCache``) at the same op shapes
+    ``sec5_kernels`` benchmarks, then reports one row per op with the
+    winner's time as the value and a derived column carrying the default
+    time, both tile specs, and the achieved GFLOP/s / HBM GB/s of the
+    winner (``roofline_report.achieved`` over
+    ``autotune.op_flops_bytes`` -- the same roofline arithmetic as the
+    dry-run tables).  The default tile is always in the sweep, so
+    ``speedup >= 1.0`` by construction.
+    """
+    import shutil
+    import tempfile
+    try:
+        from roofline_report import achieved  # python benchmarks/run.py
+    except ImportError:
+        from benchmarks.roofline_report import achieved  # -m / pytest
+    from repro.core.sphere import disco as dlib
+    from repro.core.sphere import grids, sht
+    from repro.kernels import autotune
+    from repro.kernels.config import default_interpret
+
+    interpret = default_interpret()
+    mode = "interpret" if interpret else "compiled"
+
+    # The exact problem shapes sec5_kernels times (so the two benchmark
+    # families A/B the same work): the smoke-latent SHT slab, the
+    # encoder-plan DISCO band and the kernel_crps_interp score slab.
+    t = sht.SHT.create(grids.make_grid(32, 64, "gauss"))
+    h, l, m = t.buffers()["wpct"].shape
+    plan = dlib.make_disco_plan(grids.make_grid(64, 128, "equiangular"),
+                                grids.make_grid(32, 64, "gauss"))
+    k, h_out, s, d = plan.banded_buffers(jnp.float32)["psi_band"].shape
+    ops_shapes = {
+        "legendre": (16, h, l, m),
+        "disco": (8, h_out, s, 128, k, d, plan.stride),
+        "crps": (16, 65536),
+    }
+
+    tmp = tempfile.mkdtemp(prefix="fcn3-bench-tune-")
+    try:
+        cache = autotune.TuningCache(tmp)
+        for op, shapes in ops_shapes.items():
+            entry = autotune.sweep_op(op, shapes, cache=cache,
+                                      interpret=interpret,
+                                      max_candidates=6, iters=3)
+            best_s = entry["best_us"] * 1e-6
+            flops, mem = autotune.op_flops_bytes(op, shapes)
+            ach = achieved(flops, mem, best_s)
+            speedup = entry["default_us"] / max(entry["best_us"], 1e-9)
+            _row(f"sec5_kernels_tuned_{op}", entry["best_us"],
+                 f"default_us={entry['default_us']:.1f};mode={mode};"
+                 f"blocks={autotune.format_blocks(op, entry['dims'])};"
+                 f"default_blocks={autotune.format_blocks(op)};"
+                 f"speedup={speedup:.2f}x;"
+                 f"gflops={ach['gflops']:.3f};gbs={ach['gbs']:.3f};"
+                 f"candidates={len(entry['candidates'])};"
+                 f"swept={int(entry['swept'])}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
 
 
 def bench_dist_roofline() -> None:
@@ -709,10 +784,17 @@ def _append_history(path: str, rows: list[dict]) -> None:
     Each appended entry is a row plus provenance (git SHA, UTC date,
     jax backend), so CI runs accumulate a queryable latency/throughput
     history across commits (the ``BENCH_serving.json`` artifact).
+
+    The trajectory doubles as a regression guard: a new row whose
+    ``us_per_call`` exceeds the last recorded entry for the same
+    (name, backend) by more than 10% prints a ``REGRESSION?`` warning to
+    stderr.  A warning, not a failure -- shared CI hosts are noisy and
+    the history carries the evidence either way.
     """
     import datetime
     import os
     import subprocess
+    import sys
     sha = os.environ.get("GITHUB_SHA")
     if not sha:
         try:
@@ -732,6 +814,19 @@ def _append_history(path: str, rows: list[dict]) -> None:
             raise ValueError(f"{path} is not a JSON list")
     except FileNotFoundError:
         history = []
+    last = {}  # (name, backend) -> most recent us_per_call on record
+    for old in history:
+        if isinstance(old, dict) and "name" in old:
+            last[(old["name"], old.get("backend"))] = old.get("us_per_call")
+    for row in rows:
+        if not row["name"].startswith("sec5"):
+            continue
+        prev = last.get((row["name"], stamp["backend"]))
+        if prev and row["us_per_call"] > 1.1 * prev:
+            print(f"REGRESSION? {row['name']} us_per_call="
+                  f"{row['us_per_call']:.1f} vs last {prev:.1f} "
+                  f"(+{100 * (row['us_per_call'] / prev - 1):.0f}%, "
+                  f"backend={stamp['backend']})", file=sys.stderr)
     history.extend({**stamp, **row} for row in rows
                    if row["name"].startswith("sec5"))
     with open(path, "w") as f:
@@ -750,6 +845,7 @@ BENCHES = {
                                                           a.steps),
     "sec5_bundle": lambda a: bench_bundle(a.members, a.steps),
     "sec5_kernels": lambda a: bench_sec5_kernels(),
+    "sec5_kernels_tuned": lambda a: bench_sec5_kernels_tuned(),
     "table3_train_step": lambda a: bench_train_step(),
     "kernel_pallas": lambda a: bench_kernels(),
     "secG_dryrun_rooflines": lambda a: bench_dist_roofline(),

@@ -8,7 +8,11 @@ docs/kernels.md for the dispatch matrix.
 """
 
 from repro.kernels.config import (  # noqa: F401
+    BLOCK_DEFAULTS,
+    BLOCK_OPS,
+    BlockConfig,
     KernelConfig,
+    block_sizes,
     compiled_backend,
     default_interpret,
 )

@@ -33,6 +33,20 @@ COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
 _MODES = ("auto", "reference", "pallas")
 _OPS = ("sht", "disco")
 
+#: op families whose Pallas kernels take a tunable tile shape.  "legendre"
+#: covers both SHT directions (the contraction is the same kernel).
+BLOCK_OPS = ("legendre", "disco", "crps", "ssd")
+
+#: today's hardcoded tile shapes, now the authoritative defaults: an
+#: empty/absent ``BlockConfig`` resolves to exactly these values, so the
+#: untuned dispatch stays bit-identical (same pallas_call, same grid).
+BLOCK_DEFAULTS = {
+    "legendre": {"b_blk": 128, "k_blk": 128, "m_blk": 8, "n_blk": 128},
+    "disco": {"b_blk": 8, "h_blk": 8},
+    "crps": {"n_blk": 1024},
+    "ssd": {"bc_blk": 1},
+}
+
 
 def compiled_backend() -> bool:
     """True when ``jax.default_backend()`` compiles Pallas kernels."""
@@ -50,6 +64,71 @@ def default_interpret() -> bool:
 
 
 @dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    """Tile-shape override for one kernel-op family.
+
+    ``dims`` is a sorted tuple of ``(name, value)`` pairs overriding a
+    subset of ``BLOCK_DEFAULTS[op]``; unnamed dims keep their default.
+    Frozen + hashable (and ``dataclasses.astuple``-able), so it nests
+    inside ``KernelConfig`` and therefore inside every engine-pool and
+    AOT executable-cache key -- a tuned tile shape *is* a different
+    compiled program and must never collide with the default one.
+    """
+
+    op: str
+    dims: tuple = ()
+
+    def __post_init__(self):
+        if self.op not in BLOCK_OPS:
+            raise ValueError(f"BlockConfig.op must be one of {BLOCK_OPS}, "
+                             f"got {self.op!r}")
+        norm = []
+        for pair in self.dims:
+            name, value = pair
+            if name not in BLOCK_DEFAULTS[self.op]:
+                raise ValueError(
+                    f"unknown block dim {name!r} for op {self.op!r}; "
+                    f"expected a subset of "
+                    f"{sorted(BLOCK_DEFAULTS[self.op])}")
+            if isinstance(value, bool) or not isinstance(value, int) \
+                    or value < 1:
+                raise ValueError(
+                    f"block dim {name}={value!r} must be a positive int")
+            norm.append((name, value))
+        norm.sort()
+        if len({n for n, _ in norm}) != len(norm):
+            raise ValueError(f"duplicate block dims in {self.dims!r}")
+        object.__setattr__(self, "dims", tuple(norm))
+
+    @classmethod
+    def make(cls, op: str, **dims: int) -> "BlockConfig":
+        return cls(op, tuple(sorted(dims.items())))
+
+    def sizes(self) -> dict:
+        """Full dim->value mapping: defaults overlaid with this config."""
+        return {**BLOCK_DEFAULTS[self.op], **dict(self.dims)}
+
+    def is_default(self) -> bool:
+        return self.sizes() == BLOCK_DEFAULTS[self.op]
+
+
+def block_sizes(op: str, blocks: "BlockConfig | None" = None) -> dict:
+    """The tile shape a kernel wrapper should actually use.
+
+    ``blocks=None`` (the untuned path) resolves to ``BLOCK_DEFAULTS[op]``
+    exactly; a ``BlockConfig`` must carry the same ``op``.
+    """
+    if op not in BLOCK_OPS:
+        raise ValueError(f"unknown block op {op!r}; expected {BLOCK_OPS}")
+    if blocks is None:
+        return dict(BLOCK_DEFAULTS[op])
+    if blocks.op != op:
+        raise ValueError(f"BlockConfig for op {blocks.op!r} passed to a "
+                         f"{op!r} kernel")
+    return blocks.sizes()
+
+
+@dataclasses.dataclass(frozen=True)
 class KernelConfig:
     """Per-op kernel substrate selection with backend-aware defaults.
 
@@ -63,6 +142,12 @@ class KernelConfig:
       ``sht="pallas"`` on CPU degrades to the reference path rather
       than silently running the interpreter in production.
 
+    blocks: tile-shape overrides, a tuple of ``BlockConfig`` (at most
+      one per op family, sorted by op).  Empty means the hardcoded
+      ``BLOCK_DEFAULTS`` -- bit-identical to the pre-autotuner dispatch.
+      Populated by ``repro.kernels.autotune.resolve_kernel_config`` from
+      the installed tuning cache, or explicitly.
+
     Frozen + hashable: nests inside ``FCN3Config`` / ``EngineConfig``
     and therefore inside every engine-pool and AOT executable-cache key.
     """
@@ -70,6 +155,7 @@ class KernelConfig:
     sht: str = "auto"
     disco: str = "auto"
     interpret: bool | None = None
+    blocks: tuple = ()
 
     def __post_init__(self):
         for op in _OPS:
@@ -81,6 +167,31 @@ class KernelConfig:
             raise ValueError(
                 f"KernelConfig.interpret must be None/True/False, "
                 f"got {self.interpret!r}")
+        blocks = tuple(self.blocks)
+        for bc in blocks:
+            if not isinstance(bc, BlockConfig):
+                raise ValueError(
+                    f"KernelConfig.blocks entries must be BlockConfig, "
+                    f"got {bc!r}")
+        ops = [bc.op for bc in blocks]
+        if len(set(ops)) != len(ops):
+            raise ValueError(f"duplicate BlockConfig ops in {ops}")
+        object.__setattr__(
+            self, "blocks", tuple(sorted(blocks, key=lambda b: b.op)))
+
+    def blocks_for(self, op: str) -> BlockConfig | None:
+        """This config's tile override for ``op`` (None = defaults)."""
+        if op not in BLOCK_OPS:
+            raise ValueError(f"unknown block op {op!r}; "
+                             f"expected {BLOCK_OPS}")
+        for bc in self.blocks:
+            if bc.op == op:
+                return bc
+        return None
+
+    def with_blocks(self, *blocks: BlockConfig) -> "KernelConfig":
+        """A copy carrying ``blocks`` (replacing any existing set)."""
+        return dataclasses.replace(self, blocks=tuple(blocks))
 
     def resolve(self, op: str) -> tuple[str, bool]:
         """(path, interpret) actually used for ``op`` on this backend.

@@ -20,9 +20,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.config import default_interpret
+from repro.kernels.config import BLOCK_DEFAULTS, block_sizes, default_interpret
 
-N_BLK = 1024
+# Default spatial tile; overridable per call via ``blocks`` (a
+# ``BlockConfig`` for op "crps").
+N_BLK = BLOCK_DEFAULTS["crps"]["n_blk"]
 
 
 def _crps_kernel(ens_ref, obs_ref, o_ref, *, e: int, coeff: float):
@@ -38,33 +40,38 @@ def _crps_kernel(ens_ref, obs_ref, o_ref, *, e: int, coeff: float):
     o_ref[...] = err / e - coeff * spread / (e * e)
 
 
-@functools.partial(jax.jit, static_argnames=("fair", "interpret"))
+@functools.partial(jax.jit, static_argnames=("fair", "interpret", "blocks"))
 def crps_fused(ens: jax.Array, obs: jax.Array, fair: bool = False,
-               interpret: bool | None = None) -> jax.Array:
+               interpret: bool | None = None,
+               blocks=None) -> jax.Array:
     """Pointwise ensemble CRPS.
 
     ens: (E, N); obs: (N,) -> (N,) float32. ``fair`` selects eq. (47).
-    ``interpret=None`` auto-detects from the backend.
+    ``interpret=None`` auto-detects from the backend.  ``blocks`` is a
+    ``BlockConfig`` for op "crps" (None = defaults); the spatial axis is
+    zero-padded up to the tile -- exact for any positive n_blk since
+    padded lanes are sliced away before returning.
     """
     if interpret is None:
         interpret = default_interpret()
+    n_blk = block_sizes("crps", blocks)["n_blk"]
     e, n = ens.shape
     assert obs.shape == (n,)
     coeff = (e / (e - 1.0)) if (fair and e > 1) else 1.0
 
-    pn = -n % N_BLK
+    pn = -n % n_blk
     ensp = jnp.pad(ens.astype(jnp.float32), ((0, 0), (0, pn)))
     obsp = jnp.pad(obs.astype(jnp.float32), ((0, pn)))[None, :]
-    gn = (n + pn) // N_BLK
+    gn = (n + pn) // n_blk
 
     out = pl.pallas_call(
         functools.partial(_crps_kernel, e=e, coeff=coeff),
         grid=(gn,),
         in_specs=[
-            pl.BlockSpec((e, N_BLK), lambda i: (0, i)),
-            pl.BlockSpec((1, N_BLK), lambda i: (0, i)),
+            pl.BlockSpec((e, n_blk), lambda i: (0, i)),
+            pl.BlockSpec((1, n_blk), lambda i: (0, i)),
         ],
-        out_specs=pl.BlockSpec((1, N_BLK), lambda i: (0, i)),
+        out_specs=pl.BlockSpec((1, n_blk), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, n + pn), jnp.float32),
         interpret=interpret,
     )(ensp, obsp)

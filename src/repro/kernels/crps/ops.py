@@ -9,21 +9,26 @@ from repro.kernels.crps.crps import crps_fused
 
 
 def crps_pointwise_pallas(ens: jax.Array, obs: jax.Array, fair: bool = False,
-                          interpret: bool | None = None) -> jax.Array:
+                          interpret: bool | None = None,
+                          blocks=None) -> jax.Array:
     """Drop-in for ``repro.core.crps.crps_ensemble`` (ensemble axis 0).
 
     ens: (E, ...); obs: (...) -> (...) float32.  ``interpret=None``
-    auto-detects from the backend (compiled on TPU/GPU).
+    auto-detects from the backend (compiled on TPU/GPU); ``blocks`` is
+    the "crps" tile override (None = defaults).
     """
     e = ens.shape[0]
     flat = ens.reshape(e, -1)
-    out = crps_fused(flat, obs.reshape(-1), fair=fair, interpret=interpret)
+    out = crps_fused(flat, obs.reshape(-1), fair=fair, interpret=interpret,
+                     blocks=blocks)
     return out.reshape(obs.shape)
 
 
 def nodal_crps_pallas(ens: jax.Array, obs: jax.Array,
                       area_weights: jax.Array, fair: bool = False,
-                      interpret: bool | None = None) -> jax.Array:
+                      interpret: bool | None = None,
+                      blocks=None) -> jax.Array:
     """Quadrature-averaged nodal CRPS (paper eq. 50) via the Pallas kernel."""
-    pt = crps_pointwise_pallas(ens, obs, fair=fair, interpret=interpret)
+    pt = crps_pointwise_pallas(ens, obs, fair=fair, interpret=interpret,
+                               blocks=blocks)
     return jnp.einsum("...hw,hw->...", pt, area_weights.astype(pt.dtype))

@@ -29,10 +29,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.config import default_interpret
+from repro.kernels.config import BLOCK_DEFAULTS, block_sizes, default_interpret
 
-B_BLK = 8
-H_BLK = 8
+# Default tile shape; overridable per call via ``blocks`` (a ``BlockConfig``
+# for op "disco", typically resolved from the autotuner's tuning cache).
+B_BLK = BLOCK_DEFAULTS["disco"]["b_blk"]
+H_BLK = BLOCK_DEFAULTS["disco"]["h_blk"]
 
 
 def _disco_kernel(x_ref, psi_ref, o_ref, *, d: int, w_out: int, stride: int):
@@ -69,10 +71,11 @@ def _disco_kernel(x_ref, psi_ref, o_ref, *, d: int, w_out: int, stride: int):
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "interpret"))
+@functools.partial(jax.jit, static_argnames=("stride", "interpret", "blocks"))
 def disco_band_contract(x_gathered: jax.Array, psi_band: jax.Array,
                         stride: int = 1,
-                        interpret: bool | None = None) -> jax.Array:
+                        interpret: bool | None = None,
+                        blocks=None) -> jax.Array:
     """Banded DISCO contraction.
 
     x_gathered: (B, H_out, S, W_in) -- input rows pre-gathered per output
@@ -80,11 +83,15 @@ def disco_band_contract(x_gathered: jax.Array, psi_band: jax.Array,
     psi_band: (K, H_out, S, D) banded filter values.
     stride: longitudinal output stride (W_out = W_in // stride).
     interpret: None auto-detects from the backend (compiled on TPU/GPU).
+    blocks: ``BlockConfig`` for op "disco" (None = defaults).  Rows are
+      zero-padded up to block multiples -- exact for any positive tile.
 
     Returns (B, K, H_out, W_out) float32.
     """
     if interpret is None:
         interpret = default_interpret()
+    bs = block_sizes("disco", blocks)
+    b_blk, h_blk = bs["b_blk"], bs["h_blk"]
     b, h, s, w_in = x_gathered.shape
     k, h2, s2, d = psi_band.shape
     assert (h, s) == (h2, s2), (x_gathered.shape, psi_band.shape)
@@ -94,20 +101,21 @@ def disco_band_contract(x_gathered: jax.Array, psi_band: jax.Array,
     xp = jnp.concatenate([x_gathered, x_gathered[..., :d]], axis=-1)
     w_pad = w_in + d
 
-    pb, ph = -b % B_BLK, -h % H_BLK
+    pb, ph = -b % b_blk, -h % h_blk
     xp = jnp.pad(xp.astype(jnp.float32), ((0, pb), (0, ph), (0, 0), (0, 0)))
     pp = jnp.pad(psi_band.astype(jnp.float32),
                  ((0, 0), (0, ph), (0, 0), (0, 0)))
-    gb, gh = (b + pb) // B_BLK, (h + ph) // H_BLK
+    gb, gh = (b + pb) // b_blk, (h + ph) // h_blk
 
     out = pl.pallas_call(
         functools.partial(_disco_kernel, d=d, w_out=w_out, stride=stride),
         grid=(gb, gh),
         in_specs=[
-            pl.BlockSpec((B_BLK, H_BLK, s, w_pad), lambda ib, ih: (ib, ih, 0, 0)),
-            pl.BlockSpec((k, H_BLK, s, d), lambda ib, ih: (0, ih, 0, 0)),
+            pl.BlockSpec((b_blk, h_blk, s, w_pad),
+                         lambda ib, ih: (ib, ih, 0, 0)),
+            pl.BlockSpec((k, h_blk, s, d), lambda ib, ih: (0, ih, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((B_BLK, k, H_BLK, w_out),
+        out_specs=pl.BlockSpec((b_blk, k, h_blk, w_out),
                                lambda ib, ih: (ib, 0, ih, 0)),
         out_shape=jax.ShapeDtypeStruct((b + pb, k, h + ph, w_out),
                                        jnp.float32),

@@ -48,17 +48,18 @@ _DEFAULT = KernelConfig()
 # Differentiable Pallas primitives (reference-oracle backward passes)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def _legendre(x: jax.Array, table: jax.Array, interpret: bool) -> jax.Array:
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _legendre(x: jax.Array, table: jax.Array, interpret: bool,
+              blocks=None) -> jax.Array:
     """Pallas Legendre contraction with a reference-math VJP."""
-    return legendre_contract(x, table, interpret=interpret)
+    return legendre_contract(x, table, interpret=interpret, blocks=blocks)
 
 
-def _legendre_fwd(x, table, interpret):
-    return _legendre(x, table, interpret), (x, table)
+def _legendre_fwd(x, table, interpret, blocks):
+    return _legendre(x, table, interpret, blocks), (x, table)
 
 
-def _legendre_bwd(interpret, res, g):
+def _legendre_bwd(interpret, blocks, res, g):
     x, table = res
     _, vjp = jax.vjp(legendre_contract_ref, x, table)
     return vjp(g)
@@ -67,19 +68,20 @@ def _legendre_bwd(interpret, res, g):
 _legendre.defvjp(_legendre_fwd, _legendre_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def _band_contract(xg: jax.Array, psi_band: jax.Array, stride: int,
-                   interpret: bool) -> jax.Array:
+                   interpret: bool, blocks=None) -> jax.Array:
     """Pallas banded DISCO contraction with a reference-math VJP."""
     return disco_band_contract(xg, psi_band, stride=stride,
-                               interpret=interpret)
+                               interpret=interpret, blocks=blocks)
 
 
-def _band_fwd(xg, psi_band, stride, interpret):
-    return _band_contract(xg, psi_band, stride, interpret), (xg, psi_band)
+def _band_fwd(xg, psi_band, stride, interpret, blocks):
+    return (_band_contract(xg, psi_band, stride, interpret, blocks),
+            (xg, psi_band))
 
 
-def _band_bwd(stride, interpret, res, g):
+def _band_bwd(stride, interpret, blocks, res, g):
     xg, psi_band = res
     _, vjp = jax.vjp(
         lambda x_, p_: disco_band_contract_ref(x_, p_, stride=stride),
@@ -100,13 +102,14 @@ def _flatten_batch(x: jax.Array, keep: int) -> tuple[jax.Array, tuple]:
 
 
 def sht_forward_pallas(x: jax.Array, wpct: jax.Array,
-                       interpret: bool | None = None) -> jax.Array:
+                       interpret: bool | None = None,
+                       blocks=None) -> jax.Array:
     """Forward SHT with the Legendre stage on the Pallas kernel.
 
     Same contract (and same longitudinal transform, including the
     DFT-as-GEMM ``REPRO_DFT_MODE``) as ``core.sphere.sht.sht_forward``;
     only the (..., H, M) x (H, L, M) Legendre contraction changes
-    engine.
+    engine.  ``blocks`` is the "legendre" tile override (None = defaults).
     """
     if interpret is None:
         interpret = default_interpret()
@@ -116,13 +119,14 @@ def sht_forward_pallas(x: jax.Array, wpct: jax.Array,
     xf = xf * (2.0 * jnp.pi / w)
     re, batch = _flatten_batch(jnp.real(xf), 2)
     im, _ = _flatten_batch(jnp.imag(xf), 2)
-    cre = _legendre(re, wpct, interpret)
-    cim = _legendre(im, wpct, interpret)
+    cre = _legendre(re, wpct, interpret, blocks)
+    cim = _legendre(im, wpct, interpret, blocks)
     return jax.lax.complex(cre, cim).reshape(batch + (l, m))
 
 
 def sht_inverse_pallas(c: jax.Array, pct: jax.Array, nlon: int,
-                       interpret: bool | None = None) -> jax.Array:
+                       interpret: bool | None = None,
+                       blocks=None) -> jax.Array:
     """Inverse SHT with the Legendre stage on the Pallas kernel."""
     if interpret is None:
         interpret = default_interpret()
@@ -130,8 +134,8 @@ def sht_inverse_pallas(c: jax.Array, pct: jax.Array, nlon: int,
     table = pct.transpose(1, 0, 2)  # (L, H, M): contract over degree L
     re, batch = _flatten_batch(jnp.real(c), 2)
     im, _ = _flatten_batch(jnp.imag(c), 2)
-    sr = _legendre(re.astype(jnp.float32), table, interpret)
-    si = _legendre(im.astype(jnp.float32), table, interpret)
+    sr = _legendre(re.astype(jnp.float32), table, interpret, blocks)
+    si = _legendre(im.astype(jnp.float32), table, interpret, blocks)
     spec = jax.lax.complex(sr, si).reshape(batch + (h, m))
     pad = nlon // 2 + 1 - m
     if pad < 0:
@@ -144,18 +148,22 @@ def sht_inverse_pallas(c: jax.Array, pct: jax.Array, nlon: int,
 def sht_forward(x: jax.Array, wpct: jax.Array,
                 kernels: KernelConfig | None = None) -> jax.Array:
     """KernelConfig-routed forward SHT (drop-in for the reference)."""
-    path, interpret = (kernels or _DEFAULT).resolve("sht")
+    kc = kernels or _DEFAULT
+    path, interpret = kc.resolve("sht")
     if path == "pallas":
-        return sht_forward_pallas(x, wpct, interpret)
+        return sht_forward_pallas(x, wpct, interpret,
+                                  kc.blocks_for("legendre"))
     return shtlib.sht_forward(x, wpct)
 
 
 def sht_inverse(c: jax.Array, pct: jax.Array, nlon: int,
                 kernels: KernelConfig | None = None) -> jax.Array:
     """KernelConfig-routed inverse SHT (drop-in for the reference)."""
-    path, interpret = (kernels or _DEFAULT).resolve("sht")
+    kc = kernels or _DEFAULT
+    path, interpret = kc.resolve("sht")
     if path == "pallas":
-        return sht_inverse_pallas(c, pct, nlon, interpret)
+        return sht_inverse_pallas(c, pct, nlon, interpret,
+                                  kc.blocks_for("legendre"))
     return shtlib.sht_inverse(c, pct, nlon)
 
 
@@ -174,7 +182,9 @@ def disco_conv_banded_buffers(x: jax.Array, buffers: dict, stride: int,
     come from ``DiscoPlan.banded_buffers``; the band tap convention is
     ``off0 = -(D // 2)`` so all statics derive from buffer shapes.
     """
-    _, interpret = (kernels or _DEFAULT).resolve("disco")
+    kc = kernels or _DEFAULT
+    _, interpret = kc.resolve("disco")
+    blocks = kc.blocks_for("disco")
     psi_band = buffers["psi_band"]
     k, h_out, s, d = psi_band.shape
     batch = x.shape[:-2]
@@ -184,7 +194,8 @@ def disco_conv_banded_buffers(x: jax.Array, buffers: dict, stride: int,
     xr = jnp.roll(x, -off0, axis=-1) if off0 else x
     xg = discolib._gather_band(xr, buffers["lat_idx"], affine, h_out)
     xb = xg.reshape((-1,) + xg.shape[-3:]).astype(jnp.float32)
-    out = _band_contract(xb, psi_band.astype(jnp.float32), stride, interpret)
+    out = _band_contract(xb, psi_band.astype(jnp.float32), stride, interpret,
+                         blocks)
     out = out.reshape(batch + (k, h_out, w_in // stride))
     wrap_rows = buffers["wrap_rows"]
     if wrap_rows.shape[0]:

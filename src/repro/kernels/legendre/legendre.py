@@ -24,14 +24,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.config import default_interpret
+from repro.kernels.config import BLOCK_DEFAULTS, block_sizes, default_interpret
 
-# Block sizes: MXU-aligned 128 on the contraction/output dims; the Fourier
-# order m is a batch dimension of the GEMM and is tiled narrow.
-B_BLK = 128
-K_BLK = 128
-N_BLK = 128
-M_BLK = 8
+# Default block sizes: MXU-aligned 128 on the contraction/output dims; the
+# Fourier order m is a batch dimension of the GEMM and is tiled narrow.
+# Overridable per call via ``blocks`` (a ``BlockConfig`` for op "legendre",
+# typically resolved from the autotuner's tuning cache).
+B_BLK = BLOCK_DEFAULTS["legendre"]["b_blk"]
+K_BLK = BLOCK_DEFAULTS["legendre"]["k_blk"]
+N_BLK = BLOCK_DEFAULTS["legendre"]["n_blk"]
+M_BLK = BLOCK_DEFAULTS["legendre"]["m_blk"]
 
 
 def _legendre_kernel(x_ref, t_ref, o_ref):
@@ -58,38 +60,44 @@ def _legendre_kernel(x_ref, t_ref, o_ref):
     o_ref[...] += acc.transpose(1, 2, 0).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "blocks"))
 def legendre_contract(x: jax.Array, table: jax.Array,
-                      interpret: bool | None = None) -> jax.Array:
+                      interpret: bool | None = None,
+                      blocks=None) -> jax.Array:
     """out[b, n, m] = sum_k x[b, k, m] * table[k, n, m].
 
     x: (B, K, M) float32; table: (K, N, M) float32 -> (B, N, M) float32.
     Shapes are zero-padded up to block multiples; zero padding is exact for
-    this bilinear contraction.  ``interpret=None`` auto-detects from the
-    backend (compiled on TPU/GPU, interpreter elsewhere).
+    this bilinear contraction for *any* positive block sizes, so a tuned
+    ``blocks`` (``BlockConfig`` for op "legendre") changes only the tiling.
+    ``interpret=None`` auto-detects from the backend (compiled on TPU/GPU,
+    interpreter elsewhere).
     """
     if interpret is None:
         interpret = default_interpret()
+    bs = block_sizes("legendre", blocks)
+    b_blk, k_blk, n_blk, m_blk = (bs["b_blk"], bs["k_blk"],
+                                  bs["n_blk"], bs["m_blk"])
     b, k, m = x.shape
     k2, n, m2 = table.shape
     assert k == k2 and m == m2, (x.shape, table.shape)
 
-    pb, pk, pn, pm = (-b % B_BLK), (-k % K_BLK), (-n % N_BLK), (-m % M_BLK)
+    pb, pk, pn, pm = (-b % b_blk), (-k % k_blk), (-n % n_blk), (-m % m_blk)
     xp = jnp.pad(x.astype(jnp.float32), ((0, pb), (0, pk), (0, pm)))
     tp = jnp.pad(table.astype(jnp.float32), ((0, pk), (0, pn), (0, pm)))
-    gb, gk, gn, gm = ((b + pb) // B_BLK, (k + pk) // K_BLK,
-                      (n + pn) // N_BLK, (m + pm) // M_BLK)
+    gb, gk, gn, gm = ((b + pb) // b_blk, (k + pk) // k_blk,
+                      (n + pn) // n_blk, (m + pm) // m_blk)
 
     out = pl.pallas_call(
         _legendre_kernel,
         grid=(gb, gn, gm, gk),
         in_specs=[
-            pl.BlockSpec((B_BLK, K_BLK, M_BLK),
+            pl.BlockSpec((b_blk, k_blk, m_blk),
                          lambda ib, in_, im, ik: (ib, ik, im)),
-            pl.BlockSpec((K_BLK, N_BLK, M_BLK),
+            pl.BlockSpec((k_blk, n_blk, m_blk),
                          lambda ib, in_, im, ik: (ik, in_, im)),
         ],
-        out_specs=pl.BlockSpec((B_BLK, N_BLK, M_BLK),
+        out_specs=pl.BlockSpec((b_blk, n_blk, m_blk),
                                lambda ib, in_, im, ik: (ib, in_, im)),
         out_shape=jax.ShapeDtypeStruct((b + pb, n + pn, m + pm), jnp.float32),
         interpret=interpret,

@@ -17,10 +17,11 @@ from repro.kernels.ssd.ssd import ssd_intra_chunk
 def ssd_chunked_pallas(x: jax.Array, da: jax.Array, b_mat: jax.Array,
                        c_mat: jax.Array, chunk: int,
                        initial_state: jax.Array | None = None,
-                       interpret: bool | None = None
-                       ) -> tuple[jax.Array, jax.Array]:
+                       interpret: bool | None = None,
+                       blocks=None) -> tuple[jax.Array, jax.Array]:
     """Same contract as repro.models.ssm.ssd_chunked; ``interpret=None``
-    auto-detects from the backend (compiled on TPU/GPU)."""
+    auto-detects from the backend (compiled on TPU/GPU); ``blocks`` is
+    the "ssd" tile override (None = defaults)."""
     bsz, s, h, p = x.shape
     g, n = b_mat.shape[2], b_mat.shape[3]
     assert s % chunk == 0
@@ -37,7 +38,7 @@ def ssd_chunked_pallas(x: jax.Array, da: jax.Array, b_mat: jax.Array,
     da_cs = jnp.cumsum(dac.astype(jnp.float32), axis=1)
 
     y_diag, states = ssd_intra_chunk(xc, da_cs, bc, cc, n_groups=g,
-                                     interpret=interpret)
+                                     interpret=interpret, blocks=blocks)
     y_diag = y_diag.reshape(bsz, nc, chunk, h, p)
     states = states.reshape(bsz, nc, h, p, n)
     da_cs = da_cs.reshape(bsz, nc, chunk, h)

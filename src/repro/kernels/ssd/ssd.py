@@ -23,80 +23,106 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.config import default_interpret
+from repro.kernels.config import BLOCK_DEFAULTS, block_sizes, default_interpret
+
+# Default (batch*chunk) rows per kernel instance; overridable per call via
+# ``blocks`` (a ``BlockConfig`` for op "ssd").
+BC_BLK = BLOCK_DEFAULTS["ssd"]["bc_blk"]
 
 
-def _ssd_kernel(x_ref, dacs_ref, b_ref, c_ref, y_ref, st_ref):
-    """One (batch*chunk, head) tile.
+def _ssd_kernel(x_ref, dacs_ref, b_ref, c_ref, y_ref, st_ref, *,
+                bc_blk: int):
+    """One (batch*chunk tile, head) instance.
 
-    x_ref:    (1, L, 1, P)   dt-scaled inputs
-    dacs_ref: (1, L, 1)      inclusive cumsum of dt*A within the chunk
-    b_ref:    (1, L, 1, N)   input projections (group of this head)
-    c_ref:    (1, L, 1, N)   output projections
-    y_ref:    (1, L, 1, P)   intra-chunk output
-    st_ref:   (1, 1, P, N)   end-of-chunk state contribution
+    x_ref:    (BC_BLK, L, 1, P)   dt-scaled inputs
+    dacs_ref: (BC_BLK, L, 1)      inclusive cumsum of dt*A within the chunk
+    b_ref:    (BC_BLK, L, 1, N)   input projections (group of this head)
+    c_ref:    (BC_BLK, L, 1, N)   output projections
+    y_ref:    (BC_BLK, L, 1, P)   intra-chunk output
+    st_ref:   (BC_BLK, 1, P, N)   end-of-chunk state contribution
+
+    The rows of the tile are independent chunks, processed by a statically
+    unrolled loop; ``bc_blk=1`` is exactly the original single-chunk body.
     """
-    x = x_ref[0, :, 0, :]          # (L, P)
-    da = dacs_ref[0, :, 0]         # (L,)
-    b = b_ref[0, :, 0, :]          # (L, N)
-    c = c_ref[0, :, 0, :]          # (L, N)
-    l = x.shape[0]
+    for r in range(bc_blk):
+        x = x_ref[r, :, 0, :]          # (L, P)
+        da = dacs_ref[r, :, 0]         # (L,)
+        b = b_ref[r, :, 0, :]          # (L, N)
+        c = c_ref[r, :, 0, :]          # (L, N)
+        l = x.shape[0]
 
-    diff = da[:, None] - da[None, :]
-    tri = jnp.tril(jnp.ones((l, l), jnp.float32))
-    decay = jnp.exp(diff) * tri
-    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)  # (L, L)
-    att = cb * decay
-    y = jax.lax.dot_general(att, x, (((1,), (0,)), ((), ())),
-                            preferred_element_type=jnp.float32)   # (L, P)
-    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+        diff = da[:, None] - da[None, :]
+        tri = jnp.tril(jnp.ones((l, l), jnp.float32))
+        decay = jnp.exp(diff) * tri
+        cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (L, L)
+        att = cb * decay
+        y = jax.lax.dot_general(att, x, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)   # (L, P)
+        y_ref[r, :, 0, :] = y.astype(y_ref.dtype)
 
-    decay_states = jnp.exp(da[l - 1] - da)                        # (L,)
-    bw = b * decay_states[:, None]
-    st = jax.lax.dot_general(x, bw, (((0,), (0,)), ((), ())),
-                             preferred_element_type=jnp.float32)  # (P, N)
-    st_ref[0, 0, :, :] = st.astype(st_ref.dtype)
+        decay_states = jnp.exp(da[l - 1] - da)                        # (L,)
+        bw = b * decay_states[:, None]
+        st = jax.lax.dot_general(x, bw, (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (P, N)
+        st_ref[r, 0, :, :] = st.astype(st_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("n_groups", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n_groups", "interpret",
+                                             "blocks"))
 def ssd_intra_chunk(x: jax.Array, da_cs: jax.Array, b_mat: jax.Array,
                     c_mat: jax.Array, n_groups: int = 1,
-                    interpret: bool | None = None
-                    ) -> tuple[jax.Array, jax.Array]:
+                    interpret: bool | None = None,
+                    blocks=None) -> tuple[jax.Array, jax.Array]:
     """Fused intra-chunk SSD.
 
     x:      (BC, L, H, P)  (BC = batch * n_chunks, already dt-scaled)
     da_cs:  (BC, L, H)     inclusive cumsum of dt*A
     b_mat:  (BC, L, G, N)
     c_mat:  (BC, L, G, N)
-    ``interpret=None`` auto-detects from the backend.
+    ``interpret=None`` auto-detects from the backend.  ``blocks`` is a
+    ``BlockConfig`` for op "ssd" (None = defaults); the BC axis is
+    zero-padded up to ``bc_blk`` -- exact for any positive tile because
+    padded chunks never touch real rows (da_cs=0 keeps exp() finite) and
+    their outputs are sliced away.
     Returns (y_diag (BC, L, H, P), states (BC, H, P, N)).
     """
     if interpret is None:
         interpret = default_interpret()
+    bc_blk = block_sizes("ssd", blocks)["bc_blk"]
     bc, l, h, p = x.shape
     g, n = b_mat.shape[2], b_mat.shape[3]
     rep = h // g
 
+    pbc = -bc % bc_blk
+    if pbc:
+        pad4 = ((0, pbc), (0, 0), (0, 0), (0, 0))
+        x = jnp.pad(x, pad4)
+        da_cs = jnp.pad(da_cs, ((0, pbc), (0, 0), (0, 0)))
+        b_mat = jnp.pad(b_mat, pad4)
+        c_mat = jnp.pad(c_mat, pad4)
+    gbc = (bc + pbc) // bc_blk
+
     y, st = pl.pallas_call(
-        _ssd_kernel,
-        grid=(bc, h),
+        functools.partial(_ssd_kernel, bc_blk=bc_blk),
+        grid=(gbc, h),
         in_specs=[
-            pl.BlockSpec((1, l, 1, p), lambda i, j: (i, 0, j, 0)),
-            pl.BlockSpec((1, l, 1), lambda i, j: (i, 0, j)),
-            pl.BlockSpec((1, l, 1, n), lambda i, j, rep=rep: (i, 0, j // rep, 0)),
-            pl.BlockSpec((1, l, 1, n), lambda i, j, rep=rep: (i, 0, j // rep, 0)),
+            pl.BlockSpec((bc_blk, l, 1, p), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((bc_blk, l, 1), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((bc_blk, l, 1, n),
+                         lambda i, j, rep=rep: (i, 0, j // rep, 0)),
+            pl.BlockSpec((bc_blk, l, 1, n),
+                         lambda i, j, rep=rep: (i, 0, j // rep, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, l, 1, p), lambda i, j: (i, 0, j, 0)),
-            pl.BlockSpec((1, 1, p, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((bc_blk, l, 1, p), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((bc_blk, 1, p, n), lambda i, j: (i, j, 0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((bc, l, h, p), jnp.float32),
-            jax.ShapeDtypeStruct((bc, h, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((bc + pbc, l, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bc + pbc, h, p, n), jnp.float32),
         ],
         interpret=interpret,
     )(x.astype(jnp.float32), da_cs.astype(jnp.float32),
       b_mat.astype(jnp.float32), c_mat.astype(jnp.float32))
-    return y, st
+    return y[:bc], st[:bc]

@@ -42,6 +42,14 @@ def _cmd_build(args: argparse.Namespace) -> int:
         spec = RequestSpec.from_dict(json.loads(raw))
         spec.validate()
         specs.append(spec)
+    if args.tuning_dir:
+        # Installed before pack(): the bundled engines compile with the
+        # tuned tile shapes, and pack() copies the cache entries into
+        # the bundle's tunings/ so a replica resolves the same keys.
+        from repro.kernels import autotune
+        cache = autotune.TuningCache(args.tuning_dir)
+        autotune.install_tuning_cache(cache)
+        _log.info("tuning cache installed: %s", cache.stats())
     ckpts = {specs[0].config: args.ckpt} if args.ckpt else None
     out = pack(specs, out=args.out, max_batch=args.max_batch,
                ckpts=ckpts, tar=args.tar, out_dir=args.out_dir,
@@ -101,6 +109,11 @@ def main(argv=None) -> None:
                         "(match the service's --max-batch)")
     b.add_argument("--ckpt", default=None,
                    help="checkpoint for the first spec's config")
+    b.add_argument("--tuning-dir", default=None, metavar="DIR",
+                   help="install this kernel TuningCache (built by "
+                        "repro.launch.tune) before packing: bundled "
+                        "engines compile the tuned tile shapes and the "
+                        "cache entries ship in the bundle's tunings/")
     b.add_argument("--out", default=None,
                    help="exact output path (default: content-addressed "
                         "name under --out-dir)")

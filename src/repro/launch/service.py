@@ -99,6 +99,17 @@ def main(argv=None) -> None:
     ap.add_argument("--persist-dir", default=None,
                     help="persist compiled chunk programs (jax.export "
                          "blobs + XLA compilation cache) here")
+    ap.add_argument("--tuning-dir", default=None, metavar="DIR",
+                    help="install this kernel TuningCache (built by "
+                         "repro.launch.tune): every engine resolves the "
+                         "tuned Pallas tile shapes, which ride the "
+                         "engine/executable keys (docs/kernels.md"
+                         "#autotuning)")
+    ap.add_argument("--tune", action="store_true",
+                    help="sweep the preloaded config's hot-op tile "
+                         "shapes into --tuning-dir before warmup "
+                         "(cache hits skip the sweep; implies "
+                         "--tuning-dir .tuning when unset)")
     ap.add_argument("--bundle", default=None, metavar="PATH",
                     help="boot from a warm-start bundle (dir or .tar "
                          "built by repro.launch.bundle): verify, "
@@ -153,6 +164,12 @@ def main(argv=None) -> None:
     if args.bundle and args.persist_dir:
         ap.error("--bundle and --persist-dir are mutually exclusive: a "
                  "bundle replica serves a readonly executable set")
+    if args.bundle and (args.tune or args.tuning_dir):
+        ap.error("--bundle and --tune/--tuning-dir are mutually "
+                 "exclusive: a bundle replica resolves the tunings "
+                 "packed in the bundle")
+    if args.tune and not args.tuning_dir:
+        args.tuning_dir = ".tuning"
 
     if args.persist_dir:
         _enable_xla_cache(args.persist_dir)
@@ -191,6 +208,28 @@ def main(argv=None) -> None:
                      "replica to production)", args.fault)
 
     pool = ModelPool({args.config[0]: args.ckpt} if args.ckpt else None)
+
+    if args.tuning_dir:
+        # Install before any engine exists: RequestSpec.engine_config()
+        # resolves the active cache, so warmup below already compiles
+        # the tuned tile shapes (and the tuned engine/executable keys).
+        from repro.kernels import autotune
+        cache = autotune.TuningCache(args.tuning_dir)
+        autotune.install_tuning_cache(cache)
+        if args.tune:
+            model = pool.get(args.config[0]).model
+            sweeps = 0
+            for op, shapes in autotune.model_op_shapes(model).items():
+                entry = autotune.sweep_op(op, shapes, cache=cache)
+                sweeps += entry["swept"]
+                _log.info("tune %s %s: %s (default_us=%.1f best_us=%.1f)",
+                          op, "x".join(str(v) for v in shapes),
+                          autotune.format_blocks(op, entry["dims"]),
+                          entry["default_us"], entry["best_us"])
+            _log.info("tuning ready: sweeps=%d %s", sweeps, cache.stats())
+        else:
+            _log.info("tuning cache installed: %s", cache.stats())
+
     sched_kwargs = dict(
         max_concurrency=args.max_concurrency, queue_size=args.queue_size,
         max_batch=args.max_batch, batch_window_ms=args.batch_window_ms,

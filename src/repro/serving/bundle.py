@@ -248,6 +248,23 @@ def pack(specs: list[RequestSpec], out: str | None = None,
             plan_files.append(f"plans/{name}")
         _log(f"exported {len(plan_files)} geometry plan(s)")
 
+        # Pack the active tuning cache: the executables above were
+        # compiled for whatever BlockConfig the installed tunings
+        # resolved into engine_config, so the booting replica must
+        # resolve the *same* tunings to derive matching keys -- shipping
+        # the entries is what makes that zero-sweep.
+        from repro.kernels import autotune
+        tuning_files = []
+        active = autotune.active_tuning_cache()
+        if active is not None:
+            tunings_dir = os.path.join(staging, "tunings")
+            os.makedirs(tunings_dir, exist_ok=True)
+            for name, _entry in active.entries():
+                shutil.copyfile(os.path.join(active.root, name),
+                                os.path.join(tunings_dir, name))
+                tuning_files.append(f"tunings/{name}")
+            _log(f"packed {len(tuning_files)} kernel tuning(s)")
+
         files = {}
         for dirpath, dirnames, filenames in os.walk(staging):
             dirnames.sort()
@@ -262,6 +279,7 @@ def pack(specs: list[RequestSpec], out: str | None = None,
             "environment": environment(),
             "engines": engines,
             "plans": plan_files,
+            "tunings": tuning_files,
             "files": files,
         }
         bundle_id = hashlib.sha256(_canonical(manifest)).hexdigest()
@@ -420,6 +438,23 @@ class WarmStartBundle:
             n += 1
         return n
 
+    def install_tunings(self) -> int:
+        """Install the packed kernel tunings as the process-active
+        ``TuningCache`` (``repro.kernels.autotune``), so every engine
+        key this replica derives resolves the same ``BlockConfig`` the
+        bundle's executables were compiled for -- with zero sweeps.
+        Bundles without tunings uninstall any active cache (the packed
+        executables were built with default tiles; a leftover local
+        cache would derive mismatching keys).  Returns the entry count.
+        """
+        from repro.kernels import autotune
+        packed = self.manifest.get("tunings", [])
+        if not packed:
+            autotune.install_tuning_cache(None)
+            return 0
+        autotune.install_tuning_cache(os.path.join(self.root, "tunings"))
+        return len(packed)
+
     def enable_xla_cache(self) -> None:
         """Point JAX's persistent compilation cache at the bundle's
         ``xla/`` directory, so importing the StableHLO blobs skips the
@@ -487,6 +522,7 @@ def boot_scheduler(bundle: "WarmStartBundle | str", pool=None,
     bundle.verify()
     bundle.enable_xla_cache()
     bundle.install_plans()
+    bundle.install_tunings()
     from repro.serving.cache import ExecutableCache
     from repro.serving.scheduler import ForecastScheduler, ModelPool
     scheduler = ForecastScheduler(

@@ -122,9 +122,16 @@ class RequestSpec:
         # GB-scale and must stay jit arguments (same policy as the
         # serve CLI).
         from repro.inference import EngineConfig
+        from repro.kernels import autotune
         from repro.kernels.config import KernelConfig
         kernels = (None if self.kernels == "auto"
                    else KernelConfig(sht=self.kernels, disco=self.kernels))
+        # Installed tunings (repro.kernels.autotune.install_tuning_cache)
+        # resolve here -- upstream of engine_key/batch_key and the AOT
+        # executable token, so a tuned engine can never collide with the
+        # default-tile one.  With no cache installed this is a no-op and
+        # keys stay bit-identical to the untuned build.
+        kernels = autotune.resolve_kernel_config(kernels)
         return EngineConfig(members=self.members,
                             lead_chunk=self.lead_chunk,
                             compute_dtype=self.precision,

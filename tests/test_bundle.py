@@ -286,3 +286,54 @@ class TestServiceIntegration:
             server.shutdown()
             server.server_close()
             t.join(timeout=5)
+
+
+class TestBundleTunings:
+    """Tunings ride the bundle: a replica booted from a bundle packed
+    under an installed ``TuningCache`` resolves the same ``BlockConfig``
+    the executables were compiled for -- zero sweeps, zero compiles."""
+
+    def test_pack_boot_roundtrip_zero_sweeps(self, tmp_path):
+        from repro.kernels import autotune
+        from repro.kernels.config import BLOCK_DEFAULTS
+
+        # a real cache entry with a non-default winner, built hermetically
+        # (fake timer: the sweep never runs a kernel)
+        cache = autotune.TuningCache(str(tmp_path / "tuning"))
+        def timer(dims, fn):
+            return (9.0 if dims == BLOCK_DEFAULTS["crps"] else 5.0) * 1e-6
+        autotune.sweep_op("crps", (4, 300), interpret=True, cache=cache,
+                          timer=timer)
+        assert cache.best_for("crps") is not None
+
+        spec = RequestSpec(config="smoke", members=2, lead_steps=1,
+                           lead_chunk=1, scored=True)
+        prev = autotune.install_tuning_cache(cache)
+        try:
+            out = pack([spec], out=str(tmp_path / "tuned-bundle"))
+            manifest = WarmStartBundle.load(out).manifest
+            assert manifest["tunings"], "pack dropped the active tunings"
+            # fresh replica: no local cache -- the bundle is the source
+            autotune.install_tuning_cache(None)
+            sched = boot_scheduler(out, max_concurrency=1)
+            try:
+                active = autotune.active_tuning_cache()
+                assert active is not None
+                assert active.root.startswith(str(out))
+                # zero sweeps: the packed entry is a cache hit
+                resweep = autotune.sweep_op(
+                    "crps", (4, 300), interpret=True, cache=active,
+                    timer=timer)
+                assert resweep["swept"] is False
+                # zero compiles: the tuned engine key matches the
+                # bundle's executables exactly
+                res = sched.submit(spec).result()
+                assert res.timing["compile_s"] == 0.0
+                eng = sched._engines.snapshot()[spec.engine_key()]
+                assert eng.dispatch_counts["jit"] == 0
+                kc = spec.engine_config().kernels
+                assert kc is not None and kc.blocks_for("crps") is not None
+            finally:
+                sched.close()
+        finally:
+            autotune.install_tuning_cache(prev)

@@ -73,7 +73,9 @@ class TestKernelConfig:
         # nests inside FCN3Config/EngineConfig and cache keys
         assert hash(KernelConfig()) == hash(KernelConfig())
         assert KernelConfig() != PALLAS
-        assert dataclasses.astuple(PALLAS) == ("pallas", "pallas", True)
+        # blocks (empty by default) ride the tuple, so tuned configs
+        # derive distinct engine/executable keys automatically
+        assert dataclasses.astuple(PALLAS) == ("pallas", "pallas", True, ())
 
 
 class TestSplitPsiBand:
